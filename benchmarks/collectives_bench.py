@@ -1,0 +1,67 @@
+"""JAX-side collective microbenchmark.
+
+Two parts:
+  * analytic wire bytes per algorithm (the §6.4 switchover on the wire);
+  * wall-clock of our shard_map collectives on 8 fake CPU devices,
+    executed in a subprocess (the parent process must keep 1 device).
+"""
+import os
+import subprocess
+import sys
+
+from repro.core import collectives as coll
+
+_CHILD = r"""
+import os, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import collectives as coll
+
+mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+Z = 1 << 22
+x = jnp.ones((8, Z), jnp.float32)
+for alg in ["ring", "rhd", "fixed_tree", "two_level", "psum"]:
+    fn = jax.jit(jax.shard_map(
+        lambda v, a=alg: coll.allreduce(v[0], ("pod", "data"), algorithm=a),
+        in_specs=(P(("pod", "data"), None),), out_specs=P(None),
+        axis_names={"pod", "data"}, check_vma=False))
+    with jax.set_mesh(mesh):
+        xd = jax.device_put(x, NamedSharding(mesh, P(("pod", "data"), None)))
+        fn(xd).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            fn(xd).block_until_ready()
+        dt = (time.perf_counter() - t0) / 3
+    print(f"collectives.{alg}.Z16MiB.us_per_call,{dt*1e6:.0f},8dev_cpu")
+"""
+
+
+def run():
+    rows = []
+    z = 16 << 20
+    for alg in ["ring", "rhd", "fixed_tree", "two_level", "psum"]:
+        wb = coll.wire_bytes_per_rank(z, 16, 2, algorithm=alg)
+        rows.append((f"collectives.{alg}.wire_bytes_per_rank.Z16MiB",
+                     int(wb), f"ratio_to_Z={wb/z:.2f}"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    try:
+        out = subprocess.run([sys.executable, "-c", _CHILD],
+                             capture_output=True, text=True, timeout=600,
+                             env=env)
+        for line in out.stdout.splitlines():
+            if line.startswith("collectives."):
+                name, val, der = line.split(",")
+                rows.append((name, float(val), der))
+    except Exception as e:                              # pragma: no cover
+        rows.append(("collectives.wallclock.error", 0, repr(e)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,20 @@
+"""Fig. 7: single-buffer aggregation — bandwidth + memory vs subset size S."""
+from repro.perfmodel import switch_model as sm
+
+
+def run():
+    rows = []
+    p = sm.SwitchParams()
+    for z in [16 << 10, 128 << 10, 1 << 20, 8 << 20]:
+        for s in (1, p.cores_per_cluster):
+            pt = sm.model_design("single", z, p, S=s)
+            rows.append((f"fig07.single.Z={z>>10}KiB.S={s}.bw_tbps",
+                         round(pt.bandwidth_tbps, 3),
+                         f"inbuf={pt.input_buffer_bytes/2**20:.2f}MiB;"
+                         f"wm={pt.working_memory_bytes/2**10:.0f}KiB"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

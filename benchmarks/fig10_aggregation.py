@@ -1,0 +1,23 @@
+"""Fig. 10: modeled bandwidth + memory for the three designs vs data size."""
+from repro.perfmodel import switch_model as sm
+
+
+def run():
+    rows = []
+    for z in [16 << 10, 64 << 10, 128 << 10, 256 << 10, 512 << 10,
+              1 << 20, 4 << 20]:
+        for design, b in [("single", 1), ("multi", 2), ("multi", 4),
+                          ("tree", 1)]:
+            pt = sm.model_design(design, z, B=b)
+            name = design if design != "multi" else f"multi{b}"
+            rows.append((f"fig10.{name}.Z={z>>10}KiB.bw_tbps",
+                         round(pt.bandwidth_tbps, 3),
+                         f"mem={(pt.input_buffer_bytes + pt.working_memory_bytes)/2**20:.2f}MiB"))
+        sel = sm.select_design(z)
+        rows.append((f"fig10.selected.Z={z>>10}KiB", sel[0], f"B={sel[1]}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,28 @@
+"""Fig. 11: simulated switch bandwidth vs size & dtype, vs SwitchML/SHARP."""
+from repro.perfmodel import switch_model as sm
+from repro.perfmodel import switch_sim as ss
+
+
+def run():
+    rows = []
+    for z in [32 << 10, 128 << 10, 512 << 10, 1 << 20]:
+        for design, b in [("single", 1), ("multi", 4), ("tree", 1)]:
+            r = ss.simulate(design, z, B=b, P=64)
+            rows.append((f"fig11.{design}.Z={z>>10}KiB.bw_tbps",
+                         round(r.bandwidth_tbps, 3),
+                         f"vs_switchml={r.bandwidth_tbps/ss.SWITCHML_TBPS:.2f}x;"
+                         f"vs_sharp={r.bandwidth_tbps/ss.SHARP_TBPS:.2f}x"))
+    # dtype sweep at 1 MiB (elements aggregated per second)
+    for dt, eb in [("int32", 4), ("int16", 2), ("int8", 1), ("fp32", 4),
+                   ("fp16", 2)]:
+        r = ss.simulate("single", 1 << 20, P=64,
+                        cycles_per_byte=ss.CYCLES_PER_BYTE[dt])
+        telems = r.bandwidth_tbps / 8 / eb
+        rows.append((f"fig11.dtype.{dt}.Telem_per_s", round(telems, 3),
+                     f"bw={r.bandwidth_tbps:.2f}Tbps"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,17 @@
+"""Fig. 13: modeled sparse-allreduce bandwidth, hash vs array storage."""
+from repro.perfmodel import switch_model as sm
+
+
+def run():
+    rows = []
+    for d in [0.001, 0.01, 0.05, 0.1, 0.2]:
+        for storage in ("hash", "array"):
+            bw = sm.sparse_bandwidth_tbps(storage, d)
+            rows.append((f"fig13.{storage}.density={d}.bw_tbps",
+                         round(bw, 3), ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,22 @@
+"""Fig. 14: simulated sparse allreduce — bandwidth, memory, extra traffic."""
+from repro.perfmodel import switch_sim as ss
+
+
+def run():
+    rows = []
+    z = 1 << 20
+    for d in [0.001, 0.01, 0.1, 0.2]:
+        for storage in ("hash", "array"):
+            r = ss.simulate("single", z, P=64, sparse_density=d,
+                            sparse_storage=storage)
+            extra = r.extra_traffic_bytes / (z * 64)
+            rows.append((f"fig14.{storage}.density={d}.bw_tbps",
+                         round(r.bandwidth_tbps, 3),
+                         f"mem_block={r.max_working_memory_bytes>>10}KiB;"
+                         f"extra_traffic={extra:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

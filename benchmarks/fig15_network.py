@@ -1,0 +1,25 @@
+"""Fig. 15: 64-node fat-tree — time + traffic for the four allreduces."""
+from repro.perfmodel import network_sim as ns
+
+
+def run():
+    rows = []
+    out = ns.figure15()
+    ring = out["host_ring"]
+    for name, o in out.items():
+        rows.append((f"fig15.{name}.time_ms", round(o.time_us / 1e3, 2),
+                     f"traffic={o.network_bytes/2**30:.2f}GiB;"
+                     f"speedup_vs_ring={ring.time_us/o.time_us:.2f}x"))
+    f, s, d = out["flare_sparse"], out["sparcml"], out["innet_dense"]
+    rows.append(("fig15.flare_sparse.vs_sparcml",
+                 round(s.time_us / f.time_us, 2),
+                 f"traffic_reduction={s.network_bytes/f.network_bytes:.1f}x"))
+    rows.append(("fig15.flare_sparse.vs_innet_dense",
+                 round(d.time_us / f.time_us, 2),
+                 f"traffic_reduction={d.network_bytes/f.network_bytes:.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

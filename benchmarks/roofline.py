@@ -1,0 +1,67 @@
+"""§Roofline table generator: reads results/dryrun/*.json.
+
+Emits one row per (arch × shape × mesh): the three terms, the dominant
+one, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction
+(compute term / dominant term — how close the cell is to compute-bound).
+"""
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def load(mesh="16x16", tag=None):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, f"*.{mesh}*.json"))):
+        base = os.path.basename(f)[:-5].split(".")
+        has_tag = len(base) > 3
+        if (tag is None) != (not has_tag):
+            continue
+        if tag is not None and base[3] != tag:
+            continue
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def run():
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        for r in load(mesh):
+            t = r["roofline"]
+            mx = max(t["compute_s"], t["memory_s"], t["collective_s"])
+            frac = t["compute_s"] / mx if mx else 0.0
+            out.append((
+                f"roofline.{r['arch']}.{r['shape']}.{mesh}",
+                round(frac, 4),
+                f"dom={t['dominant']};compute={t['compute_s']:.4f}s;"
+                f"memory={t['memory_s']:.4f}s;"
+                f"collective={t['collective_s']:.4f}s;"
+                f"useful={r['useful_flops_ratio']:.2f}"))
+    return out
+
+
+def markdown_table(mesh="16x16", tag=None):
+    rows = load(mesh, tag)
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | roofline frac | useful FLOPs ratio |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        t = r["roofline"]
+        mx = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        frac = t["compute_s"] / mx if mx else 0.0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['dominant']} | {frac:.3f} | "
+            f"{r['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--markdown" in sys.argv:
+        print(markdown_table())
+    else:
+        for r in run():
+            print(",".join(map(str, r)))

@@ -1,0 +1,87 @@
+"""Gradient bucketing and staggered scheduling (paper §4, §5).
+
+The paper's hosts split the Z-element vector into reduction blocks and —
+with *staggered sending* — permute the order in which blocks are sent so
+that packets of the same block arrive spread out in time (δ_c grows) and
+never contend for the same aggregation buffer.
+
+The TPU analogue: the gradient pytree is packed into fixed-byte buckets
+(reduction blocks); each bucket's ring schedule starts at a
+bucket-dependent chunk offset (``stagger = bucket_index``), so concurrent
+buckets traverse the ring out of phase and no two buckets contend for the
+same link direction at the same step.  Bucketing also bounds working
+memory exactly like the paper's "number of in-flight blocks ≤ allocated
+aggregation buffers" rule (Little's-law sizing in §4.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """A reduction block: a contiguous pack of same-dtype gradient leaves."""
+
+    leaf_ids: tuple[int, ...]
+    sizes: tuple[int, ...]       # flattened element counts per leaf
+    dtype: Any
+    stagger: int                 # ring-phase offset (staggered sending)
+
+    @property
+    def num_elements(self) -> int:
+        return sum(self.sizes)
+
+    @property
+    def nbytes(self) -> int:
+        return self.num_elements * jnp.dtype(self.dtype).itemsize
+
+
+def build_buckets(leaves: Sequence[jax.Array | jax.ShapeDtypeStruct],
+                  bucket_bytes: int = 4 << 20,
+                  stagger: bool = True) -> list[Bucket]:
+    """Greedy same-dtype packing of leaves into ~``bucket_bytes`` blocks."""
+    by_dtype: dict[Any, list[int]] = {}
+    for i, leaf in enumerate(leaves):
+        by_dtype.setdefault(jnp.dtype(leaf.dtype).name, []).append(i)
+
+    buckets: list[Bucket] = []
+    for dtype_name, ids in sorted(by_dtype.items()):
+        dtype = jnp.dtype(dtype_name)
+        cur_ids: list[int] = []
+        cur_sizes: list[int] = []
+        cur_bytes = 0
+        for i in ids:
+            sz = int(np.prod(leaves[i].shape)) if leaves[i].shape else 1
+            nb = sz * dtype.itemsize
+            if cur_ids and cur_bytes + nb > bucket_bytes:
+                buckets.append(Bucket(tuple(cur_ids), tuple(cur_sizes),
+                                      dtype, len(buckets) if stagger else 0))
+                cur_ids, cur_sizes, cur_bytes = [], [], 0
+            cur_ids.append(i)
+            cur_sizes.append(sz)
+            cur_bytes += nb
+        if cur_ids:
+            buckets.append(Bucket(tuple(cur_ids), tuple(cur_sizes), dtype,
+                                  len(buckets) if stagger else 0))
+    return buckets
+
+
+def pack_bucket(leaves: Sequence[jax.Array], bucket: Bucket) -> jax.Array:
+    """Concatenate a bucket's leaves into one flat vector."""
+    return jnp.concatenate([leaves[i].reshape(-1) for i in bucket.leaf_ids])
+
+
+def unpack_bucket(flat: jax.Array, leaves: Sequence[jax.Array],
+                  bucket: Bucket) -> list[tuple[int, jax.Array]]:
+    """Split a reduced flat vector back into (leaf_id, array) pieces."""
+    out = []
+    off = 0
+    for i, sz in zip(bucket.leaf_ids, bucket.sizes):
+        out.append((i, flat[off:off + sz].reshape(leaves[i].shape)))
+        off += sz
+    return out

@@ -1,0 +1,118 @@
+"""Gradient transport compression (paper F1: custom data types).
+
+The paper's switch aggregates int8/int16/int32/fp16/fp32 elements and
+vectorizes sub-word types ("the HPUs ... can aggregate two int16 elements
+in a single cycle").  The TPU-native analogue is *quantized transport*:
+gradients are blockwise-quantized to int8 with a per-chunk fp32 scale,
+moved over the wire at 1/4 width, accumulated in fp32, and re-quantized
+for the broadcast leg.  Error feedback keeps the quantization bias out of
+the optimizer trajectory (standard for compressed allreduce).
+
+``quantized_allreduce`` implements the wire protocol with one
+``lax.all_to_all`` (the reduce-scatter leg: each rank receives everyone's
+copy of its chunk, int8) and one ``lax.all_gather`` (the broadcast leg,
+int8 again) — total wire bytes ≈ 2·Z/4 instead of 2·Z.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives as coll
+
+INT8_MAX = 127.0
+
+
+def quantize_int8(x: jax.Array, block: int = 256) -> tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8 quantization.
+
+    Returns ``(q, scales)`` with ``q`` int8 of x.shape (flat, padded by the
+    caller to a multiple of ``block``) and ``scales`` fp32 of shape
+    ``(x.size // block,)``.
+    """
+    n = x.shape[0]
+    if n % block:
+        raise ValueError(f"quantize_int8: len {n} % {block} != 0")
+    xb = x.reshape(n // block, block).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / INT8_MAX
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(xb / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q.reshape(n), scale[:, 0]
+
+
+def dequantize_int8(q: jax.Array, scales: jax.Array, block: int = 256,
+                    dtype=jnp.float32) -> jax.Array:
+    n = q.shape[0]
+    qb = q.reshape(n // block, block).astype(jnp.float32)
+    return (qb * scales[:, None]).reshape(n).astype(dtype)
+
+
+def quantized_allreduce(x: jax.Array, axis: str, *, block: int = 256,
+                        mean: bool = False) -> jax.Array:
+    """int8-transport allreduce over one manual mesh axis.
+
+    Wire protocol (Z elements, P ranks):
+      1. split into P chunks; quantize each chunk blockwise → int8 + scales;
+      2. ``all_to_all``: rank r receives every rank's int8 copy of chunk r
+         (Z/P · P = Z int8 bytes on the wire per rank);
+      3. dequantize to fp32, reduce locally (exact fp32 accumulation — the
+         switch's "FPU in every HPU");
+      4. re-quantize the reduced chunk, ``all_gather`` int8 + scales back
+         (Z int8 bytes);
+      5. dequantize.
+
+    The result carries quantization error from steps 1 and 4 only (one
+    round each way), matching the paper's transport-precision trade; use
+    ``error_feedback_step`` to fold the residual into the next iteration.
+    """
+    p = lax.axis_size(axis)
+    # pad so each of the P chunks is a multiple of `block`
+    xp, n = coll.pad_to_multiple(x, p * block)
+    chunk_len = xp.shape[0] // p
+
+    q, scales = quantize_int8(xp, block)                    # (Z,), (Z/block,)
+    q = q.reshape(p, chunk_len)
+    scales = scales.reshape(p, chunk_len // block)
+
+    # all_to_all: axis 0 is the chunk/destination index.
+    qt = lax.all_to_all(q, axis, split_axis=0, concat_axis=0, tiled=True)
+    st = lax.all_to_all(scales, axis, split_axis=0, concat_axis=0, tiled=True)
+    qt = qt.reshape(p, chunk_len)
+    st = st.reshape(p, chunk_len // block)
+
+    # local fp32 accumulation of everyone's copy of my chunk
+    deq = qt.astype(jnp.float32).reshape(p, chunk_len // block, block)
+    deq = deq * st[:, :, None]
+    red = jnp.sum(deq, axis=0).reshape(chunk_len)           # fp32
+    if mean:
+        red = red / p
+
+    # broadcast leg: requantize + all_gather
+    qr, sr = quantize_int8(red, block)
+    qg = lax.all_gather(qr, axis, tiled=True)               # (Z,) int8
+    sg = lax.all_gather(sr, axis, tiled=True)               # (Z/block,) fp32
+    out = dequantize_int8(qg, sg, block, dtype=x.dtype)
+    return out[:n]
+
+
+def error_feedback_step(grad: jax.Array, ef: jax.Array,
+                        transmit_fn) -> tuple[jax.Array, jax.Array]:
+    """One EF-compressed reduction step.
+
+    ``transmit_fn(v)`` must return the (lossy) reduced version of ``v``.
+    Returns ``(reduced, new_ef)`` where ``new_ef = v - local_decode(v)``.
+    For allreduce the residual is taken against the rank's own lossy
+    encoding, which is what accumulates into the next step.
+    """
+    v = grad + ef
+    reduced, local_decode = transmit_fn(v)
+    new_ef = v - local_decode
+    return reduced, new_ef
+
+
+def quantize_roundtrip(x: jax.Array, block: int = 256) -> jax.Array:
+    """What this rank's contribution looks like after encode+decode."""
+    xp, n = coll.pad_to_multiple(x, block)
+    q, s = quantize_int8(xp, block)
+    return dequantize_int8(q, s, block, dtype=x.dtype)[:n]

@@ -1,0 +1,143 @@
+"""The Flare gradient-reduction engine (the paper's technique, first-class).
+
+``GradReducer`` is the composable entry point that training loops call on
+an *unreduced* gradient pytree inside a manual ``shard_map`` region.  It:
+
+  1. packs leaves into reduction blocks (``core/bucketing.py``),
+  2. per block, selects the aggregation algorithm by size — the paper's
+     §6.4 switchover (tree < 128 KiB ≤ rhd < 512 KiB ≤ ring/two-level) —
+     or honours an explicit choice,
+  3. applies transport compression (int8 + error feedback) or top-k
+     sparsification (the §7 sparse allreduce) when configured,
+  4. staggers concurrent blocks' ring phases (staggered sending, §5),
+  5. guarantees bitwise reproducibility when asked (F3: fixed-tree only,
+     fp32 accumulation).
+
+Error-feedback state is functional: ``reduce(grads, state) -> (out,
+state)``; the trainer threads it through its optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bucketing, collectives as coll, compression, sparse
+
+
+@dataclasses.dataclass(frozen=True)
+class FlareConfig:
+    """Configuration of the in-network-style gradient reduction."""
+
+    axes: tuple[str, ...] = ("data",)   # (outer..., inner); inner = leaf level
+    algorithm: str = "auto"             # auto|ring|rhd|fixed_tree|two_level|psum
+    reproducible: bool = False          # F3: bitwise-deterministic reduction
+    compression: str = "none"           # none|int8  (F1 transport dtypes)
+    sparse_k_frac: float = 0.0          # >0 → §7 sparse allreduce
+    density_threshold: float = 0.25     # sparse densify-on-overflow point
+    bucket_bytes: int = 4 << 20
+    stagger: bool = True                # §5 staggered sending
+    mean: bool = False                  # divide by world size after reduce
+
+    def __post_init__(self):
+        if self.reproducible and self.compression != "none":
+            raise ValueError("reproducible mode is incompatible with lossy "
+                             "compression")
+        if self.reproducible and self.sparse_k_frac > 0:
+            raise ValueError("reproducible mode is incompatible with "
+                             "sparsification")
+        if self.compression not in ("none", "int8"):
+            raise ValueError(f"unknown compression {self.compression!r}")
+
+
+class GradReducer:
+    """Reduces a gradient pytree with the configured Flare algorithm."""
+
+    def __init__(self, config: FlareConfig):
+        self.config = config
+
+    # -- error-feedback state ------------------------------------------------
+    @property
+    def needs_state(self) -> bool:
+        c = self.config
+        return c.compression != "none" or c.sparse_k_frac > 0
+
+    def init_state(self, grads: Any) -> Any:
+        """Zero EF residuals shaped like the gradient pytree (or None)."""
+        if not self.needs_state:
+            return None
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, g.dtype), grads)
+
+    # -- the reduction -------------------------------------------------------
+    def __call__(self, grads: Any, state: Any = None) -> tuple[Any, Any]:
+        c = self.config
+        leaves, treedef = jax.tree.flatten(grads)
+        ef_leaves = (jax.tree.flatten(state)[0] if state is not None
+                     else [None] * len(leaves))
+        buckets = bucketing.build_buckets(leaves, c.bucket_bytes, c.stagger)
+
+        out_leaves: list[jax.Array | None] = [None] * len(leaves)
+        new_ef: list[jax.Array | None] = [None] * len(leaves)
+        world = 1  # resolved lazily inside reduce via axis sizes
+
+        for b in buckets:
+            flat = bucketing.pack_bucket(leaves, b)
+            ef_flat = (bucketing.pack_bucket(ef_leaves, b)
+                       if self.needs_state else None)
+            reduced, ef_out = self._reduce_block(flat, ef_flat, b)
+            for i, piece in bucketing.unpack_bucket(reduced, leaves, b):
+                out_leaves[i] = piece
+            if ef_out is not None:
+                for i, piece in bucketing.unpack_bucket(ef_out, leaves, b):
+                    new_ef[i] = piece
+
+        out = jax.tree.unflatten(treedef, out_leaves)
+        state_out = (jax.tree.unflatten(treedef, new_ef)
+                     if self.needs_state else None)
+        return out, state_out
+
+    def _world(self) -> int:
+        w = 1
+        for ax in self.config.axes:
+            w *= jax.lax.axis_size(ax)
+        return w
+
+    def _reduce_block(self, flat: jax.Array, ef: jax.Array | None,
+                      bucket: bucketing.Bucket,
+                      ) -> tuple[jax.Array, jax.Array | None]:
+        c = self.config
+        stagger = bucket.stagger if c.stagger else 0
+        *outer_axes, inner = c.axes
+
+        if c.sparse_k_frac > 0 and jnp.issubdtype(flat.dtype, jnp.floating):
+            v = flat + ef
+            k = max(1, int(c.sparse_k_frac * v.shape[0]))
+            if outer_axes:
+                reduced, mine = sparse.sparse_allreduce_two_level(
+                    v, inner, outer_axes[-1], k,
+                    density_threshold=c.density_threshold)
+            else:
+                reduced, mine = sparse.sparse_allreduce(
+                    v, inner, k, density_threshold=c.density_threshold)
+            if c.mean:
+                reduced = reduced / self._world()
+            return reduced, v - mine
+
+        if c.compression == "int8" and jnp.issubdtype(flat.dtype, jnp.floating):
+            v = flat + ef
+            reduced = compression.quantized_allreduce(v, inner)
+            for ax in outer_axes:
+                reduced = compression.quantized_allreduce(reduced, ax)
+            if c.mean:
+                reduced = reduced / self._world()
+            return reduced, v - compression.quantize_roundtrip(v)
+
+        # dense, lossless path
+        reduced = coll.allreduce(
+            flat, tuple(c.axes), algorithm=c.algorithm,
+            reproducible=c.reproducible, stagger=stagger)
+        if c.mean:
+            reduced = reduced / self._world()
+        return reduced, (jnp.zeros_like(ef) if ef is not None else None)

@@ -1,0 +1,187 @@
+"""In-network *sparse* allreduce (paper §7) — TPU-native adaptation.
+
+The paper's switches aggregate (index, value) pairs: leaf switches store
+partial aggregates in a hash table (+ spill buffer), the root switch in a
+dense array, because sparse data *densifies* while traveling toward the
+root of the reduction tree.
+
+TPU adaptation (recorded in DESIGN.md §8): data-dependent hashing is
+hostile to the vector units, so partial aggregates are kept as *sorted
+coordinate lists* merged with vectorized sort/segment-combine logic —
+identical traffic semantics — and the leaf→root densification becomes
+**densify-on-overflow**: the recursive-doubling merge keeps (idx, val)
+lists while the worst-case nnz fits under ``density_threshold · Z``; the
+first step that would overflow converts to a dense accumulator (the
+paper's array storage at the root) and finishes with dense fixed-tree
+combines.  The whole schedule is static, so it jits cleanly.
+
+Block bookkeeping from the paper (shard counters for split blocks, empty
+block markers) is transport-level reliability machinery with no XLA
+analogue — XLA collectives are reliable and complete — and lives in the
+discrete-event simulator (``perfmodel/switch_sim.py``) where the paper's
+quantitative claims are validated.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives as coll
+
+#: Sentinel index marking an empty slot; sorts after every valid index.
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def topk_sparsify(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Magnitude top-k: returns (values[k], indices[k]) sorted by index.
+
+    This is the host-side sparsification step that feeds the paper's F2
+    pipeline (e.g. top-0.1%/1% gradient sparsification, SparCML-style).
+    """
+    if k > x.shape[0]:
+        raise ValueError(f"k={k} > len(x)={x.shape[0]}")
+    _, idx = lax.top_k(jnp.abs(x), k)
+    idx = idx.astype(jnp.int32)
+    order = jnp.argsort(idx)
+    idx = idx[order]
+    val = x[idx]
+    return val, idx
+
+
+def scatter_dense(val: jax.Array, idx: jax.Array, size: int,
+                  dtype=None) -> jax.Array:
+    """Scatter a coordinate list into a dense vector (sentinels dropped)."""
+    dtype = dtype or val.dtype
+    # mode="drop" only drops out-of-range; negatives would wrap Python-style.
+    idx = jnp.where(idx < 0, SENTINEL, idx)
+    out = jnp.zeros((size,), dtype)
+    return out.at[idx].add(val.astype(dtype), mode="drop",
+                           indices_are_sorted=True, unique_indices=False)
+
+
+def merge_coordinate_lists(idx_a: jax.Array, val_a: jax.Array,
+                           idx_b: jax.Array, val_b: jax.Array,
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Merge two index-sorted, index-unique coordinate lists.
+
+    Output capacity is ``len(a) + len(b)``; duplicate indices are combined
+    by addition; empty slots hold ``SENTINEL``.  This is the vectorized
+    analogue of the paper's hash-table insert-or-accumulate handler; the
+    two-pointer merge becomes sort + adjacent-duplicate combine, which maps
+    onto the VPU instead of data-dependent branches.
+    """
+    idx = jnp.concatenate([idx_a, idx_b])
+    val = jnp.concatenate([val_a, val_b])
+    order = jnp.argsort(idx)
+    idx = idx[order]
+    val = val[order]
+    # each input list is unique → at most 2 copies of any index, adjacent
+    # after the sort.  Fold entry i+1 into entry i, then invalidate i+1.
+    dup_next = jnp.concatenate([idx[1:] == idx[:-1],
+                                jnp.zeros((1,), bool)])
+    folded = val + jnp.where(dup_next, jnp.roll(val, -1), 0).astype(val.dtype)
+    is_dup = jnp.concatenate([jnp.zeros((1,), bool), idx[1:] == idx[:-1]])
+    idx = jnp.where(is_dup, SENTINEL, idx)
+    val = jnp.where(is_dup, 0, folded)
+    # compact: push sentinels to the tail, preserving index order
+    order = jnp.argsort(idx)
+    return idx[order], val[order]
+
+
+def densify_step(nnz_cap: int, size: int, density_threshold: float) -> bool:
+    """Would a merge producing ``nnz_cap`` entries overflow sparse storage?"""
+    return nnz_cap >= density_threshold * size or nnz_cap >= size
+
+
+def sparse_allreduce(x: jax.Array, axis: str, k: int, *,
+                     density_threshold: float = 0.25,
+                     mean: bool = False,
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Top-k sparse allreduce over one manual mesh axis.
+
+    Each rank contributes its top-``k`` (by magnitude) elements of the
+    Z-element vector ``x``.  Returns ``(reduced_dense, my_contribution)``
+    where ``reduced_dense[i] = Σ_r contribution_r[i]`` and
+    ``my_contribution`` is this rank's decoded (sparsified) vector — the
+    caller subtracts it from ``x`` to build the error-feedback residual.
+
+    Wire schedule (recursive doubling over P ranks, log2 P steps): while
+    sparse, step s exchanges ≤ k·2^s (idx, val) pairs; once the worst-case
+    merged nnz crosses ``density_threshold · Z`` the state densifies and
+    the remaining steps exchange dense vectors — exactly the paper's
+    hash-at-the-leaves / array-at-the-root split, with the crossover depth
+    chosen statically from (k, Z, threshold).
+    """
+    p = lax.axis_size(axis)
+    if not (p > 0 and (p & (p - 1)) == 0):
+        raise ValueError(f"sparse_allreduce requires power-of-two P, got {p}")
+    size = x.shape[0]
+    steps = p.bit_length() - 1
+
+    val, idx = topk_sparsify(x, k)
+    mine = scatter_dense(val, idx, size, dtype=x.dtype)
+
+    dense: jax.Array | None = None
+    cap = k
+    for s in range(steps):
+        d = 1 << s
+        perm = [(i, i ^ d) for i in range(p)]
+        if dense is None and densify_step(cap * 2, size, density_threshold):
+            dense = scatter_dense(val, idx, size, dtype=jnp.float32)
+        if dense is None:
+            idx_r = lax.ppermute(idx, axis, perm)
+            val_r = lax.ppermute(val, axis, perm)
+            idx, val = merge_coordinate_lists(idx, val, idx_r, val_r)
+            cap *= 2
+        else:
+            recv = lax.ppermute(dense, axis, perm)
+            dense = dense + recv
+    if dense is None:
+        dense = scatter_dense(val, idx, size, dtype=jnp.float32)
+    if mean:
+        dense = dense / p
+    return dense.astype(x.dtype), mine
+
+
+def sparse_allreduce_two_level(x: jax.Array, inner_axis: str, outer_axis: str,
+                               k: int, *, density_threshold: float = 0.25,
+                               mean: bool = False,
+                               ) -> tuple[jax.Array, jax.Array]:
+    """Multi-pod sparse allreduce: sparse tree within the pod, dense across.
+
+    Mirrors the paper's observation that data is densest at the root: the
+    intra-pod merge runs the sparse schedule; the inter-pod exchange is
+    always dense (the root switch's array storage), then the result is
+    already replicated within each pod.
+    """
+    reduced, mine = sparse_allreduce(x, inner_axis, k,
+                                     density_threshold=density_threshold)
+    reduced = coll.allreduce_rhd(reduced, outer_axis)
+    if mean:
+        total = lax.axis_size(inner_axis) * lax.axis_size(outer_axis)
+        reduced = reduced / total
+    return reduced, mine
+
+
+def expected_sparse_wire_bytes(z_elems: int, k: int, p: int, *,
+                               density_threshold: float = 0.25,
+                               elem_bytes: int = 4,
+                               idx_bytes: int = 4) -> float:
+    """Analytic wire bytes per rank for the sparse schedule (roofline aid)."""
+    steps = int(math.log2(p))
+    total = 0.0
+    cap = k
+    densified = False
+    for s in range(steps):
+        if not densified and densify_step(cap * 2, z_elems, density_threshold):
+            densified = True
+        if densified:
+            total += z_elems * elem_bytes
+        else:
+            total += cap * (elem_bytes + idx_bytes)
+            cap *= 2
+    return total

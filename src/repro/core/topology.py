@@ -1,0 +1,226 @@
+"""Reduction-tree topology and the Flare "network manager".
+
+The paper (§4) describes a *network manager* that, for each allreduce:
+  1. computes a reduction tree over the switches (leaves = hosts,
+     intermediate nodes = switches),
+  2. installs packet handlers on every switch of the tree,
+  3. records per-switch child/parent ports,
+  4. partitions switch memory statically across a maximum number of
+     concurrent allreduces, and
+  5. on failure / resource exhaustion recomputes a tree excluding the
+     offending switch (or falls back to host-based allreduce).
+
+On a TPU pod there are no programmable switches: the chips themselves are
+the only programmable element on a packet's path.  The reduction tree
+therefore maps onto *mesh axes*: intra-pod aggregation happens over the
+``data`` axis (leaf switch level), inter-pod aggregation over the ``pod``
+axis (root switch level).  This module keeps the tree/bookkeeping logic —
+which is pure Python control-plane code in the paper as well — and is used
+by the collective engine (``core/engine.py``), the fault-tolerance layer
+(``ft/coordinator.py``) and the switch simulators (``perfmodel/``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeNode:
+    """A node of a reduction tree (a switch, or a host at the leaves)."""
+
+    node_id: int
+    level: int                      # 0 = hosts, increasing toward the root
+    children: tuple[int, ...]       # node_ids one level down
+    parent: int | None              # node_id one level up (None at the root)
+
+    @property
+    def is_host(self) -> bool:
+        return self.level == 0
+
+    @property
+    def is_root(self) -> bool:
+        return self.parent is None
+
+
+@dataclasses.dataclass(frozen=True)
+class ReductionTree:
+    """A radix-``r`` reduction tree over ``num_hosts`` hosts.
+
+    Nodes are stored level by level; level 0 holds the hosts.  Switches are
+    shared between levels exactly as in the paper's Figure 1: each switch
+    aggregates the packets of its children and forwards one aggregated
+    packet to its parent; the root multicasts the result back down.
+    """
+
+    num_hosts: int
+    radix: int
+    nodes: tuple[TreeNode, ...]
+    levels: tuple[tuple[int, ...], ...]   # node_ids per level
+
+    @property
+    def depth(self) -> int:
+        return len(self.levels) - 1
+
+    @property
+    def root(self) -> TreeNode:
+        return self.nodes[self.levels[-1][0]]
+
+    @property
+    def num_switches(self) -> int:
+        return len(self.nodes) - self.num_hosts
+
+    def switch_children_counts(self) -> list[int]:
+        """Per-switch expected packet count per block (the paper's ``P``)."""
+        return [len(self.nodes[i].children)
+                for lvl in self.levels[1:] for i in lvl]
+
+    def wire_bytes_per_host(self, z_bytes: int) -> int:
+        """Bytes each host puts on the wire for a Z-byte allreduce.
+
+        In-network tree: each host sends its vector once up (Z) and
+        receives it once down (Z) — the paper's headline 2x reduction over
+        the ring allreduce's ~2Z *sent per host*.
+        """
+        return z_bytes
+
+    def total_network_bytes(self, z_bytes: int) -> int:
+        """Total bytes crossing links, up + down the whole tree."""
+        # Every edge of the tree carries Z up and Z down.
+        num_edges = sum(1 for n in self.nodes if n.parent is not None)
+        return 2 * num_edges * z_bytes
+
+
+def build_tree(num_hosts: int, radix: int) -> ReductionTree:
+    """Build a complete radix-``radix`` reduction tree over the hosts."""
+    if num_hosts < 1:
+        raise ValueError("num_hosts must be >= 1")
+    if radix < 2:
+        raise ValueError("radix must be >= 2")
+
+    nodes: list[TreeNode] = []
+    levels: list[list[int]] = []
+
+    current = list(range(num_hosts))
+    for nid in current:
+        nodes.append(TreeNode(node_id=nid, level=0, children=(), parent=None))
+    levels.append(list(current))
+
+    level = 0
+    while len(current) > 1:
+        level += 1
+        parents: list[int] = []
+        for i in range(0, len(current), radix):
+            group = current[i:i + radix]
+            pid = len(nodes)
+            nodes.append(TreeNode(node_id=pid, level=level,
+                                  children=tuple(group), parent=None))
+            for cid in group:
+                c = nodes[cid]
+                nodes[cid] = dataclasses.replace(c, parent=pid)
+            parents.append(pid)
+        levels.append(parents)
+        current = parents
+
+    return ReductionTree(num_hosts=num_hosts, radix=radix,
+                         nodes=tuple(nodes),
+                         levels=tuple(tuple(l) for l in levels))
+
+
+def rebuild_excluding(tree: ReductionTree,
+                      failed_hosts: Sequence[int]) -> ReductionTree:
+    """Elastic re-mesh: recompute the tree excluding failed hosts.
+
+    This is the paper's "the network manager can try to recompute a
+    different reduction tree excluding that switch".  Host ids are
+    re-numbered densely; the caller is responsible for mapping old ids to
+    new ids (``ft/coordinator.py`` keeps that mapping).
+    """
+    failed = set(failed_hosts)
+    survivors = [h for h in range(tree.num_hosts) if h not in failed]
+    if not survivors:
+        raise ValueError("all hosts failed; no tree to rebuild")
+    return build_tree(len(survivors), tree.radix)
+
+
+# ---------------------------------------------------------------------------
+# Network manager: per-switch memory partitioning and admission control (§4).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AllreduceLease:
+    """Resources granted to one live allreduce on the tree."""
+
+    allreduce_id: int
+    tree: ReductionTree
+    buffers_per_switch: int         # aggregation buffers (working memory)
+    packet_bytes: int               # N-element packet payload size
+
+
+class NetworkManager:
+    """Control-plane bookkeeping for concurrent in-network allreduces.
+
+    The paper statically partitions switch memory across a predefined
+    maximum number of allreduces and rejects (→ host-based fallback) any
+    request beyond that.  We reproduce exactly that admission logic; on the
+    TPU adaptation it governs how many concurrent bucketed reductions the
+    gradient engine keeps in flight (``core/engine.py``).
+    """
+
+    def __init__(self, l1_bytes_per_cluster: int = 1 << 20,
+                 clusters: int = 64,
+                 max_concurrent: int = 8,
+                 packet_bytes: int = 1024):
+        self.l1_bytes = l1_bytes_per_cluster * clusters
+        self.max_concurrent = max_concurrent
+        self.packet_bytes = packet_bytes
+        self._active: dict[int, AllreduceLease] = {}
+        self._next_id = 0
+
+    @property
+    def bytes_per_allreduce(self) -> int:
+        return self.l1_bytes // self.max_concurrent
+
+    def request(self, num_hosts: int, radix: int = 16) -> AllreduceLease | None:
+        """Admit a new allreduce, or return None → host-based fallback."""
+        if len(self._active) >= self.max_concurrent:
+            return None
+        tree = build_tree(num_hosts, radix)
+        lease = AllreduceLease(
+            allreduce_id=self._next_id,
+            tree=tree,
+            buffers_per_switch=self.bytes_per_allreduce // self.packet_bytes,
+            packet_bytes=self.packet_bytes,
+        )
+        self._active[lease.allreduce_id] = lease
+        self._next_id += 1
+        return lease
+
+    def release(self, allreduce_id: int) -> None:
+        self._active.pop(allreduce_id, None)
+
+    def active(self) -> list[AllreduceLease]:
+        return list(self._active.values())
+
+    def max_inflight_blocks(self, lease: AllreduceLease,
+                            buffers_per_block: int) -> int:
+        """Paper §4.3: hosts may keep at most R/M blocks in flight."""
+        return max(1, lease.buffers_per_switch // max(1, buffers_per_block))
+
+
+def mesh_axes_as_tree(axis_sizes: Sequence[int]) -> ReductionTree:
+    """Interpret nested mesh axes as a reduction tree.
+
+    ``axis_sizes = (data,)`` → one-level tree (single switch);
+    ``axis_sizes = (pod, data)`` → two levels: per-pod leaf switch over the
+    ``data`` axis, a root switch over the ``pod`` axis.  This is the shape
+    the two-level collective in ``core/collectives.py`` executes.
+    """
+    num_hosts = math.prod(axis_sizes)
+    if len(axis_sizes) == 1:
+        return build_tree(num_hosts, radix=axis_sizes[0])
+    # nested: radix per level = axis size, innermost first
+    inner = axis_sizes[-1]
+    tree = build_tree(num_hosts, radix=inner)
+    return tree

@@ -1,0 +1,4 @@
+"""Data pipeline: synthetic token streams + dry-run input specs."""
+from repro.data.pipeline import batch_structs, synthetic_batches
+
+__all__ = ["batch_structs", "synthetic_batches"]

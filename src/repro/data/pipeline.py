@@ -1,0 +1,94 @@
+"""Synthetic data pipeline.
+
+Two jobs:
+  * ``batch_structs`` — ShapeDtypeStruct stand-ins for every model input
+    of an (arch, shape-cell): weak-type-correct, shardable, no
+    allocation.  This is the dry-run's ``input_specs()``.
+  * ``synthetic_batches`` — a deterministic Zipf-ish token stream (plus
+    stub frame/patch embeddings for the audio/VLM frontends) for the
+    runnable examples and integration tests.  Generation is
+    numpy-on-host, double-buffered via a one-slot prefetch, sharded onto
+    the mesh with ``jax.device_put`` — the structure a real input
+    pipeline has, minus the filesystem.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ShapeCell
+from repro.models.base import ModelConfig
+
+
+def batch_structs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStructs for the model inputs of one (arch × shape) cell."""
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    elif cell.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    else:  # decode: one new token against a seq_len cache
+        batch = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.family == "audio" and cell.kind != "decode":
+        batch["enc_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_tokens, cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm" and cell.kind != "decode":
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def _make_batch(cfg: ModelConfig, b: int, s: int, rng: np.random.Generator,
+                train: bool) -> dict:
+    # Zipf-distributed tokens: realistic rank-frequency for LM loss curves
+    toks = rng.zipf(1.3, size=(b, s + 1)).astype(np.int64) % cfg.vocab
+    batch = {"tokens": toks[:, :s].astype(np.int32)}
+    if train:
+        batch["labels"] = toks[:, 1:].astype(np.int32)
+    if cfg.family == "audio":
+        batch["enc_frames"] = rng.standard_normal(
+            (b, cfg.encoder_tokens, cfg.d_model)).astype(np.float32) * 0.1
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = rng.standard_normal(
+            (b, cfg.vision_tokens, cfg.d_model)).astype(np.float32) * 0.1
+    return batch
+
+
+def synthetic_batches(cfg: ModelConfig, batch_size: int, seq_len: int, *,
+                      seed: int = 0, train: bool = True,
+                      shardings=None, prefetch: bool = True,
+                      ) -> Iterator[dict]:
+    """Endless deterministic batch stream with one-slot prefetch."""
+    rng = np.random.default_rng(seed)
+
+    def produce():
+        batch = _make_batch(cfg, batch_size, seq_len, rng, train)
+        if shardings is not None:
+            batch = {k: jax.device_put(v, shardings[k] if isinstance(
+                shardings, dict) else shardings) for k, v in batch.items()}
+        return batch
+
+    if not prefetch:
+        while True:
+            yield produce()
+
+    nxt: list = [None]
+
+    def fill():
+        nxt[0] = produce()
+
+    t = threading.Thread(target=fill)
+    t.start()
+    while True:
+        t.join()
+        cur = nxt[0]
+        t = threading.Thread(target=fill)
+        t.start()
+        yield cur

@@ -1,0 +1,5 @@
+"""Fault tolerance: sharded checkpoints, failure detection, elastic re-mesh."""
+from repro.ft.checkpoint import CheckpointManager
+from repro.ft.coordinator import Coordinator, RemeshPlan
+
+__all__ = ["CheckpointManager", "Coordinator", "RemeshPlan"]

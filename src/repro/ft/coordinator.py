@@ -1,0 +1,127 @@
+"""Failure detection and elastic re-meshing.
+
+The paper's network manager "can try to recompute a different reduction
+tree excluding that switch" (§4).  Our adaptation: a heartbeat failure
+detector over hosts plus a re-mesh planner that, given the surviving
+hosts, produces the largest power-of-two (data × model-preserving) mesh,
+the rank re-numbering, and the checkpoint step to resume from.  The
+reduction tree (``core.topology``) is recomputed for the new mesh — same
+control-plane motion as the paper, executed at job scope.
+
+SPMD collectives cannot change membership mid-step (an XLA program is
+compiled for a fixed mesh — recorded as a changed assumption in
+DESIGN.md §8), so recovery is checkpoint-restart onto the new mesh:
+detect → plan → restore (CheckpointManager reshards via device_put) →
+recompile.  Straggler mitigation below is in-step (bounded skew), not
+membership change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+from repro.core import topology
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    """Output of the elastic planner."""
+
+    survivors: tuple[int, ...]          # old host ids, sorted
+    new_data: int                       # new data-axis size
+    new_pod: int                        # new pod-axis size (1 = single pod)
+    model: int                          # model axis preserved
+    rank_map: dict[int, int]            # old host id → new rank
+    dropped_hosts: tuple[int, ...]      # healthy hosts idled by rounding
+    tree: topology.ReductionTree        # recomputed reduction tree
+
+    @property
+    def world(self) -> int:
+        return self.new_pod * self.new_data
+
+
+def plan_remesh(total_hosts: int, failed: set[int], *, model: int,
+                hosts_per_pod: int | None = None) -> RemeshPlan:
+    """Largest power-of-two data axis over the survivors.
+
+    The model axis is preserved (parameter shards must stay complete);
+    the data(+pod) axes shrink to the largest power of two ≤ survivors.
+    Collectives require power-of-two axis sizes (rhd/fixed-tree), and
+    batch re-chunking prefers it too.
+    """
+    survivors = tuple(sorted(h for h in range(total_hosts)
+                             if h not in failed))
+    if not survivors:
+        raise RuntimeError("no survivors; cannot re-mesh")
+    n = 1 << (len(survivors).bit_length() - 1)      # floor pow2
+    used = survivors[:n]
+    dropped = tuple(survivors[n:])
+    if hosts_per_pod and n > hosts_per_pod:
+        new_pod = n // hosts_per_pod
+        new_data = hosts_per_pod
+    else:
+        new_pod, new_data = 1, n
+    rank_map = {h: i for i, h in enumerate(used)}
+    tree = topology.build_tree(n, radix=max(2, new_data))
+    return RemeshPlan(survivors=tuple(used), new_data=new_data,
+                      new_pod=new_pod, model=model, rank_map=rank_map,
+                      dropped_hosts=dropped, tree=tree)
+
+
+class Coordinator:
+    """Heartbeat failure detector (pluggable clock for tests)."""
+
+    def __init__(self, hosts: int, *, timeout_s: float = 10.0,
+                 clock=time.monotonic):
+        self.hosts = hosts
+        self.timeout = timeout_s
+        self.clock = clock
+        t = clock()
+        self.last_seen = {h: t for h in range(hosts)}
+        self.failed: set[int] = set()
+
+    def heartbeat(self, host: int) -> None:
+        if host in self.failed:
+            return                      # rejoin requires explicit admit
+        self.last_seen[host] = self.clock()
+
+    def admit(self, host: int) -> None:
+        """Re-admit a recovered host (next re-mesh will include it)."""
+        self.failed.discard(host)
+        self.last_seen[host] = self.clock()
+
+    def check(self) -> set[int]:
+        """Mark hosts not seen within the timeout as failed."""
+        now = self.clock()
+        for h, t in self.last_seen.items():
+            if h not in self.failed and now - t > self.timeout:
+                self.failed.add(h)
+        return set(self.failed)
+
+    def plan(self, *, model: int, hosts_per_pod: int | None = None,
+             ) -> RemeshPlan:
+        return plan_remesh(self.hosts, self.failed, model=model,
+                           hosts_per_pod=hosts_per_pod)
+
+
+# ---------------------------------------------------------------------------
+# Straggler mitigation (in-step).
+# ---------------------------------------------------------------------------
+
+def straggler_report(step_times: dict[int, float], *,
+                     factor: float = 2.0) -> list[int]:
+    """Hosts slower than ``factor`` × median step time.
+
+    The schedule-level mitigation is built into the collectives:
+    staggered bucket phases (§5) decorrelate the waiting pattern, and the
+    two-level tree bounds how far one slow host's effect propagates (its
+    pod absorbs the skew before the inter-pod exchange).  True partial /
+    dynamic-membership collectives are not SPMD-expressible (DESIGN.md
+    §8); hosts flagged here are candidates for the next re-mesh.
+    """
+    if not step_times:
+        return []
+    ts = sorted(step_times.values())
+    median = ts[len(ts) // 2]
+    return sorted(h for h, t in step_times.items() if t > factor * median)

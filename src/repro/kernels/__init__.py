@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots of the Flare pipeline.
+
+Each kernel ships three artifacts:
+  * ``<name>.py`` — ``pl.pallas_call`` + explicit ``BlockSpec`` tiling;
+  * ``ops.py``    — jit'd public wrappers (padding, interpret dispatch);
+  * ``ref.py``    — pure-jnp oracle used by the allclose test sweeps.
+
+Kernels: ``tree_reduce`` (fixed-tree reproducible reduction, §6.3),
+``topk_compact`` (bisection + prefix-compaction sparsifier feeding §7),
+``sparse_accum`` (MXU one-hot scatter-add, the §7 array storage),
+``quant`` (blockwise int8 transport, F1).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

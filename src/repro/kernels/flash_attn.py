@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: flash attention (online softmax, VMEM-resident tiles).
+
+§Perf iterations 1–2 (EXPERIMENTS.md) measured that XLA-level KV/query
+chunking does NOT reduce attention HBM traffic: the per-step score tiles
+are still instruction results written to HBM, because XLA cannot fuse the
+two matmuls of attention into one kernel.  The memory-roofline fix is
+this kernel: grid over (batch·head, query tiles); each instance streams
+KV tiles through VMEM, carrying the online-softmax state (m, l, acc) in
+VMEM scratch.  HBM traffic per pass = Q + K + V + O exactly — the S×S
+score matrix never exists outside VMEM.
+
+The dry-run cannot compile Mosaic kernels on the CPU backend, so the
+roofline projection for this kernel substitutes the analytic Q+K+V+O
+traffic for the measured unfused-attention traffic (clearly labeled in
+EXPERIMENTS.md §Perf); correctness is validated here in interpret mode
+against ``ref.flash_attention``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_tile, causal, scale,
+                  attn_cap, window, q_tile):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # (QT, hd)
+    qt = q.shape[0]
+    sk = k_ref.shape[1]
+    nk = sk // kv_tile
+
+    m0 = jnp.full((qt,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((qt,), jnp.float32)
+    o0 = jnp.zeros((qt, v_ref.shape[-1]), jnp.float32)
+    q_pos = qi * q_tile + jax.lax.iota(jnp.int32, qt)
+
+    def body(ki, carry):
+        m, l, o = carry
+        kb = jax.lax.dynamic_slice_in_dim(k_ref[0], ki * kv_tile,
+                                          kv_tile, 0).astype(jnp.float32)
+        vb = jax.lax.dynamic_slice_in_dim(v_ref[0], ki * kv_tile,
+                                          kv_tile, 0).astype(jnp.float32)
+        s = q @ kb.T                                   # (QT, KT) in VMEM
+        if attn_cap > 0:
+            s = jnp.tanh(s / attn_cap) * attn_cap
+        k_pos = ki * kv_tile + jax.lax.iota(jnp.int32, kv_tile)
+        mask = jnp.ones((qt, kv_tile), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l = l * alpha + p.sum(-1)
+        o = o * alpha[:, None] + p @ vb
+        return m_new, l, o
+
+    m, l, o = jax.lax.fori_loop(0, nk, body, (m0, l0, o0))
+    o_ref[0] = (o / jnp.maximum(l[:, None], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    attn_cap: float = 0.0, window: int = 0,
+                    q_tile: int = 512, kv_tile: int = 512,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (BH, Sq, hd); k/v: (BH, Sk, hd) — heads pre-flattened into the
+    leading (grid) dim; GQA callers broadcast KV per group beforehand."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    vd = v.shape[-1]
+    if sq % q_tile or sk % kv_tile:
+        raise ValueError(f"flash_attention: {sq}%{q_tile} / {sk}%{kv_tile}")
+    scale = scale if scale is not None else hd ** -0.5
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kernel = functools.partial(_flash_kernel, kv_tile=kv_tile,
+                               causal=causal, scale=scale,
+                               attn_cap=attn_cap, window=window,
+                               q_tile=q_tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // q_tile),
+        in_specs=[pl.BlockSpec((1, q_tile, hd),
+                               lambda b, i: (b, i, 0)),
+                  pl.BlockSpec((1, sk, hd), lambda b, i: (b, 0, 0)),
+                  pl.BlockSpec((1, sk, vd), lambda b, i: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, q_tile, vd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, vd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

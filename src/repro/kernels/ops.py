@@ -1,0 +1,97 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+These handle padding/reshaping and interpret-mode dispatch (kernels run
+``interpret=True`` off-TPU so CPU tests execute the same kernel bodies),
+and fall back to the jnp oracle for shapes the kernels don't tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import quant as _quant
+from repro.kernels import ref as _ref
+from repro.kernels import sparse_accum as _sa
+from repro.kernels import topk_compact as _tk
+from repro.kernels import tree_reduce as _tr
+
+
+def _pad_axis0(x, m):
+    rem = (-x.shape[0]) % m
+    if rem:
+        x = jnp.concatenate([x, jnp.zeros((rem,) + x.shape[1:], x.dtype)])
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def tree_reduce(x: jax.Array, tile_n: int = 2048) -> jax.Array:
+    """Fixed-tree reduce of a (P, N) stack over axis 0 (pads P to pow2)."""
+    p, n = x.shape
+    pp = 1 << max(0, (p - 1).bit_length())
+    if pp != p:
+        x = jnp.concatenate([x, jnp.zeros((pp - p, n), x.dtype)])
+    tile = min(tile_n, n)
+    if n % tile:
+        return _ref.tree_reduce(x)
+    return _tr.tree_reduce(x, tile_n=tile)
+
+
+@functools.partial(jax.jit, static_argnames=("qblock",))
+def quantize(x: jax.Array, qblock: int = 256):
+    n = x.shape[0]
+    if n % qblock:
+        return _ref.quantize(_pad_axis0(x, qblock), qblock)
+    nb = n // qblock
+    tile_b = 64 if nb % 64 == 0 else (8 if nb % 8 == 0 else 1)
+    return _quant.quantize(x, qblock=qblock, tile_b=tile_b)
+
+
+@functools.partial(jax.jit, static_argnames=("qblock", "out_dtype"))
+def dequantize(q: jax.Array, scales: jax.Array, qblock: int = 256,
+               out_dtype=jnp.float32):
+    nb = q.shape[0] // qblock
+    tile_b = 64 if nb % 64 == 0 else (8 if nb % 8 == 0 else 1)
+    return _quant.dequantize(q, scales, qblock=qblock, tile_b=tile_b,
+                             out_dtype=out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def topk_compact(x: jax.Array, k: int, block: int = 512):
+    """Per-block magnitude top-k → (values, local indices), -1 padded."""
+    n = x.shape[0]
+    if n % block:
+        x = _pad_axis0(x, block)
+        n = x.shape[0]
+    nb = n // block
+    tile_b = 8 if nb % 8 == 0 else 1
+    return _tk.topk_compact(x, k, block=block, tile_b=tile_b)
+
+
+@functools.partial(jax.jit, static_argnames=("size", "out_dtype"))
+def sparse_accum(idx: jax.Array, val: jax.Array, size: int,
+                 out_dtype=jnp.float32) -> jax.Array:
+    """Scatter-add coordinate list into dense[size] (−1 entries dropped)."""
+    e = idx.shape[0]
+    tile_z = 2048 if size % 2048 == 0 else (256 if size % 256 == 0 else 0)
+    tile_e = 512 if e % 512 == 0 else (64 if e % 64 == 0 else (8 if e % 8 == 0
+                                                               else 0))
+    if not tile_z or not tile_e:
+        return _ref.sparse_accum(idx, val, size, out_dtype)
+    return _sa.sparse_accum(idx, val, size, tile_z=tile_z, tile_e=tile_e,
+                            out_dtype=out_dtype)
+
+
+def blockwise_sparsify(x: jax.Array, k: int, block: int = 512):
+    """Global (values, indices) from per-block top-k (SparCML packetization).
+
+    Returns flat value/index vectors of length ``(n/block)·k`` with global
+    indices, index-sorted, sentinel −1 → dropped by ``sparse_accum``.
+    """
+    vals, idx = topk_compact(x, k, block)
+    nb = vals.shape[0]
+    base = (jnp.arange(nb, dtype=jnp.int32) * block)[:, None]
+    # drop zero-valued tie fills: they carry no information on the wire
+    gidx = jnp.where((idx >= 0) & (vals != 0), idx + base, -1)
+    return vals.reshape(-1), gidx.reshape(-1)

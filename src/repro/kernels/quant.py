@@ -1,0 +1,86 @@
+"""Pallas TPU kernels: blockwise int8 quantize / dequantize (F1 transport).
+
+The paper's switch vectorizes sub-word aggregation (two int16 adds per
+cycle per HPU); the TPU transport analogue quantizes gradient chunks to
+int8 with one fp32 scale per ``qblock`` elements before they hit the wire
+(``core/compression.py``), quartering collective bytes.
+
+TPU mapping: input viewed as (n_blocks, qblock); grid tiles ``tile_b``
+quantization blocks per kernel instance; the rowwise max-abs reduction and
+the scaled round/clip are VPU work on a (tile_b, qblock) VMEM block;
+``qblock`` is lane-aligned (multiple of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT8_MAX = 127.0
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                    # (TILE_B, QBLOCK)
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / INT8_MAX
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale[:, 0]
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref, *, out_dtype):
+    q = q_ref[...].astype(jnp.float32)                    # (TILE_B, QBLOCK)
+    s = s_ref[...]                                        # (TILE_B,)
+    o_ref[...] = (q * s[:, None]).astype(out_dtype)
+
+
+def quantize(x: jax.Array, *, qblock: int = 256, tile_b: int = 64,
+             interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Quantize flat fp vector → (int8[n], fp32 scales[n/qblock])."""
+    n = x.shape[0]
+    if n % qblock:
+        raise ValueError(f"quantize: n={n} % qblock={qblock} != 0")
+    nb = n // qblock
+    tile_b = min(tile_b, nb)
+    if nb % tile_b:
+        raise ValueError(f"quantize: blocks={nb} % tile_b={tile_b} != 0")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    xb = x.reshape(nb, qblock)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(nb // tile_b,),
+        in_specs=[pl.BlockSpec((tile_b, qblock), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((tile_b, qblock), lambda i: (i, 0)),
+                   pl.BlockSpec((tile_b,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((nb, qblock), jnp.int8),
+                   jax.ShapeDtypeStruct((nb,), jnp.float32)],
+        interpret=interpret,
+    )(xb)
+    return q.reshape(n), s
+
+
+def dequantize(q: jax.Array, scales: jax.Array, *, qblock: int = 256,
+               tile_b: int = 64, out_dtype=jnp.float32,
+               interpret: bool | None = None) -> jax.Array:
+    """Inverse of ``quantize``."""
+    n = q.shape[0]
+    nb = n // qblock
+    tile_b = min(tile_b, nb)
+    if nb % tile_b:
+        raise ValueError(f"dequantize: blocks={nb} % tile_b={tile_b} != 0")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kernel = functools.partial(_dequant_kernel, out_dtype=out_dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb // tile_b,),
+        in_specs=[pl.BlockSpec((tile_b, qblock), lambda i: (i, 0)),
+                  pl.BlockSpec((tile_b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile_b, qblock), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, qblock), out_dtype),
+        interpret=interpret,
+    )(q.reshape(nb, qblock), scales)
+    return out.reshape(n)

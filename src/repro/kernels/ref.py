@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def tree_reduce(x: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
+    """Fixed aligned-binary-tree reduction over axis 0 of a (P, N) stack."""
+    p = x.shape[0]
+    assert p & (p - 1) == 0, "P must be a power of two"
+    y = x.astype(accum_dtype)
+    while p > 1:
+        y = y.reshape(p // 2, 2, *y.shape[1:])
+        y = y[:, 0] + y[:, 1]
+        p //= 2
+    return y[0].astype(x.dtype)
+
+
+def quantize(x: jax.Array, qblock: int = 256):
+    n = x.shape[0]
+    xb = x.reshape(n // qblock, qblock).astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=1, keepdims=True) / INT8_MAX,
+                        1e-30)
+    q = jnp.clip(jnp.round(xb / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q.reshape(n), scale[:, 0]
+
+
+def dequantize(q: jax.Array, scales: jax.Array, qblock: int = 256,
+               out_dtype=jnp.float32) -> jax.Array:
+    n = q.shape[0]
+    qb = q.reshape(n // qblock, qblock).astype(jnp.float32)
+    return (qb * scales[:, None]).reshape(n).astype(out_dtype)
+
+
+def topk_compact(x: jax.Array, k: int, block: int = 512, n_iter: int = 24):
+    """Same bisection + prefix-compaction algorithm, in plain jnp."""
+    n = x.shape[0]
+    xb = x.reshape(n // block, block).astype(jnp.float32)
+    ax = jnp.abs(xb)
+    lo = jnp.zeros((xb.shape[0], 1), jnp.float32)
+    hi = jnp.max(ax, axis=1, keepdims=True) + 1e-30
+    for _ in range(n_iter):
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((ax >= mid).astype(jnp.int32), axis=1, keepdims=True)
+        ge = cnt >= k
+        lo = jnp.where(ge, mid, lo)
+        hi = jnp.where(ge, hi, mid)
+    gt = ax > lo
+    n1 = jnp.cumsum(gt.astype(jnp.int32), axis=1)
+    total1 = jnp.minimum(n1[:, -1:], k)
+    sel1 = gt & (n1 <= k)
+    eq = (ax >= lo) & ~gt                                   # exact ties
+    n2 = jnp.cumsum(eq.astype(jnp.int32), axis=1)
+    sel2 = eq & (n2 <= (k - total1))
+    sel = sel1 | sel2
+    pos = jnp.where(sel1, n1 - 1, total1 + n2 - 1)
+    b = xb.shape[0]
+    p_iota = jax.lax.broadcasted_iota(jnp.int32, (b, block, k), 2)
+    onehot = (sel[:, :, None] & (pos[:, :, None] == p_iota)).astype(jnp.float32)
+    vals = jnp.einsum("bj,bjp->bp", xb, onehot)
+    col = jax.lax.broadcasted_iota(jnp.int32, (b, block), 1).astype(jnp.float32)
+    idxs = jnp.einsum("bj,bjp->bp", col, onehot)
+    nsel = jnp.sum(sel.astype(jnp.int32), axis=1, keepdims=True)
+    valid = jax.lax.broadcasted_iota(jnp.int32, (b, k), 1) < nsel
+    vals = jnp.where(valid, vals, 0.0).astype(x.dtype)
+    idxs = jnp.where(valid, idxs.astype(jnp.int32), jnp.int32(-1))
+    return vals, idxs
+
+
+def topk_exact(x: jax.Array, k: int, block: int = 512):
+    """Semantics oracle: exact per-block magnitude top-k via lax.top_k."""
+    n = x.shape[0]
+    xb = x.reshape(n // block, block)
+    _, idx = jax.lax.top_k(jnp.abs(xb), k)
+    idx = jnp.sort(idx, axis=1)
+    vals = jnp.take_along_axis(xb, idx, axis=1)
+    return vals, idx.astype(jnp.int32)
+
+
+def sparse_accum(idx: jax.Array, val: jax.Array, size: int,
+                 out_dtype=jnp.float32) -> jax.Array:
+    # ``mode="drop"`` only drops out-of-range indices; negatives would wrap
+    # Python-style, so map sentinels (<0) to ``size`` first.
+    idx = jnp.where(idx < 0, size, idx)
+    out = jnp.zeros((size,), out_dtype)
+    return out.at[idx].add(val.astype(out_dtype), mode="drop")

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fixed-tree reduction of stacked partials (§6.3).
+
+The paper's tree aggregation combines the P packets of a reduction block
+in a pre-defined pairwise tree so that operator associativity is never
+exercised — the reproducibility (F3) mechanism.  On TPU the analogous
+hot-spot is reducing a (P, N) stack of partial vectors (e.g. microbatch
+gradient partials, expert partials) in a *fixed* combine order with fp32
+accumulation.
+
+The combine tree is the aligned binary tree over the leading index —
+pairs (0,1),(2,3),… then pairs-of-pairs — exactly the tree
+``core.collectives.allreduce_fixed_tree`` executes across ranks, so a
+stack reduced on one chip is bitwise-identical to the same partials
+reduced across the mesh (tested in ``tests/test_kernels.py``).
+
+TPU mapping: grid over N tiles; each kernel instance holds a (P, TILE_N)
+block in VMEM and runs the log2(P)-level tree on the VPU (elementwise
+adds, lane-aligned TILE_N).  P is small (≤ 64); the block fits VMEM for
+TILE_N up to ~16K fp32 lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tree_reduce_kernel(x_ref, o_ref, *, accum_dtype):
+    x = x_ref[...].astype(accum_dtype)          # (P, TILE_N) in VMEM
+    p = x.shape[0]
+    while p > 1:                                 # static unroll: log2(P) levels
+        x = x.reshape(p // 2, 2, x.shape[-1])
+        x = x[:, 0, :] + x[:, 1, :]              # aligned pairs (2i, 2i+1)
+        p //= 2
+    o_ref[...] = x[0].astype(o_ref.dtype)
+
+
+def tree_reduce(x: jax.Array, *, tile_n: int = 2048,
+                accum_dtype=jnp.float32,
+                interpret: bool | None = None) -> jax.Array:
+    """Reduce a (P, N) stack over axis 0 in a fixed pairwise tree.
+
+    ``P`` must be a power of two (pad with zero rows otherwise — done by
+    ``ops.tree_reduce``).  Returns an (N,) vector in ``x.dtype``.
+    """
+    p, n = x.shape
+    if p & (p - 1):
+        raise ValueError(f"tree_reduce: P={p} must be a power of two")
+    if n % tile_n:
+        raise ValueError(f"tree_reduce: N={n} % tile_n={tile_n} != 0")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kernel = functools.partial(_tree_reduce_kernel, accum_dtype=accum_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile_n,),
+        in_specs=[pl.BlockSpec((p, tile_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before
+the first device query, and tests must see 1 CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.sharding.rules import MeshCfg
+
+SINGLE_POD = (16, 16)                 # 256 chips: (data, model)
+MULTI_POD = (2, 16, 16)               # 2 pods × 256 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(jax.devices())} "
+            "— the dry-run must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape),
+                         devices=devices)
+
+
+def mesh_cfg(*, multi_pod: bool = False) -> MeshCfg:
+    if multi_pod:
+        return MeshCfg(("pod", "data", "model"), MULTI_POD)
+    return MeshCfg(("data", "model"), SINGLE_POD)

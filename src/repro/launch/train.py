@@ -1,0 +1,123 @@
+"""Training driver: ``python -m repro.launch.train --arch tinyllama-1.1b``.
+
+Runs the Flare train step (shard_map + FSDP-gather + GradReducer) on
+whatever devices exist (real TPUs, or ``--fake-devices N`` CPU devices
+for local bring-up), with checkpointing and failure-recovery wiring.
+"""
+import argparse
+import os
+import sys
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", type=str, default="1x1",
+                    help="data x model (e.g. 4x2); pod axis via PxDxM")
+    ap.add_argument("--fake-devices", type=int, default=0)
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--algorithm", type=str, default="auto",
+                    help="flare allreduce algorithm for replicated grads")
+    ap.add_argument("--gather-algorithm", type=str, default="rhd")
+    ap.add_argument("--reproducible", action="store_true")
+    ap.add_argument("--compression", type=str, default="none")
+    ap.add_argument("--sparse-k", type=float, default=0.0)
+    return ap.parse_args()
+
+
+def main():
+    args = _parse()
+    if args.fake_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.fake_devices}")
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import configs
+    from repro.core.engine import FlareConfig
+    from repro.data import pipeline
+    from repro.ft import CheckpointManager
+    from repro.models import get_model
+    from repro.sharding import rules
+    from repro.train import trainer
+
+    dims = [int(x) for x in args.mesh.split("x")]
+    if len(dims) == 2:
+        axes, shape = ("data", "model"), tuple(dims)
+    elif len(dims) == 3:
+        axes, shape = ("pod", "data", "model"), tuple(dims)
+    else:
+        sys.exit("--mesh must be DxM or PxDxM")
+    mesh = jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    mcfg = rules.MeshCfg(axes, shape)
+
+    mod = configs.load(args.arch)
+    cfg = (mod.SMOKE if args.smoke else mod.CONFIG)
+    if args.smoke:
+        cfg = cfg.scaled(dtype=jnp.float32)
+    model = get_model(cfg)
+
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(model.init, key)
+    batch0 = next(pipeline.synthetic_batches(cfg, args.batch, args.seq,
+                                             prefetch=False))
+    batch_shapes = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch0)
+
+    tcfg = trainer.TrainConfig(
+        lr=args.lr,
+        gather_algorithm=("fixed_tree" if args.reproducible
+                          else args.gather_algorithm),
+        flare=FlareConfig(axes=mcfg.reduce_axes, algorithm=args.algorithm,
+                          reproducible=args.reproducible,
+                          compression=args.compression,
+                          sparse_k_frac=args.sparse_k))
+
+    with jax.set_mesh(mesh):
+        fn, param_sh, opt_sh, batch_sh, init_opt = trainer.jit_train_step(
+            model, mesh, mcfg, tcfg, params_shapes, batch_shapes,
+            donate=True)
+        params = jax.device_put(model.init(key), param_sh)
+        opt = jax.device_put(init_opt(params), opt_sh)
+
+        start = 0
+        cm = None
+        if args.ckpt_dir:
+            cm = CheckpointManager(args.ckpt_dir)
+            if args.resume and cm.latest_step() is not None:
+                start = cm.latest_step()
+                state = cm.restore(start, {"p": params, "o": opt},
+                                   {"p": param_sh, "o": opt_sh})
+                params, opt = state["p"], state["o"]
+                print(f"resumed from step {start}")
+
+        stream = pipeline.synthetic_batches(cfg, args.batch, args.seq,
+                                            shardings=batch_sh, seed=1)
+        import time
+        for step in range(start, args.steps):
+            t0 = time.time()
+            batch = next(stream)
+            params, opt, metrics = fn(params, opt, batch)
+            loss = float(metrics["loss"])
+            print(f"step {step:5d} loss {loss:8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):8.3f} "
+                  f"dt {time.time() - t0:6.3f}s", flush=True)
+            if cm and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+                cm.save(step + 1, {"p": params, "o": opt})
+        if cm:
+            cm.wait()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Model zoo: the 10 assigned architectures on a shared functional core.
+
+Families:
+  * ``transformer`` — decoder-only LMs: dense GQA/MQA (tinyllama, granite,
+    gemma2-2b/27b with local/global + softcaps), MoE (qwen3-moe), MLA+MoE
+    (deepseek-v2-lite), and cross-attention VLM backbones (llama-3.2-vision).
+  * ``mamba2``     — attention-free SSD (state-space duality) LM.
+  * ``zamba2``     — hybrid: mamba2 backbone + shared attention blocks.
+  * ``whisper``    — encoder-decoder audio backbone (conv frontend stubbed).
+
+All models are pure functions over stacked-parameter pytrees, scan over
+layers, and expose ``init / loss / prefill / decode`` plus sharding specs
+(see ``repro.sharding``).  The Flare gradient engine plugs in at the
+trainer level (``repro.train``).
+"""
+from repro.models.base import ModelConfig
+from repro.models.registry import get_model
+
+__all__ = ["ModelConfig", "get_model"]

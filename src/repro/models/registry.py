@@ -1,0 +1,41 @@
+"""Family → model-function dispatch."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.models import mamba2, transformer, whisper, zamba2
+from repro.models.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Functional model bundle for one architecture."""
+
+    cfg: ModelConfig
+    init: Callable          # (key) -> params
+    loss: Callable          # (params, batch, *, gather=None) -> scalar
+    prefill: Callable       # (params, batch, *, gather=None) -> (logits, cache)
+    decode: Callable        # (params, token, cache, *, gather=None) -> (logits, cache)
+    init_cache: Callable    # (batch_size, max_seq) -> cache
+
+
+_FAMILIES = {
+    "dense": transformer, "moe": transformer, "vlm": transformer,
+    "ssm": mamba2, "hybrid": zamba2, "audio": whisper,
+}
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    mod: Any = _FAMILIES[cfg.family]
+    return Model(
+        cfg=cfg,
+        init=lambda key: mod.init_params(cfg, key),
+        loss=lambda params, batch, **kw: mod.loss_fn(cfg, params, batch, **kw),
+        prefill=lambda params, batch, **kw: mod.prefill(cfg, params, batch,
+                                                        **kw),
+        decode=lambda params, token, cache, **kw: mod.decode_step(
+            cfg, params, token, cache, **kw),
+        init_cache=lambda bs, max_seq, **kw: mod.init_cache(cfg, bs, max_seq,
+                                                            **kw),
+    )

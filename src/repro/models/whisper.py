@@ -1,0 +1,227 @@
+"""Whisper-medium encoder-decoder backbone (arXiv:2212.04356).
+
+The conv frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, encoder_tokens, D) — the transformer
+encoder/decoder is the modeled backbone.  LayerNorm (with bias), GELU
+MLPs, learned positional embeddings (decoder positions extended beyond
+Whisper's native 448 to cover the assigned shapes; recorded in DESIGN.md),
+tied output head.  Decoder layers: causal self-attn + cross-attn to the
+encoder output + MLP.  Decode caches self-attn KV and the per-layer cross
+KV computed once at prefill.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import base
+from repro.models import transformer as tf
+from repro.models.base import ModelConfig
+
+Gather = Callable | None
+
+
+def _ln(key_unused, d):
+    return {"w": jnp.ones((d,)), "b": jnp.zeros((d,))}
+
+
+def _attn_params(cfg, key, d):
+    h, hd = cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": base.dense_init(ks[0], (d, h * hd)),
+        "wk": base.dense_init(ks[1], (d, h * hd)),
+        "wv": base.dense_init(ks[2], (d, h * hd)),
+        "wo": base.dense_init(ks[3], (h * hd, d)),
+        "bq": jnp.zeros((h * hd,)), "bv": jnp.zeros((h * hd,)),
+        "bo": jnp.zeros((d,)),
+    }
+
+
+def _mlp_params(cfg, key, d):
+    ks = jax.random.split(key, 2)
+    return {
+        "w_up": base.dense_init(ks[0], (d, cfg.d_ff)),
+        "b_up": jnp.zeros((cfg.d_ff,)),
+        "w_down": base.dense_init(ks[1], (cfg.d_ff, d)),
+        "b_down": jnp.zeros((d,)),
+    }
+
+
+def _enc_layer(cfg, key):
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    return {"ln1": _ln(None, d), "attn": _attn_params(cfg, ks[0], d),
+            "ln2": _ln(None, d), "mlp": _mlp_params(cfg, ks[1], d)}
+
+
+def _dec_layer(cfg, key):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {"ln1": _ln(None, d), "attn": _attn_params(cfg, ks[0], d),
+            "ln_x": _ln(None, d), "xattn": _attn_params(cfg, ks[1], d),
+            "ln2": _ln(None, d), "mlp": _mlp_params(cfg, ks[2], d)}
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 6)
+    ek = jax.random.split(ks[0], cfg.encoder_layers)
+    dk = jax.random.split(ks[1], cfg.n_layers)
+    stack = lambda keys, mk: jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[mk(cfg, k) for k in keys])
+    d = cfg.d_model
+    return {
+        "embed": base.dense_init(ks[2], (cfg.vocab, d), 0.02),
+        "dec_pos": base.dense_init(ks[3], (cfg.max_positions, d), 0.01),
+        "enc_pos": base.dense_init(ks[4], (cfg.encoder_tokens, d), 0.01),
+        "enc_layers": stack(ek, _enc_layer),
+        "dec_layers": stack(dk, _dec_layer),
+        "enc_norm": _ln(None, d),
+        "final_norm": _ln(None, d),
+    }
+
+
+def _g(gather, lp):
+    return gather(lp) if gather is not None else lp
+
+
+def _mha(cfg, p, xq, xkv, *, causal, cache=None, q_pos=None, kv_len=None):
+    b, s, d = xq.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = (xq @ p["wq"] + p["bq"]).reshape(b, s, h, hd)
+    if xkv is not None:
+        k = (xkv @ p["wk"]).reshape(b, xkv.shape[1], h, hd)
+        v = (xkv @ p["wv"] + p["bv"]).reshape(b, xkv.shape[1], h, hd)
+    else:
+        k, v = cache["k"], cache["v"]            # precomputed cross KV
+    if cache is not None and xkv is not None:    # self-attn decode
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache["pos"], 1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache["pos"], 1)
+        q_pos = cache["pos"] + jnp.arange(s)
+        kv_len = cache["pos"] + s
+    out = base.attend(q, k, v, causal=causal, q_pos=q_pos, kv_len=kv_len,
+                      chunk=cfg.attn_chunk if cache is None else 0)
+    return out.reshape(b, s, h * hd) @ p["wo"] + p["bo"], (k, v)
+
+
+def encode(cfg: ModelConfig, params, frames, *, gather: Gather = None):
+    """frames: (B, encoder_tokens, D) — stub conv-frontend output."""
+    enc_pos = params["enc_pos"]
+    if gather is not None:
+        enc_pos = gather({"enc_pos": enc_pos})["enc_pos"]
+    x = frames.astype(cfg.dtype) + enc_pos.astype(cfg.dtype)
+
+    def body(x, lp):
+        lp = _g(gather, lp)
+        h = base.layernorm(x, lp["ln1"]["w"], lp["ln1"]["b"])
+        a, _ = _mha(cfg, lp["attn"], h, h, causal=False)
+        x = x + a
+        h = base.layernorm(x, lp["ln2"]["w"], lp["ln2"]["b"])
+        return x + base.gelu_mlp(lp["mlp"], h), None
+    body = base.remat(cfg, body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return base.layernorm(x, params["enc_norm"]["w"], params["enc_norm"]["b"])
+
+
+def _decoder(cfg, params, x, enc_out, *, mode, cache=None, pos=None,
+             gather: Gather = None):
+    want_cache = mode in ("prefill", "decode")
+
+    def body(carry, xs):
+        x = carry
+        lp, lcache = xs
+        lp = _g(gather, lp)
+        h = base.layernorm(x, lp["ln1"]["w"], lp["ln1"]["b"])
+        c = None
+        if mode == "decode":
+            c = {"k": lcache["k"], "v": lcache["v"], "pos": pos}
+        a, kv = _mha(cfg, lp["attn"], h, h, causal=True, cache=c)
+        x = x + base.tag_block_out(cfg, a)
+        h = base.layernorm(x, lp["ln_x"]["w"], lp["ln_x"]["b"])
+        if mode == "decode":
+            xc = {"k": lcache["xk"], "v": lcache["xv"]}
+            a, xkv = _mha(cfg, lp["xattn"], h, None, causal=False, cache=xc)
+        else:
+            a, xkv = _mha(cfg, lp["xattn"], h, enc_out, causal=False)
+        x = x + a
+        h = base.layernorm(x, lp["ln2"]["w"], lp["ln2"]["b"])
+        x = x + base.tag_block_out(cfg, base.gelu_mlp(lp["mlp"], h))
+        ys = None
+        if want_cache:
+            ys = {"k": kv[0], "v": kv[1], "xk": xkv[0], "xv": xkv[1]}
+        return x, ys
+
+    if mode == "train":
+        body = base.remat(cfg, body)
+    xs_cache = cache["dec"] if mode == "decode" \
+        else jnp.zeros((cfg.n_layers, 0))
+    x, ys = jax.lax.scan(body, x, (params["dec_layers"], xs_cache))
+    return x, ({"dec": ys} if want_cache else None)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, gather: Gather = None,
+            loss_chunk: int = 2048):
+    tokens, labels = batch["tokens"], batch["labels"]
+    enc_out = encode(cfg, params, batch["enc_frames"], gather=gather)
+    emb = params["embed"]
+    dec_pos = params["dec_pos"]
+    if gather is not None:
+        g = gather({"embed": emb, "dec_pos": dec_pos})
+        emb, dec_pos = g["embed"], g["dec_pos"]
+    s = tokens.shape[1]
+    x = emb.astype(cfg.dtype)[tokens] + dec_pos.astype(cfg.dtype)[:s]
+    x, _ = _decoder(cfg, params, x, enc_out, mode="train", gather=gather)
+    x = base.layernorm(x, params["final_norm"]["w"], params["final_norm"]["b"])
+    head = emb.T.astype(cfg.dtype)       # tied
+    return tf.chunked_ce(cfg, x, head, labels, loss_chunk)
+
+
+def prefill(cfg: ModelConfig, params, batch, *, gather: Gather = None):
+    tokens = batch["tokens"]
+    enc_out = encode(cfg, params, batch["enc_frames"], gather=gather)
+    emb = params["embed"]
+    dec_pos = params["dec_pos"]
+    if gather is not None:
+        g = gather({"embed": emb, "dec_pos": dec_pos})
+        emb, dec_pos = g["embed"], g["dec_pos"]
+    s = tokens.shape[1]
+    x = emb.astype(cfg.dtype)[tokens] + dec_pos.astype(cfg.dtype)[:s]
+    x, cache = _decoder(cfg, params, x, enc_out, mode="prefill",
+                        gather=gather)
+    x = base.layernorm(x, params["final_norm"]["w"], params["final_norm"]["b"])
+    cache["pos"] = jnp.int32(s)
+    return x[:, -1:] @ emb.T.astype(cfg.dtype), cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, *,
+                gather: Gather = None):
+    emb = params["embed"]
+    dec_pos = params["dec_pos"]
+    if gather is not None:
+        g = gather({"embed": emb, "dec_pos": dec_pos})
+        emb, dec_pos = g["embed"], g["dec_pos"]
+    pos = cache["pos"]
+    x = emb.astype(cfg.dtype)[token] \
+        + jax.lax.dynamic_slice_in_dim(dec_pos.astype(cfg.dtype),
+                                       pos, token.shape[1], 0)
+    layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+    x, nc = _decoder(cfg, params, x, None, mode="decode",
+                     cache=layer_caches, pos=pos, gather=gather)
+    x = base.layernorm(x, params["final_norm"]["w"], params["final_norm"]["b"])
+    nc["pos"] = pos + token.shape[1]
+    return x @ emb.T.astype(cfg.dtype), nc
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int,
+               dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    h, hd = cfg.n_heads, cfg.hd
+    L = cfg.n_layers
+    return {"dec": {
+        "k": jnp.zeros((L, batch_size, max_seq, h, hd), dtype),
+        "v": jnp.zeros((L, batch_size, max_seq, h, hd), dtype),
+        "xk": jnp.zeros((L, batch_size, cfg.encoder_tokens, h, hd), dtype),
+        "xv": jnp.zeros((L, batch_size, cfg.encoder_tokens, h, hd), dtype)},
+        "pos": jnp.int32(max_seq - 1)}

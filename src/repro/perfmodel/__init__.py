@@ -1,0 +1,18 @@
+"""Paper §4–§7 performance models and simulators.
+
+This package validates the paper's *quantitative* claims 1:1 (the switch
+microarchitecture has no TPU analogue, so it is reproduced as a model +
+discrete-event simulator rather than as device code — see DESIGN.md §2):
+
+  * ``switch_model``  — analytic τ / bandwidth / queue (Eq. 1) / working
+    memory models of §4–§6 (Figures 7, 10, 13).
+  * ``switch_sim``    — discrete-event PsPIN switch simulator: clusters,
+    HPU cores, hierarchical FCFS scheduling, critical sections, the three
+    aggregation designs, dense and sparse handlers (Figures 11, 14).
+  * ``network_sim``   — flow-level fat-tree simulator comparing host-ring,
+    in-network dense, SparCML host-sparse and Flare in-network sparse
+    allreduce (Figure 15).
+"""
+from repro.perfmodel import network_sim, switch_model, switch_sim
+
+__all__ = ["network_sim", "switch_model", "switch_sim"]

@@ -1,0 +1,4 @@
+"""Serving substrate: jitted prefill/decode steps + a batched server."""
+from repro.serve.engine import BatchedServer, make_serve_fns
+
+__all__ = ["BatchedServer", "make_serve_fns"]

@@ -1,0 +1,146 @@
+"""Serving: pjit'd prefill/decode steps and a slot-based batched server.
+
+Serving has no gradient reduction, so the paper's technique does not
+apply here (DESIGN.md §Arch-applicability); the distribution config is
+still ours to prove: params follow the same FSDP+TP rules (XLA inserts
+the per-use gathers) and caches follow ``sharding.cache_specs`` — heads
+over ``model`` when divisible, otherwise *sequence-sharded KV* so the
+500K-context cells fit (each chip holds S/tp of the context; XLA
+partitions the softmax reduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding import rules
+
+
+def make_serve_fns(model, mesh, mesh_cfg: rules.MeshCfg, *,
+                   cache_batch: int, cache_len: int):
+    """(prefill_fn, decode_fn, shardings) — jitted with NamedShardings."""
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    full_specs, _, _ = rules.param_specs(params_shapes, mesh_cfg)
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(cache_batch, cache_len))
+    cspecs = rules.cache_specs(cache_shapes, mesh_cfg)
+
+    ns = lambda s: NamedSharding(mesh, s)
+    param_sh = jax.tree.map(ns, full_specs)
+    cache_sh = jax.tree.map(ns, cspecs)
+    daxes = tuple(a for a in mesh_cfg.axes if a != "model")
+
+    def tok_sh(b):
+        if b % mesh_cfg.data_world == 0:
+            return ns(P(daxes, None))
+        if b % mesh_cfg.fsdp == 0:
+            return ns(P(("data",), None))
+        return ns(P())
+
+    prefill = jax.jit(model.prefill,
+                      in_shardings=(param_sh, None),
+                      out_shardings=(None, cache_sh))
+    decode = jax.jit(model.decode,
+                     in_shardings=(param_sh, tok_sh(cache_batch), cache_sh),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(2,))
+    return prefill, decode, {"params": param_sh, "cache": cache_sh}
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Slot-based batched decode (continuous-batching-lite).
+
+    Fixed ``slots`` decode lanes over one shared KV cache; requests are
+    admitted into free slots (prompt prefilled one-at-a-time into the
+    slot's cache rows), then all active slots decode in lockstep.  This
+    is the minimal shape of a production batcher: admission, per-slot
+    position tracking, EOS/max-token retirement, cache reuse.
+    """
+
+    def __init__(self, model, params, *, slots: int = 8,
+                 max_len: int = 256, eos: int = -1):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos = eos
+        self.cache = model.init_cache(slots, max_len)
+        self.cache["pos"] = jnp.int32(0)
+        self.pos = np.zeros(slots, np.int32)        # per-slot next position
+        self.active: list[Request | None] = [None] * slots
+        self.queue: list[Request] = []
+        self._decode = jax.jit(model.decode)
+        self._next = 0
+
+    def submit(self, prompt: np.ndarray, max_new: int = 32) -> Request:
+        r = Request(self._next, np.asarray(prompt, np.int32), max_new)
+        self._next += 1
+        self.queue.append(r)
+        return r
+
+    def _admit(self):
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                r = self.queue.pop(0)
+                self.active[i] = r
+                self.pos[i] = 0
+                # feed the prompt through decode steps on this slot's lane
+                # (single-lane prefill keeps the demo simple; a production
+                # server would batch prefills separately)
+                for t in r.prompt:
+                    self._step_slot(i, int(t))
+
+    def _step_slot(self, i: int, tok: int):
+        toks = np.zeros((self.slots, 1), np.int32)
+        toks[i, 0] = tok
+        self.cache["pos"] = jnp.int32(int(self.pos[i]))
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(toks), self.cache)
+        self.pos[i] += 1
+        return np.asarray(logits[i, -1])
+
+    def step(self) -> int:
+        """One decode step for all active slots; returns #active."""
+        self._admit()
+        act = [i for i, r in enumerate(self.active) if r is not None]
+        if not act:
+            return 0
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i in act:
+            r = self.active[i]
+            toks[i, 0] = r.out[-1] if r.out else (r.prompt[-1] if
+                                                  len(r.prompt) else 0)
+        self.cache["pos"] = jnp.int32(int(self.pos[act[0]]))
+        logits, self.cache = self._decode(self.params, jnp.asarray(toks),
+                                          self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+        for i in act:
+            r = self.active[i]
+            tok = int(nxt[i])
+            r.out.append(tok)
+            self.pos[i] += 1
+            if tok == self.eos or len(r.out) >= r.max_new \
+                    or self.pos[i] >= self.max_len - 1:
+                r.done = True
+                self.active[i] = None
+        return len(act)
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(self.active)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

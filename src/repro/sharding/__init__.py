@@ -1,0 +1,6 @@
+"""Partitioning rules: FSDP over ``data``, TP/EP over ``model``."""
+from repro.sharding.rules import (MeshCfg, batch_spec, cache_specs, decide,
+                                  make_gather, param_specs)
+
+__all__ = ["MeshCfg", "batch_spec", "cache_specs", "decide", "make_gather",
+           "param_specs"]

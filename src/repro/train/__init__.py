@@ -1,0 +1,5 @@
+"""Training substrate: AdamW (ZeRO-sharded), the Flare train step."""
+from repro.train.optim import adamw_init, adamw_update
+from repro.train.trainer import TrainConfig, make_train_step
+
+__all__ = ["adamw_init", "adamw_update", "TrainConfig", "make_train_step"]

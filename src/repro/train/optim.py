@@ -1,0 +1,52 @@
+"""AdamW, functional and sharding-transparent.
+
+Moments are elementwise over parameters, so they inherit the parameter
+sharding: FSDP-sharded params get FSDP-sharded (ZeRO-1) moments, each
+data-rank updates only its shard — no optimizer-state collectives at all
+(the gradient tree already delivered reduce-scattered gradients).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    return {
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, opt_state, *, lr=3e-4, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        p = p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
+        return p, m, v
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t3: t3[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t3: t3[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t3: t3[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+def global_grad_norm(fsdp_sumsq: jax.Array, rep_sumsq: jax.Array,
+                     data_axis: str) -> jax.Array:
+    """Global L2 norm with FSDP shards summed over the data axis."""
+    total = jax.lax.psum(fsdp_sumsq, data_axis) + rep_sumsq
+    return jnp.sqrt(total)

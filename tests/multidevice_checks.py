@@ -1,0 +1,231 @@
+"""Multi-device correctness checks, run in a subprocess with 8 fake devices.
+
+Invoked by tests/test_collectives.py as::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python tests/multidevice_checks.py <group>
+
+Groups: collectives | sparse_quant | fsdp_engine | trainer | repro
+Exits non-zero on any failure (assertion output on stderr).
+"""
+import os
+import sys
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+import jax                                                     # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+import numpy as np                                             # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P     # noqa: E402
+
+from repro.core import collectives as coll                     # noqa: E402
+from repro.core import compression, fsdp, reproducible, sparse  # noqa: E402
+from repro.core.engine import FlareConfig, GradReducer         # noqa: E402
+
+
+def _mesh():
+    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+
+def _run(fn, xs, mesh, out_spec=P(None)):
+    g = jax.jit(jax.shard_map(fn, in_specs=(P(("pod", "data"), None),),
+                              out_specs=out_spec,
+                              axis_names={"pod", "data"}, check_vma=False))
+    with jax.set_mesh(mesh):
+        x = jax.device_put(xs, NamedSharding(mesh, P(("pod", "data"), None)))
+        return np.asarray(g(x))
+
+
+def check_collectives():
+    mesh = _mesh()
+    rng = np.random.default_rng(0)
+    Z = 96   # not divisible by 4 → exercises padding
+    xs = jnp.asarray(rng.normal(size=(4, Z)).astype(np.float32))
+    expect = np.asarray(xs).sum(0)
+
+    cases = {
+        "ring": lambda x: coll.allreduce(x[0], ("pod", "data"),
+                                         algorithm="ring"),
+        "rhd": lambda x: coll.allreduce(x[0], ("pod", "data"),
+                                        algorithm="rhd"),
+        "fixed_tree": lambda x: coll.allreduce(x[0], ("pod", "data"),
+                                               algorithm="fixed_tree"),
+        "two_level": lambda x: coll.allreduce(x[0], ("pod", "data"),
+                                              algorithm="two_level"),
+        "psum": lambda x: coll.allreduce(x[0], ("pod", "data"),
+                                         algorithm="psum"),
+        "auto": lambda x: coll.allreduce(x[0], ("pod", "data"),
+                                         algorithm="auto"),
+        "stagger": lambda x: coll.allreduce(x[0], ("pod", "data"),
+                                            algorithm="ring", stagger=5),
+    }
+    for name, fn in cases.items():
+        got = _run(fn, xs, mesh)
+        assert np.allclose(got, expect, atol=1e-4), \
+            f"{name}: {np.abs(got - expect).max()}"
+    # reduce_scatter (ordered) + all_gather roundtrip
+    def rs_ag(x):
+        seg = coll.reduce_scatter(x[0], ("pod", "data"), algorithm="rhd",
+                                  ordered=True)
+        return coll.all_gather(seg, ("data",), algorithm="rhd", ordered=True)
+    got = _run(rs_ag, xs, mesh)
+    assert np.allclose(got, expect, atol=1e-4)
+    # max-op allreduce (F1: custom operators)
+    got = _run(lambda x: coll.allreduce_ring(x[0], "data",
+                                             op=jnp.maximum), xs, mesh)
+    # per (pod) group max over data axis: compare vs oracle for pod 0 rows
+    # rows 0..1 = pod0 (data ranks), 2..3 = pod1; shard_map over both axes
+    # with 4 rows → rank r gets row r; ring over data only reduces within
+    # the pod's data group {0,1} and {2,3}; output spec P(None) returns
+    # pod0/data0's value
+    want = np.maximum(np.asarray(xs)[0], np.asarray(xs)[1])
+    assert np.allclose(got, want), "custom-op allreduce"
+    print("collectives OK")
+
+
+def check_sparse_quant():
+    mesh = _mesh()
+    rng = np.random.default_rng(1)
+    Z = 64
+    xs = jnp.asarray(rng.normal(size=(4, Z)).astype(np.float32))
+
+    def topk_np(v, k):
+        i = np.argsort(-np.abs(v))[:k]
+        o = np.zeros_like(v)
+        o[i] = v[i]
+        return o
+
+    for k in [1, 8, 32, 64]:
+        def sp(x, k=k):
+            red, mine = sparse.sparse_allreduce(x[0], "data", k=k)
+            return coll.allreduce_rhd(red, "pod")
+        got = _run(sp, xs, mesh)
+        want = sum(topk_np(np.asarray(xs[i]), k) for i in range(4))
+        assert np.allclose(got, want, atol=1e-4), f"sparse k={k}"
+
+    # densify-on-overflow engaged (k large relative to threshold)
+    def sp_dense(x):
+        red, _ = sparse.sparse_allreduce(x[0], "data", k=48,
+                                         density_threshold=0.1)
+        return coll.allreduce_rhd(red, "pod")
+    got = _run(sp_dense, xs, mesh)
+    want = sum(topk_np(np.asarray(xs[i]), 48) for i in range(4))
+    assert np.allclose(got, want, atol=1e-4), "densify-on-overflow"
+
+    # int8 quantized transport
+    def q8(x):
+        y = compression.quantized_allreduce(x[0], "data")
+        return coll.allreduce_rhd(y, "pod")
+    got = _run(q8, xs, mesh)
+    expect = np.asarray(xs).sum(0)
+    tol = np.abs(np.asarray(xs)).max() / 127 * 4 * 2 + 1e-3
+    assert np.abs(got - expect).max() < tol, "quantized allreduce"
+    print("sparse/quant OK")
+
+
+def check_fsdp_engine():
+    mesh = _mesh()
+    rng = np.random.default_rng(2)
+    W = jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32))
+    X = jnp.asarray(rng.normal(size=(8, 3, 16)).astype(np.float32))
+    for alg in ["ring", "rhd", "fixed_tree", "psum"]:
+        def step(w_shard, x_local, alg=alg):
+            def loss(ws):
+                w = fsdp.gather_params(ws, ("pod", "data"), alg)
+                return jnp.sum((x_local @ w) ** 2) / 64.0
+            return jax.grad(loss)(w_shard)
+        g = jax.jit(jax.shard_map(
+            step, in_specs=(P("data", None), P(("pod", "data"), None, None)),
+            out_specs=P("data", None), axis_names={"pod", "data"},
+            check_vma=False))
+        with jax.set_mesh(mesh):
+            ws = jax.device_put(W, NamedSharding(mesh, P("data", None)))
+            xs = jax.device_put(X, NamedSharding(
+                mesh, P(("pod", "data"), None, None)))
+            got = np.asarray(g(ws, xs))
+        want = np.zeros(W.shape, np.float32)
+        for i in range(8):
+            x = np.asarray(X[i])
+            want += 2 * x.T @ (x @ np.asarray(W)) / 64.0
+        assert np.allclose(got, want, atol=1e-4), f"fsdp {alg}"
+
+    # engine: pytree reduction across algorithms and options
+    # (4 rows = one per manual (pod × data) rank)
+    Z = 64
+    xs = jnp.asarray(rng.normal(size=(4, Z)).astype(np.float32))
+    expect = np.asarray(xs).sum(0)
+    for cfgkw in [dict(algorithm="auto"), dict(algorithm="ring"),
+                  dict(reproducible=True, algorithm="fixed_tree"),
+                  dict(compression="int8"),
+                  dict(sparse_k_frac=1.0)]:
+        def eng(x, kw=cfgkw):
+            g = {"a": x[0][:48].reshape(6, 8), "b": x[0][48:]}
+            r = GradReducer(FlareConfig(axes=("pod", "data"), **kw))
+            red, _ = r(g, r.init_state(g))
+            return jnp.concatenate([red["a"].reshape(-1), red["b"]])
+        got = _run(eng, xs, mesh)
+        tol = 0.3 if cfgkw.get("compression") == "int8" else 1e-4
+        assert np.allclose(got, expect, atol=tol), f"engine {cfgkw}"
+    print("fsdp/engine OK")
+
+
+def check_trainer():
+    from repro import configs
+    from repro.models import get_model
+    from repro.sharding import rules
+    from repro.train import trainer
+
+    mesh = _mesh()
+    mcfg = rules.MeshCfg(("pod", "data", "model"), (2, 2, 2))
+    cfg = configs.load("tinyllama-1.1b").SMOKE.scaled(dtype=jnp.float32)
+    m = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(key, (8, 16), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (8, 16), 0, cfg.vocab)}
+    tcfg = trainer.TrainConfig(lr=1e-2)
+    with jax.set_mesh(mesh):
+        fn, param_sh, opt_sh, batch_sh, init_opt = trainer.jit_train_step(
+            m, mesh, mcfg, tcfg, jax.eval_shape(m.init, key), batch,
+            donate=False)
+        params = jax.device_put(m.init(key), param_sh)
+        opt = jax.device_put(init_opt(params), opt_sh)
+        bd = {k: jax.device_put(v, batch_sh[k]) for k, v in batch.items()}
+        losses = []
+        for _ in range(3):
+            params, opt, metrics = fn(params, opt, bd)
+            losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] and np.isfinite(losses).all(), losses
+    print("trainer OK", [round(l, 3) for l in losses])
+
+
+def check_repro():
+    """F3: bitwise reproducibility across runs; ring is NOT required to
+    match fixed_tree (different combine order) but must be self-stable."""
+    mesh = _mesh()
+    rng = np.random.default_rng(3)
+    xs = jnp.asarray((rng.normal(size=(4, 4096)) * 1e3).astype(np.float32))
+    f = lambda x: reproducible.reproducible_allreduce(x[0], ("pod", "data"))
+    a = _run(f, xs, mesh)
+    b = _run(f, xs, mesh)
+    assert a.tobytes() == b.tobytes(), "fixed tree not bitwise stable"
+    # and it matches fp64 reference within fp32 tree-accumulation error
+    want = np.asarray(xs, np.float64).sum(0)
+    scale = np.abs(np.asarray(xs)).max()
+    assert np.allclose(a, want, rtol=1e-4, atol=1e-5 * scale), \
+        "fixed tree accuracy"
+    print("reproducible OK")
+
+
+GROUPS = {
+    "collectives": check_collectives,
+    "sparse_quant": check_sparse_quant,
+    "fsdp_engine": check_fsdp_engine,
+    "trainer": check_trainer,
+    "repro": check_repro,
+}
+
+if __name__ == "__main__":
+    GROUPS[sys.argv[1]]()

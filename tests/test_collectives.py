@@ -1,0 +1,31 @@
+"""Multi-device collective tests (subprocess with 8 fake CPU devices).
+
+The dry-run owns the 512-device flag and the rest of the suite must see
+one device, so every multi-device check runs in its own subprocess.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "multidevice_checks.py")
+
+
+def _run_group(group: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    r = subprocess.run([sys.executable, _SCRIPT, group],
+                       capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"{group} failed:\n{r.stdout}\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.parametrize("group", ["collectives", "sparse_quant",
+                                   "fsdp_engine", "trainer", "repro"])
+def test_multidevice(group):
+    out = _run_group(group)
+    assert "OK" in out

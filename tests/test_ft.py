@@ -1,0 +1,110 @@
+"""Fault tolerance: checkpoints, failure detection, elastic re-mesh."""
+import glob
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ft import CheckpointManager, Coordinator
+from repro.ft.coordinator import plan_remesh, straggler_report
+
+
+def _tree():
+    return {"w": jnp.arange(12.0).reshape(3, 4),
+            "opt": {"m": jnp.ones(5), "step": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    t = _tree()
+    cm.save(10, t)
+    out = cm.restore(10, t)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+import jax  # noqa: E402  (used above in tree comparisons)
+
+
+def test_checkpoint_keep_n_gc(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    t = _tree()
+    for s in (10, 20, 30, 40):
+        cm.save(s, t)
+    cm.wait()
+    assert cm.all_steps() == [30, 40]
+    assert cm.latest_step() == 40
+
+
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=1, async_save=False)
+    t = _tree()
+    cm.save(5, t)
+    f = glob.glob(os.path.join(str(tmp_path), "step_000005", "*.npz"))[0]
+    data = bytearray(open(f, "rb").read())
+    # flip bytes across the latter half so at least one lands in payload
+    for off in range(len(data) // 2, len(data) - 1, 16):
+        data[off] ^= 0xFF
+    open(f, "wb").write(bytes(data))
+    with pytest.raises(Exception):
+        cm.restore(5, t)
+
+
+def test_checkpoint_structure_mismatch(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_save=False)
+    cm.save(1, _tree())
+    with pytest.raises(ValueError):
+        cm.restore(1, {"different": jnp.zeros(3)})
+
+
+def test_checkpoint_atomic_commit(tmp_path):
+    """A .tmp directory must never be listed as a restorable step."""
+    cm = CheckpointManager(str(tmp_path), async_save=False)
+    os.makedirs(os.path.join(str(tmp_path), "step_000099.tmp"))
+    assert cm.all_steps() == []
+
+
+def test_coordinator_failure_detection():
+    t = [0.0]
+    c = Coordinator(8, timeout_s=5, clock=lambda: t[0])
+    t[0] = 8.0
+    for h in range(8):
+        if h != 3:
+            c.heartbeat(h)
+    t[0] = 12.0
+    assert c.check() == {3}
+    # failed host's late heartbeat is ignored until re-admitted
+    c.heartbeat(3)
+    assert c.check() == {3}
+    c.admit(3)
+    assert c.check() == set()
+
+
+@given(st.integers(2, 1024), st.sets(st.integers(0, 1023), max_size=32))
+@settings(max_examples=30, deadline=None)
+def test_remesh_plan_properties(hosts, failed):
+    failed = {f for f in failed if f < hosts}
+    if len(failed) >= hosts:
+        return
+    plan = plan_remesh(hosts, failed, model=16)
+    # power-of-two world, no failed host used, ranks dense
+    assert plan.world & (plan.world - 1) == 0
+    assert not (set(plan.survivors) & failed)
+    assert sorted(plan.rank_map.values()) == list(range(plan.world))
+    assert plan.world <= hosts - len(failed)
+    assert plan.world * 2 > hosts - len(failed)   # largest pow2
+
+
+def test_remesh_pod_structure():
+    plan = plan_remesh(64, {5}, model=16, hosts_per_pod=16)
+    assert plan.new_pod == 2 and plan.new_data == 16
+    assert plan.tree.num_hosts == 32
+
+
+def test_straggler_report():
+    times = {i: 1.0 for i in range(8)}
+    times[6] = 5.0
+    assert straggler_report(times) == [6]
+    assert straggler_report({}) == []

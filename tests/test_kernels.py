@@ -1,0 +1,186 @@
+"""Per-kernel allclose sweeps vs the jnp oracles + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# tree_reduce
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [1, 2, 3, 4, 7, 8, 16, 32])
+@pytest.mark.parametrize("n", [256, 2048, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tree_reduce_matches_ref(p, n, dtype):
+    x = jnp.asarray(RNG.normal(size=(p, n)), dtype)
+    got = ops.tree_reduce(x)
+    pp = 1 << max(0, (p - 1).bit_length())
+    xp = jnp.concatenate([x, jnp.zeros((pp - p, n), dtype)]) if pp != p else x
+    want = ref.tree_reduce(xp)
+    assert got.dtype == x.dtype
+    assert np.array_equal(np.asarray(got), np.asarray(want)), \
+        "kernel must be bitwise-identical to the fixed-tree oracle"
+
+
+def test_tree_reduce_deterministic_vs_permutation():
+    # the fixed tree is NOT permutation invariant in fp — but IS a pure
+    # function of the stack: same input → same bits, twice
+    x = jnp.asarray(RNG.normal(size=(8, 1024)), jnp.float32)
+    a = np.asarray(ops.tree_reduce(x))
+    b = np.asarray(ops.tree_reduce(x))
+    assert np.array_equal(a, b)
+
+
+@given(st.integers(1, 16), st.integers(1, 8))
+@settings(max_examples=10, deadline=None)
+def test_tree_reduce_property_sum(p, nb):
+    n = nb * 256
+    rng = np.random.default_rng(p * 100 + nb)
+    x = jnp.asarray(rng.normal(size=(p, n)).astype(np.float32))
+    got = np.asarray(ops.tree_reduce(x))
+    want = np.asarray(x).sum(0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# quant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [256, 4096, 65536])
+@pytest.mark.parametrize("qblock", [128, 256, 512])
+def test_quant_matches_ref(n, qblock):
+    if n % qblock:
+        pytest.skip("padding covered separately")
+    x = jnp.asarray(RNG.normal(size=(n,)).astype(np.float32)) * 3
+    q, s = ops.quantize(x, qblock)
+    qr, sr = ref.quantize(x, qblock)
+    assert np.array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    d = ops.dequantize(q, s, qblock)
+    dr = ref.dequantize(q, s, qblock)
+    assert np.array_equal(np.asarray(d), np.asarray(dr))
+
+
+@given(st.integers(1, 64), st.floats(0.1, 100.0))
+@settings(max_examples=15, deadline=None)
+def test_quant_error_bound(nb, scale):
+    """|x - dq(q(x))| ≤ max|block| / 127 / 2 per quantization block."""
+    n = nb * 256
+    rng = np.random.default_rng(nb)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32)) * scale
+    q, s = ops.quantize(x, 256)
+    d = np.asarray(ops.dequantize(q, s, 256))
+    xb = np.asarray(x).reshape(-1, 256)
+    bound = np.abs(xb).max(1, keepdims=True) / 127.0 * 0.5001 + 1e-12
+    assert (np.abs(xb - d.reshape(-1, 256)) <= bound).all()
+
+
+# ---------------------------------------------------------------------------
+# topk_compact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 4, 16, 64])
+@pytest.mark.parametrize("block", [256, 512])
+def test_topk_matches_ref(k, block):
+    x = jnp.asarray(RNG.normal(size=(8 * block,)).astype(np.float32))
+    v, i = ops.topk_compact(x, k, block)
+    vr, ir = ref.topk_compact(x, k, block)
+    assert np.array_equal(np.asarray(v), np.asarray(vr))
+    assert np.array_equal(np.asarray(i), np.asarray(ir))
+
+
+@given(st.integers(1, 32))
+@settings(max_examples=10, deadline=None)
+def test_topk_semantics_vs_exact(k):
+    """Selected magnitudes must match the exact per-block top-k."""
+    rng = np.random.default_rng(k)
+    x = jnp.asarray(rng.normal(size=(4 * 512,)).astype(np.float32))
+    v, _ = ops.topk_compact(x, k, 512)
+    ve, _ = ref.topk_exact(x, k, 512)
+    got = np.sort(np.abs(np.asarray(v)), axis=1)
+    want = np.sort(np.abs(np.asarray(ve)), axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+
+def test_topk_sparse_vector():
+    """Real nonzeros must win over zero ties at the threshold; sparsify
+    drops the zero fills with -1 sentinels."""
+    x = np.zeros(1024, np.float32)
+    x[10] = 5.0
+    x[700] = -3.0
+    v, i = ops.topk_compact(jnp.asarray(x), 4, 512)
+    assert i[0, 0] == 10 and v[0, 0] == 5.0
+    assert (np.asarray(v[0, 1:]) == 0).all()      # zero tie fills
+    assert i[1, 0] == 700 - 512 and v[1, 0] == -3.0
+    vv, gi = ops.blockwise_sparsify(jnp.asarray(x), 4, 512)
+    gi = np.asarray(gi)
+    assert set(gi[gi >= 0]) == {10, 700}
+
+
+# ---------------------------------------------------------------------------
+# sparse_accum
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,size", [(8, 256), (512, 4096), (2048, 16384)])
+def test_sparse_accum_matches_ref(e, size):
+    idx = jnp.asarray(RNG.integers(-1, size, size=e).astype(np.int32))
+    val = jnp.asarray(RNG.normal(size=e).astype(np.float32))
+    got = ops.sparse_accum(idx, val, size)
+    want = ref.sparse_accum(idx, val, size)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 6))
+@settings(max_examples=8, deadline=None)
+def test_sparse_accum_linearity(seed):
+    rng = np.random.default_rng(seed)
+    e, size = 64, 2048
+    idx = jnp.asarray(rng.integers(0, size, size=e).astype(np.int32))
+    a = jnp.asarray(rng.normal(size=e).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=e).astype(np.float32))
+    lhs = np.asarray(ops.sparse_accum(idx, a + b, size))
+    rhs = np.asarray(ops.sparse_accum(idx, a, size)) + \
+        np.asarray(ops.sparse_accum(idx, b, size))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+def test_blockwise_sparsify_roundtrip():
+    x = jnp.asarray(RNG.normal(size=(8 * 512,)).astype(np.float32))
+    v, gi = ops.blockwise_sparsify(x, 1, 512)
+    dense = np.asarray(ops.sparse_accum(gi, v, x.shape[0]))
+    assert (dense != 0).sum() == 8
+    xb = np.asarray(x).reshape(8, 512)
+    for bidx in range(8):
+        j = np.abs(xb[bidx]).argmax()
+        assert dense[bidx * 512 + j] == xb[bidx, j]
+
+
+# ---------------------------------------------------------------------------
+# flash_attn (the §Perf memory-roofline kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("cap,win", [(0.0, 0), (30.0, 256)])
+def test_flash_attention_matches_exact(causal, cap, win):
+    from repro.kernels.flash_attn import flash_attention
+    from repro.models import base
+    rng = np.random.default_rng(0)
+    bh, s, hd = 4, 512, 64
+    q = jnp.asarray(rng.normal(size=(bh, s, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(bh, s, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(bh, s, hd)).astype(np.float32))
+    win = win if causal else 0
+    got = flash_attention(q, k, v, causal=causal, attn_cap=cap, window=win,
+                          q_tile=256, kv_tile=256)
+    want = base.attend(q.reshape(bh, s, 1, hd), k.reshape(bh, s, 1, hd),
+                       v.reshape(bh, s, 1, hd), causal=causal,
+                       attn_cap=cap, window=win)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want)[:, :, 0], atol=3e-5)

@@ -1,0 +1,93 @@
+"""The §Perf hillclimb levers must not change numerics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import base, get_model
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize("cap", [0.0, 30.0])
+def test_chunked_attention_matches_exact(causal, window, cap):
+    rng = np.random.default_rng(0)
+    b, s, h, kv, hd = 2, 64, 8, 4, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)).astype(np.float32))
+    a = base.attend(q, k, v, causal=causal, window=window, attn_cap=cap)
+    c = base.attend(q, k, v, causal=causal, window=window, attn_cap=cap,
+                    chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=2e-5)
+
+
+def test_moe_scatter_ar_matches_gather():
+    cfg_g = configs.load("qwen3_moe_235b_a22b").SMOKE.scaled(
+        dtype=jnp.float32)
+    cfg_s = cfg_g.scaled(moe_combine="scatter_ar")
+    key = jax.random.PRNGKey(0)
+    m_g, m_s = get_model(cfg_g), get_model(cfg_s)
+    params = m_g.init(key)
+    batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg_g.vocab),
+             "labels": jax.random.randint(key, (2, 32), 0, cfg_g.vocab)}
+    lg, gg = jax.value_and_grad(lambda p: m_g.loss(p, batch))(params)
+    ls, gs = jax.value_and_grad(lambda p: m_s.loss(p, batch))(params)
+    assert abs(float(lg) - float(ls)) < 1e-5
+    for a, b in zip(jax.tree.leaves(gg), jax.tree.leaves(gs)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+def test_dots_remat_matches_full():
+    cfg_f = configs.load("tinyllama_1_1b").SMOKE.scaled(dtype=jnp.float32)
+    cfg_d = cfg_f.scaled(remat_policy="dots")
+    key = jax.random.PRNGKey(0)
+    m_d, m_f = get_model(cfg_d), get_model(cfg_f)
+    p = m_f.init(key)
+    b = {"tokens": jax.random.randint(key, (2, 16), 0, cfg_f.vocab),
+         "labels": jax.random.randint(key, (2, 16), 0, cfg_f.vocab)}
+    ld, gd = jax.value_and_grad(lambda q: m_d.loss(q, b))(p)
+    lf, gf = jax.value_and_grad(lambda q: m_f.loss(q, b))(p)
+    assert abs(float(ld) - float(lf)) < 1e-6
+    for a, c in zip(jax.tree.leaves(gd), jax.tree.leaves(gf)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5)
+
+
+def test_model_level_chunked_attention():
+    cfg_f = configs.load("gemma2_2b").SMOKE.scaled(dtype=jnp.float32)
+    cfg_c = cfg_f.scaled(attn_chunk=8)
+    key = jax.random.PRNGKey(0)
+    m_f, m_c = get_model(cfg_f), get_model(cfg_c)
+    p = m_f.init(key)
+    b = {"tokens": jax.random.randint(key, (2, 16), 0, cfg_f.vocab),
+         "labels": jax.random.randint(key, (2, 16), 0, cfg_f.vocab)}
+    lf = m_f.loss(p, b)
+    lc = m_c.loss(p, b)
+    assert abs(float(lc) - float(lf)) < 1e-4
+
+
+def test_absorbed_mla_matches_naive():
+    import jax
+    S = 16
+    cfg = configs.load("deepseek_v2_lite_16b").SMOKE.scaled(
+        dtype=jnp.float32)
+    cfg_a = cfg.scaled(mla_absorbed=True)
+    m, ma = get_model(cfg), get_model(cfg_a)
+    key = jax.random.PRNGKey(1)
+    params = m.init(key)
+    toks = jax.random.randint(key, (2, S), 0, cfg.vocab)
+    _, cache = jax.jit(m.prefill)(params, {"tokens": toks[:, :-1]})
+
+    def grow(a):
+        if hasattr(a, "ndim") and a.ndim >= 3 and a.shape[2] == S - 1:
+            pad = jnp.zeros(a.shape[:2] + (1,) + a.shape[3:], a.dtype)
+            return jnp.concatenate([a, pad], axis=2)
+        return a
+    cache = jax.tree.map(grow, cache)
+    l_naive, _ = jax.jit(m.decode)(params, toks[:, -1:],
+                                   jax.tree.map(lambda x: x, cache))
+    l_abs, _ = jax.jit(ma.decode)(params, toks[:, -1:], cache)
+    rel = np.abs(np.asarray(l_naive) - np.asarray(l_abs)).max() \
+        / np.abs(np.asarray(l_naive)).max()
+    assert rel < 1e-4, rel

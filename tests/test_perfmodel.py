@@ -1,0 +1,166 @@
+"""Paper §4–§7 model + simulator validation (laptop-scale, deterministic)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.perfmodel import network_sim as ns
+from repro.perfmodel import switch_model as sm
+from repro.perfmodel import switch_sim as ss
+
+
+# ---------------------------------------------------------------------------
+# Analytic models (§4–§6).
+# ---------------------------------------------------------------------------
+
+def test_design_selection_thresholds():
+    """§6.4: tree <128KiB, 2 buffers, 4 buffers, single >512KiB."""
+    assert sm.select_design(64 << 10) == ("tree", 1)
+    assert sm.select_design(200 << 10) == ("multi", 2)
+    assert sm.select_design(400 << 10) == ("multi", 4)
+    assert sm.select_design(1 << 20) == ("single", 1)
+
+
+def test_fig10_orderings():
+    """Tree wins small sizes; single catches up and wins at large sizes."""
+    small = {d: sm.model_design(d, 16 << 10, B=b).bandwidth_tbps
+             for d, b in [("tree", 1), ("single", 1), ("multi", 4)]}
+    assert small["tree"] > small["single"]
+    assert small["tree"] > small["multi"]
+    big = {d: sm.model_design(d, 4 << 20, B=b).bandwidth_tbps
+           for d, b in [("tree", 1), ("single", 1), ("multi", 4)]}
+    assert big["single"] >= big["multi"] * 0.95
+    assert big["single"] >= big["tree"] * 0.95
+    # and the modeled switch beats the paper's reference systems
+    assert big["single"] > ss.SHARP_TBPS
+    assert small["tree"] > ss.SWITCHML_TBPS
+
+
+def test_eq1_queue_monotonicity():
+    """Eq. 1: smaller S (fewer cores per subset) → more buffered packets;
+    larger δ_c (staggered sending) → fewer."""
+    p = sm.SwitchParams()
+    K, tau = p.cores, p.packet_cycles
+    qs = [sm.input_buffer_pkts(64, K, s, sm.delta_k(s, p.delta, K, p.delta),
+                               tau) for s in (1, 2, 4, 8)]
+    assert all(a >= b - 1e-9 for a, b in zip(qs, qs[1:]))
+    qd = [sm.input_buffer_pkts(64, K, 8, sm.delta_k(8, dc, K, p.delta), tau)
+          for dc in (p.delta, 4 * p.delta, 64 * p.delta)]
+    assert all(a >= b - 1e-9 for a, b in zip(qd, qd[1:]))
+
+
+def test_tau_contention_model():
+    """Eq. 2: contention only when S>1 and δ_c < L."""
+    L, C = 1024.0, 8
+    assert sm.tau_single(L, C, 1, 0.0) == L
+    assert sm.tau_single(L, C, 8, 2 * L) == L
+    assert sm.tau_single(L, C, 8, 0.5 * L) == L * (C + 1) / 2
+
+
+@given(st.integers(2, 64), st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_tree_tau_bounds(p_, b):
+    """Tree τ < single-buffer contended τ; M_tree ≥ 1."""
+    L = 1024.0
+    assert sm.tau_tree(L, p_) <= L + 64.0
+    assert sm.buffers_per_block("tree", p_) >= 1.0
+    assert sm.buffers_per_block("multi", p_, b) == b
+
+
+def test_sparse_storage_model():
+    """Fig. 13: hash bw constant in density; array slower at low density,
+    faster at high density; both below the dense bandwidth."""
+    dense = sm.bandwidth_tbps(sm.SwitchParams(), 1024.0)
+    h = [sm.sparse_bandwidth_tbps("hash", d) for d in (0.001, 0.01, 0.2)]
+    a = [sm.sparse_bandwidth_tbps("array", d) for d in (0.001, 0.01, 0.2)]
+    assert max(h) - min(h) < 1e-6                      # constant
+    assert a[0] < h[0] < dense                          # low density
+    assert a[-1] > h[-1]                                # high density
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event simulator (Fig. 11 / Fig. 14).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_des_small_message_ordering(seed):
+    """Small data: tree > multi > single (contention collapse, Fig. 11)."""
+    z = 64 << 10
+    bw = {d: ss.simulate(d, z, B=b, P=64, seed=seed).bandwidth_tbps
+          for d, b in [("single", 1), ("multi", 4), ("tree", 1)]}
+    assert bw["tree"] > bw["multi"] > bw["single"]
+    assert bw["tree"] > ss.SWITCHML_TBPS
+
+
+def test_des_large_message_convergence():
+    """Large data + staggered sending: single catches up (≥3 Tbps zone)."""
+    z = 1 << 20
+    r = {d: ss.simulate(d, z, B=b, P=64) for d, b in
+         [("single", 1), ("multi", 4), ("tree", 1)]}
+    assert r["single"].bandwidth_tbps > 3.0
+    assert r["single"].bandwidth_tbps > 0.8 * r["tree"].bandwidth_tbps
+    # single buffer has the lowest working memory (M=1)
+    assert r["single"].max_working_memory_bytes <= \
+        r["tree"].max_working_memory_bytes
+
+
+def test_des_dtype_vectorization():
+    """Fig. 11 right: smaller dtypes → more elements/s (sub-word SIMD)."""
+    z = 1 << 20
+    elems = {}
+    for dt, eb in [("int32", 4), ("int16", 2), ("int8", 1)]:
+        r = ss.simulate("single", z, P=64,
+                        cycles_per_byte=ss.CYCLES_PER_BYTE[dt])
+        elems[dt] = r.bandwidth_tbps / 8 / eb    # Telem/s
+    assert elems["int8"] > elems["int16"] > elems["int32"]
+
+
+def test_des_sparse_spill_traffic():
+    """Fig. 14: hash-storage spill traffic grows with density."""
+    lo = ss.simulate("single", 1 << 20, P=64, sparse_density=0.01)
+    hi = ss.simulate("single", 1 << 20, P=64, sparse_density=0.2)
+    assert hi.extra_traffic_bytes > lo.extra_traffic_bytes
+    assert lo.blocks_completed > 0
+
+
+def test_des_conservation():
+    """Every block of every host must complete exactly once."""
+    z = 256 << 10
+    payload = 1024
+    r = ss.simulate("tree", z, P=64)
+    assert r.blocks_completed == z // payload
+
+
+# ---------------------------------------------------------------------------
+# Fat-tree network simulation (Fig. 15).
+# ---------------------------------------------------------------------------
+
+def test_fig15_time_ordering():
+    out = ns.figure15()
+    t = {k: v.time_us for k, v in out.items()}
+    assert t["flare_sparse"] < t["sparcml"] < t["innet_dense"] \
+        < t["host_ring"]
+
+
+def test_fig15_dense_claims():
+    """Paper: in-network dense ≈ 2x faster than host ring, 2x less traffic."""
+    out = ns.figure15()
+    ring, dense = out["host_ring"], out["innet_dense"]
+    assert 1.8 < ring.time_us / dense.time_us < 2.5
+    assert 1.7 < ring.network_bytes / dense.network_bytes < 2.3
+
+
+def test_fig15_sparse_claims():
+    """Paper: Flare sparse beats SparCML (time + traffic) and in-network
+    dense (13x traffic reduction regime)."""
+    out = ns.figure15()
+    f, s, d = out["flare_sparse"], out["sparcml"], out["innet_dense"]
+    assert f.time_us < s.time_us
+    assert f.network_bytes < s.network_bytes
+    ratio_vs_dense = d.network_bytes / f.network_bytes
+    assert 8 < ratio_vs_dense < 25      # paper reports up to 13x
+
+
+def test_densification_toward_root():
+    """§7: merged density grows monotonically with fan-in."""
+    ds = [ns._union_density(0.002, n, 0.15) for n in (1, 8, 64)]
+    assert ds[0] < ds[1] < ds[2]

@@ -1,0 +1,107 @@
+"""Sharding rules: every full config must partition cleanly on the
+production mesh, and the FSDP gather lookup must be unambiguous."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models import get_model
+from repro.sharding import rules
+
+MESHES = [rules.MeshCfg(("data", "model"), (16, 16)),
+          rules.MeshCfg(("pod", "data", "model"), (2, 16, 16))]
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+@pytest.mark.parametrize("mesh", MESHES, ids=["16x16", "2x16x16"])
+def test_full_config_specs_divide(arch, mesh):
+    cfg = configs.load(arch).CONFIG
+    m = get_model(cfg)
+    shapes = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    full, manual, dims = rules.param_specs(shapes, mesh)
+    axis_size = dict(zip(mesh.axes, mesh.shape))
+    for (path, leaf), spec in zip(
+            jax.tree_util.tree_flatten_with_path(shapes)[0],
+            jax.tree.leaves(full, is_leaf=lambda x: isinstance(x, P))):
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            names = names if isinstance(names, tuple) else (names,)
+            div = int(np.prod([axis_size[n] for n in names]))
+            assert leaf.shape[dim] % div == 0, \
+                f"{arch}: {jax.tree_util.keystr(path)} dim {dim} " \
+                f"{leaf.shape} not divisible by {div}"
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_gather_lookup_unambiguous(arch):
+    """make_gather must build without ambiguity for full + smoke configs."""
+    for which in ("CONFIG", "SMOKE"):
+        cfg = getattr(configs.load(arch), which)
+        m = get_model(cfg)
+        shapes = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+        for mesh in MESHES:
+            rules.make_gather(mesh, "rhd", shapes)   # raises on conflict
+
+
+def test_fsdp_coverage():
+    """Most parameter bytes must actually be FSDP-sharded (ZeRO works)."""
+    mesh = MESHES[0]
+    for arch in ["llama32_vision_90b", "qwen3_moe_235b_a22b", "gemma2_27b"]:
+        cfg = configs.load(arch).CONFIG
+        m = get_model(cfg)
+        shapes = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+        _, _, dims = rules.param_specs(shapes, mesh)
+        tot = cov = 0
+        for leaf, d in zip(jax.tree.leaves(shapes), jax.tree.leaves(dims)):
+            n = int(np.prod(leaf.shape))
+            tot += n
+            if d >= 0:
+                cov += n
+        assert cov / tot > 0.95, f"{arch}: only {cov/tot:.1%} FSDP-covered"
+
+
+def test_cache_specs_long_context():
+    """500k decode: KV/state caches must shard sequence or heads over
+    model, batch over data when divisible."""
+    mesh = MESHES[0]
+    cfg = configs.load("zamba2_1_2b").CONFIG
+    m = get_model(cfg)
+    cache = jax.eval_shape(lambda: m.init_cache(128, 32768))
+    specs = rules.cache_specs(cache, mesh)
+    flat = {jax.tree_util.keystr(p): s for p, s in
+            jax.tree_util.tree_flatten_with_path(specs)[0]}
+    k_spec = [v for k, v in flat.items() if k.endswith("['k']")][0]
+    assert "model" in str(k_spec)
+    ssm_spec = [v for k, v in flat.items() if k.endswith("['ssm']")][0]
+    assert "model" in str(ssm_spec)
+
+
+def test_batch_spec_fallbacks():
+    mesh = MESHES[1]   # pod x data x model, data world 32
+    b = {"tokens": jax.ShapeDtypeStruct((128, 10), jnp.int32)}
+    assert rules.batch_spec(b, mesh)["tokens"][0] == ("pod", "data")
+    b1 = {"tokens": jax.ShapeDtypeStruct((1, 10), jnp.int32)}
+    assert rules.batch_spec(b1, mesh)["tokens"] == P()
+
+
+def test_decide_consistency_local_vs_global():
+    """The regression behind the first dry-run failure: local-shard and
+    global decisions must agree through the lookup mechanism."""
+    mesh = rules.MeshCfg(("data", "model"), (16, 16))
+    shapes = {"layers": {"attn": {
+        "wv": jax.ShapeDtypeStruct((22, 2048, 256), jnp.float32)}}}
+    gather_fn = rules.make_gather(mesh, "rhd", shapes)
+    # sliced local shard: (2048/16, 256) → must be recognized as sharded
+    local = {"attn": {"wv": jnp.zeros((128, 256))}}
+    # outside shard_map gather_params will fail on axis lookup, but the
+    # decision layer must at least attempt the gather (raises inside jax)
+    try:
+        gather_fn(local)
+        gathered = True
+    except Exception as e:
+        gathered = "axis" in str(e).lower() or "unbound" in str(
+            e).lower() or "name" in str(e).lower()
+    assert gathered

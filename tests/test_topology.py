@@ -1,0 +1,68 @@
+"""Reduction tree + network-manager control plane (paper §1, §4)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology
+
+
+@given(st.integers(1, 500), st.integers(2, 32))
+@settings(max_examples=40, deadline=None)
+def test_tree_structure(hosts, radix):
+    t = topology.build_tree(hosts, radix)
+    assert len(t.levels[0]) == hosts
+    assert len(t.levels[-1]) == 1
+    assert t.root.is_root
+    # every non-root node has a parent; children counts ≤ radix
+    for n in t.nodes:
+        if not n.is_root:
+            assert n.parent is not None
+        assert len(n.children) <= radix
+    # every host is reachable from the root
+    seen = set()
+    stack = [t.root.node_id]
+    while stack:
+        nid = stack.pop()
+        seen.add(nid)
+        stack.extend(t.nodes[nid].children)
+    assert set(range(hosts)) <= seen
+
+
+def test_in_network_traffic_reduction():
+    """The paper's headline: each host sends Z (vs ~2Z for the ring)."""
+    t = topology.build_tree(64, 16)
+    z = 100 << 20
+    assert t.wire_bytes_per_host(z) == z
+    ring_bytes_per_host = 2 * z * 63 / 64
+    assert ring_bytes_per_host / t.wire_bytes_per_host(z) > 1.9
+
+
+def test_rebuild_excluding():
+    t = topology.build_tree(16, 4)
+    t2 = topology.rebuild_excluding(t, [3, 7])
+    assert t2.num_hosts == 14
+    with pytest.raises(ValueError):
+        topology.rebuild_excluding(t, list(range(16)))
+
+
+def test_network_manager_admission():
+    nm = topology.NetworkManager(max_concurrent=2)
+    a = nm.request(64)
+    b = nm.request(64)
+    assert a and b and a.allreduce_id != b.allreduce_id
+    assert nm.request(64) is None          # rejected → host-based fallback
+    nm.release(a.allreduce_id)
+    assert nm.request(64) is not None      # slot freed
+    assert nm.bytes_per_allreduce * nm.max_concurrent <= nm.l1_bytes
+
+
+def test_inflight_block_budget():
+    """§4.3 Little's-law sizing: in-flight blocks ≤ buffers/M."""
+    nm = topology.NetworkManager(max_concurrent=4)
+    lease = nm.request(64)
+    assert nm.max_inflight_blocks(lease, buffers_per_block=1) \
+        >= nm.max_inflight_blocks(lease, buffers_per_block=4)
+
+
+def test_mesh_axes_as_tree():
+    t = topology.mesh_axes_as_tree((2, 16))
+    assert t.num_hosts == 32
