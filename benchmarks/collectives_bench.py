@@ -1,65 +1,142 @@
 """JAX-side collective microbenchmark.
 
-Two parts:
+Three parts:
   * analytic wire bytes per algorithm (the §6.4 switchover on the wire);
   * wall-clock of our shard_map collectives on 8 fake CPU devices,
-    executed in a subprocess (the parent process must keep 1 device).
+    executed in a subprocess (the parent process must keep 1 device);
+  * the **GradReducer end-to-end benchmark**: the seed per-bucket Python
+    dispatch loop (``FlareConfig(arena=False)``) vs the flat-arena
+    pipelined hot path (``arena=True``) on the same gradient pytree —
+    the headline number of the arena PR, persisted to
+    ``BENCH_collectives.json`` at the repo root so the perf trajectory
+    is tracked across PRs.
 """
+import json
 import os
 import subprocess
 import sys
 
 from repro.core import collectives as coll
 
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_collectives.json")
+
 _CHILD = r"""
 import os, time
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
 from repro.core import collectives as coll
+from repro.core.engine import FlareConfig, GradReducer
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+
+def timeit(fn, *args, iters=5):
+    fn(*args)                       # compile + warm
+    jax.block_until_ready(fn(*args))
+    best = float("inf")             # min over repeats: robust to CI load
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# --- raw collective wall-clock (seed benchmark, kept) ----------------------
+mesh = compat.make_mesh((2, 4), ("pod", "data"))
 Z = 1 << 22
 x = jnp.ones((8, Z), jnp.float32)
-for alg in ["ring", "rhd", "fixed_tree", "two_level", "psum"]:
-    fn = jax.jit(jax.shard_map(
-        lambda v, a=alg: coll.allreduce(v[0], ("pod", "data"), algorithm=a),
-        in_specs=(P(("pod", "data"), None),), out_specs=P(None),
-        axis_names={"pod", "data"}, check_vma=False))
-    with jax.set_mesh(mesh):
-        xd = jax.device_put(x, NamedSharding(mesh, P(("pod", "data"), None)))
-        fn(xd).block_until_ready()
-        t0 = time.perf_counter()
-        for _ in range(3):
-            fn(xd).block_until_ready()
-        dt = (time.perf_counter() - t0) / 3
-    print(f"collectives.{alg}.Z16MiB.us_per_call,{dt*1e6:.0f},8dev_cpu")
+with compat.set_mesh(mesh):
+    xd = jax.device_put(x, NamedSharding(mesh, P(("pod", "data"), None)))
+    for alg in ["ring", "ring_pipelined", "rhd", "fixed_tree", "two_level",
+                "psum"]:
+        fn = jax.jit(compat.shard_map(
+            lambda v, a=alg: coll.allreduce(v[0], ("pod", "data"),
+                                            algorithm=a),
+            in_specs=(P(("pod", "data"), None),), out_specs=P(None),
+            axis_names={"pod", "data"}, check_vma=False))
+        dt = timeit(fn, xd, iters=3)
+        print(f"collectives.{alg}.Z16MiB.us_per_call,{dt*1e6:.0f},8dev_cpu")
+
+# --- GradReducer end-to-end: seed loop vs arena pipeline -------------------
+# the GradReducer's production workload in this repo: the *replicated*
+# gradient leaves (norms, biases, routers, gates — FSDP leaves go through
+# gather_params' reduce-scatter instead).  ~192 small tensors, ~1.6 MiB,
+# 64 KiB reduction blocks → ~26 blocks in flight: the latency-bound
+# regime where the paper's B-concurrent-buffers argument (§6.2, §5)
+# bites — the seed loop pays 2B(P-1) serialized collective rounds, the
+# arena schedule 2(P-1) batched ones.
+rng = np.random.default_rng(0)
+grads = {}
+for i in range(192):
+    n = int(rng.integers(256, 4096))
+    grads[f"p{i}"] = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+total = sum(int(np.prod(g.shape)) for g in grads.values())
+in_specs = {k: P() for k in grads}
+
+mesh8 = compat.make_mesh((8,), ("data",))
+with compat.set_mesh(mesh8):
+    gd = {k: jax.device_put(v, NamedSharding(mesh8, P()))
+          for k, v in grads.items()}
+    times = {}
+    for label, arena, alg in [("legacy_loop", False, "ring"),
+                              ("arena_pipeline", True, "ring"),
+                              ("legacy_auto", False, "auto"),
+                              ("arena_auto", True, "auto")]:
+        red = GradReducer(FlareConfig(axes=("data",), algorithm=alg,
+                                      bucket_bytes=64 << 10, arena=arena))
+        fn = jax.jit(compat.shard_map(
+            lambda g, red=red: red(g)[0], in_specs=(in_specs,),
+            out_specs=in_specs, axis_names={"data"}, check_vma=False))
+        times[label] = timeit(fn, gd, iters=7)
+        print(f"gradreducer.{label}.us_per_call,{times[label]*1e6:.0f},"
+              f"8dev_cpu_{total*4>>10}KiB_{len(grads)}leaves")
+speedup = times["legacy_loop"] / times["arena_pipeline"]
+print(f"gradreducer.arena_speedup_x,{speedup:.2f},legacy/arena_ring")
+speedup_auto = times["legacy_auto"] / times["arena_auto"]
+print(f"gradreducer.arena_speedup_auto_x,{speedup_auto:.2f},legacy/arena_auto")
 """
 
 
-def run():
+def run(write_json: bool = True):
     rows = []
     z = 16 << 20
-    for alg in ["ring", "rhd", "fixed_tree", "two_level", "psum"]:
+    for alg in ["ring", "ring_pipelined", "rhd", "fixed_tree", "two_level",
+                "psum"]:
         wb = coll.wire_bytes_per_rank(z, 16, 2, algorithm=alg)
         rows.append((f"collectives.{alg}.wire_bytes_per_rank.Z16MiB",
                      int(wb), f"ratio_to_Z={wb/z:.2f}"))
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(os.path.dirname(__file__), "..", "src"),
-         env.get("PYTHONPATH", "")])
+        [os.path.join(_ROOT, "src"), env.get("PYTHONPATH", "")])
+    ok = False
     try:
         out = subprocess.run([sys.executable, "-c", _CHILD],
-                             capture_output=True, text=True, timeout=600,
+                             capture_output=True, text=True, timeout=900,
                              env=env)
+        if out.returncode != 0:                         # pragma: no cover
+            raise RuntimeError(out.stderr[-2000:])
         for line in out.stdout.splitlines():
-            if line.startswith("collectives."):
+            if line.startswith(("collectives.", "gradreducer.")):
                 name, val, der = line.split(",")
                 rows.append((name, float(val), der))
+        ok = True
     except Exception as e:                              # pragma: no cover
         rows.append(("collectives.wallclock.error", 0, repr(e)))
+    if write_json and ok:
+        # only persist complete runs: a failed child must not overwrite
+        # the tracked perf trajectory with a wall-clock-less record
+        write_bench_json(rows)
     return rows
+
+
+def write_bench_json(rows, path: str = BENCH_JSON) -> None:
+    """Persist the wall-clock rows (the tracked perf trajectory)."""
+    record = {name: {"value": val, "derived": der}
+              for name, val, der in rows}
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+        f.write("\n")
 
 
 if __name__ == "__main__":

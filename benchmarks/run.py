@@ -2,17 +2,29 @@
 
 Prints ``name,value,derived`` CSV.  Figure benchmarks are deterministic
 models/simulations; ``collectives_bench`` adds wall-clock numbers from an
-8-device subprocess; ``roofline`` reads the dry-run artifacts if present.
+8-device subprocess (and persists them to ``BENCH_collectives.json`` at
+the repo root — the tracked perf trajectory); ``roofline`` reads the
+dry-run artifacts if present.
+
+``--json`` runs only the collective wall-clock benchmark and (re)writes
+``BENCH_collectives.json``.
 """
 import sys
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
     from benchmarks import (collectives_bench, fig07_single_buffer,
                             fig10_aggregation, fig11_switch_bw,
                             fig13_sparse_model, fig14_sparse_sim,
                             fig15_network, roofline)
+    if "--json" in argv:
+        print("name,value,derived")
+        for name, val, derived in collectives_bench.run(write_json=True):
+            print(f"{name},{val},{derived}")
+        print(f"wrote {collectives_bench.BENCH_JSON}", file=sys.stderr)
+        return
     modules = [fig07_single_buffer, fig10_aggregation, fig11_switch_bw,
                fig13_sparse_model, fig14_sparse_sim, fig15_network,
                collectives_bench, roofline]

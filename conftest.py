@@ -1,0 +1,19 @@
+"""Repo-root pytest bootstrap.
+
+Puts ``src`` on ``sys.path`` so ``python -m pytest -q`` works without the
+``PYTHONPATH=src`` incantation, and installs the offline ``hypothesis``
+stand-in when the real package isn't available (the container has no
+network access; five tier-1 modules import it at collection time).
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when installed)
+except ImportError:
+    from repro import _hypothesis_stub
+    _hypothesis_stub.install()

@@ -11,10 +11,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import collectives as coll, compression, reproducible, sparse
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((2, 4), ("pod", "data"))
 Z = 1 << 16
 rng = np.random.default_rng(0)
 contrib = jnp.asarray(rng.normal(size=(8, Z)).astype(np.float32))
@@ -22,17 +22,19 @@ oracle = np.asarray(contrib).sum(0)
 
 
 def run(fn):
-    g = jax.jit(jax.shard_map(fn, in_specs=(P(("pod", "data"), None),),
-                              out_specs=P(None),
-                              axis_names={"pod", "data"}, check_vma=False))
-    with jax.set_mesh(mesh):
+    g = jax.jit(compat.shard_map(fn, in_specs=(P(("pod", "data"), None),),
+                                 out_specs=P(None),
+                                 axis_names={"pod", "data"},
+                                 check_vma=False))
+    with compat.set_mesh(mesh):
         x = jax.device_put(contrib,
                            NamedSharding(mesh, P(("pod", "data"), None)))
         return np.asarray(g(x))
 
 
 print(f"allreduce of {Z} floats across a 2-pod x 4-chip mesh\n")
-for alg in ["ring", "rhd", "fixed_tree", "two_level", "psum", "auto"]:
+for alg in ["ring", "ring_pipelined", "rhd", "fixed_tree",
+            "two_level", "psum", "auto"]:
     out = run(lambda x, a=alg: coll.allreduce(x[0], ("pod", "data"),
                                               algorithm=a))
     wire = coll.wire_bytes_per_rank(Z * 4, 4, 2, algorithm=alg

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import compat, configs
 from repro.core.engine import FlareConfig
 from repro.core.sparse import expected_sparse_wire_bytes
 from repro.core import collectives as coll
@@ -21,8 +21,7 @@ from repro.train import trainer
 
 cfg = configs.load("tinyllama-1.1b").SMOKE.scaled(dtype=jnp.float32)
 model = get_model(cfg)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 mcfg = rules.MeshCfg(("data", "model"), (4, 2))
 key = jax.random.PRNGKey(0)
 batch = {"tokens": jax.random.randint(key, (8, 32), 0, cfg.vocab),
@@ -41,7 +40,7 @@ MODES = {
 print(f"{'mode':<14}{'final loss':>12}{'grad wire bytes/rank':>24}")
 for name, fc in MODES.items():
     tcfg = trainer.TrainConfig(lr=5e-3, flare=fc)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         fn, param_sh, opt_sh, batch_sh, init_opt = trainer.jit_train_step(
             model, mesh, mcfg, tcfg, jax.eval_shape(model.init, key),
             batch_shapes, donate=False)

@@ -17,6 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core.engine import FlareConfig
 from repro.data import pipeline
 from repro.ft import CheckpointManager
@@ -46,8 +47,7 @@ def main():
         vocab=args.vocab, dtype=jnp.float32)
     model = get_model(cfg)
 
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 2), ("data", "model"))
     mcfg = rules.MeshCfg(("data", "model"), (2, 2))
     tcfg = trainer.TrainConfig(
         lr=args.lr,
@@ -59,7 +59,7 @@ def main():
     batch_shapes = jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch0)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         fn, param_sh, opt_sh, batch_sh, init_opt = trainer.jit_train_step(
             model, mesh, mcfg, tcfg, jax.eval_shape(model.init, key),
             batch_shapes)

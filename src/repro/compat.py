@@ -1,0 +1,93 @@
+"""JAX version-compat shims.
+
+The repo targets the modern mesh API (``jax.shard_map`` with
+``axis_names``, ``jax.set_mesh``, ``jax.sharding.AxisType``); the pinned
+container ships jax 0.4.37 which predates all three.  Every call site
+that touches those surfaces routes through this module so the rest of
+the codebase is written once, against the new names:
+
+  * :func:`shard_map` — new-style keyword signature; falls back to
+    ``jax.experimental.shard_map`` with the mesh resolved from the
+    ambient ``with set_mesh(...)`` context at trace time, and
+    ``axis_names`` translated to the complementary ``auto`` frozenset.
+  * :func:`set_mesh` — ``jax.set_mesh`` or the ``with mesh:`` context.
+  * :func:`make_mesh` — drops ``axis_types`` when unsupported.
+  * :func:`axis_size` — ``lax.axis_size`` or the static ``psum(1, axis)``
+    trick (both return a Python int inside a manual region).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+from jax import lax
+
+HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+HAS_SET_MESH = hasattr(jax, "set_mesh")
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+HAS_AXIS_SIZE = hasattr(lax, "axis_size")
+
+
+def axis_size(axis: str) -> int:
+    """Static size of a manual mesh axis (Python int at trace time)."""
+    if HAS_AXIS_SIZE:
+        return lax.axis_size(axis)
+    return lax.psum(1, axis)
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with ``axis_types`` only where supported."""
+    if HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            axis_shapes, axis_names, devices=devices,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_shapes))
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    return mesh        # Mesh is itself a context manager in old jax
+
+
+def _ambient_mesh():
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    if m.empty:
+        raise RuntimeError(
+            "compat.shard_map on jax<0.5 needs the mesh from the ambient "
+            "context — call inside `with compat.set_mesh(mesh):`")
+    return m
+
+
+def shard_map(f: Callable, *, in_specs: Any, out_specs: Any,
+              axis_names: set | frozenset, check_vma: bool = False,
+              mesh=None) -> Callable:
+    """New-style ``jax.shard_map`` signature on any supported jax.
+
+    ``axis_names`` are the manual axes; every other mesh axis stays auto.
+    On old jax the mesh is read from ``mesh`` or, at trace time, from the
+    ambient ``with set_mesh(...)`` context (so jitted callables built
+    outside the context still work, matching new-jax semantics).
+    """
+    if HAS_NEW_SHARD_MAP:
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
+                             axis_names=set(axis_names), check_vma=check_vma)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(f)
+    def deferred(*args):
+        m = mesh if mesh is not None else _ambient_mesh()
+        # 0.4.37's partial-auto mode miscompiles collectives (axis_index
+        # lowers to an unpartitionable partition-id; ppermute hard-aborts
+        # in the SPMD partitioner), so the fallback runs every mesh axis
+        # manual.  Axes outside ``axis_names`` appear replicated inside
+        # the region — correct (nothing in-tree issues collectives on
+        # them), merely forgoing auto-partitioning there on old jax.
+        return _shard_map(f, m, in_specs=in_specs, out_specs=out_specs,
+                          check_rep=False)(*args)
+
+    return deferred

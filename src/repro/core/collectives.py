@@ -44,6 +44,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size as _axis_size
+
 Op = Callable[[jax.Array, jax.Array], jax.Array]
 
 
@@ -94,7 +96,7 @@ def ring_reduce_scatter(x: jax.Array, axis: str, *, op: Op = jnp.add,
     their traffic never contends for the same chunk/link at the same step.
     ``x.shape[0]`` must be divisible by the axis size.
     """
-    p = lax.axis_size(axis)
+    p = _axis_size(axis)
     r = lax.axis_index(axis)
     if x.shape[0] % p:
         raise ValueError(f"ring_reduce_scatter: len {x.shape[0]} % {p} != 0")
@@ -114,7 +116,7 @@ def ring_reduce_scatter(x: jax.Array, axis: str, *, op: Op = jnp.add,
 
 def ring_all_gather(chunk: jax.Array, axis: str, *, stagger: int = 0) -> jax.Array:
     """Inverse of ``ring_reduce_scatter``: gather P chunks back to a vector."""
-    p = lax.axis_size(axis)
+    p = _axis_size(axis)
     r = lax.axis_index(axis)
     perm = _ring_perm(p)
     out0 = jnp.zeros((p,) + chunk.shape, chunk.dtype)
@@ -133,10 +135,142 @@ def ring_all_gather(chunk: jax.Array, axis: str, *, stagger: int = 0) -> jax.Arr
 def allreduce_ring(x: jax.Array, axis: str, *, op: Op = jnp.add,
                    stagger: int = 0) -> jax.Array:
     """Rabenseifner ring allreduce: ~2Z(P-1)/P bytes per rank on the wire."""
-    p = lax.axis_size(axis)
+    p = _axis_size(axis)
     xp, n = pad_to_multiple(x, p)
     chunk = ring_reduce_scatter(xp, axis, op=op, stagger=stagger)
     full = ring_all_gather(chunk, axis, stagger=stagger)
+    return full[:n]
+
+
+# ---------------------------------------------------------------------------
+# Pipelined ring — fused reduce-scatter/all-gather waves (§6.2, §5).
+# ---------------------------------------------------------------------------
+#
+# The paper's multi-buffer aggregation keeps B reduction blocks in flight:
+# while block b's reduced chunks travel back down (all-gather), block b+1's
+# chunks are still being combined on the way up (reduce-scatter).  Two
+# realizations here:
+#   * ``allreduce_ring_pipelined`` — the double-buffer (B=2) form for one
+#     vector: the middle wave carries one all-gather chunk and one
+#     reduce-scatter chunk per ppermute (the _fused_wave helper).  It is
+#     bitwise-equal to ``allreduce_ring`` because each element keeps its
+#     ring-chunk index (the two buffers are the front/back halves of
+#     every chunk).
+#   * ``ring_allreduce_bucketed`` — B arbitrary blocks at once via the
+#     vmapped ring: every round batches all B blocks' chunks into ONE
+#     ppermute, 2(P-1) collective rounds total instead of the 2B(P-1) a
+#     per-bucket loop costs.
+
+
+def _rs_wave(src: jax.Array, axis: str, perm, r, p: int, stagger, op: Op
+             ) -> jax.Array:
+    """Plain reduce-scatter of one (p, chunk) block: p-1 rounds."""
+    acc0 = jnp.take(src, (r + stagger) % p, axis=0)
+
+    def body(s, acc):
+        recv = lax.ppermute(acc, axis, perm)
+        mine = jnp.take(src, (r - s - 1 + stagger) % p, axis=0)
+        return op(mine, recv)
+
+    return lax.fori_loop(0, p - 1, body, acc0)
+
+
+def _ag_seed(acc: jax.Array, r, p: int, stagger) -> jax.Array:
+    out = jnp.zeros((p,) + acc.shape, acc.dtype)
+    return lax.dynamic_update_index_in_dim(out, acc, (r + 1 + stagger) % p, 0)
+
+
+def _ag_wave(acc: jax.Array, axis: str, perm, r, p: int, stagger
+             ) -> jax.Array:
+    """Plain all-gather of one reduced chunk: p-1 rounds, returns (p, chunk)."""
+    out0 = _ag_seed(acc, r, p, stagger)
+
+    def body(s, carry):
+        out, send = carry
+        recv = lax.ppermute(send, axis, perm)
+        out = lax.dynamic_update_index_in_dim(out, recv,
+                                              (r - s + stagger) % p, 0)
+        return out, recv
+
+    out, _ = lax.fori_loop(0, p - 1, body, (out0, acc))
+    return out
+
+
+def _fused_wave(prev_acc: jax.Array, prev_stagger, src: jax.Array,
+                axis: str, perm, r, p: int, stagger, op: Op
+                ) -> tuple[jax.Array, jax.Array]:
+    """All-gather of the previous block fused with reduce-scatter of the
+    next: each of the p-1 rounds moves both chunks in ONE ppermute."""
+    out_prev0 = _ag_seed(prev_acc, r, p, prev_stagger)
+    acc0 = jnp.take(src, (r + stagger) % p, axis=0)
+
+    def body(s, carry):
+        out_prev, send_prev, acc = carry
+        recv = lax.ppermute(jnp.stack([send_prev, acc]), axis, perm)
+        out_prev = lax.dynamic_update_index_in_dim(
+            out_prev, recv[0], (r - s + prev_stagger) % p, 0)
+        mine = jnp.take(src, (r - s - 1 + stagger) % p, axis=0)
+        return out_prev, recv[0], op(mine, recv[1])
+
+    out_prev, _, acc = lax.fori_loop(0, p - 1, body,
+                                     (out_prev0, prev_acc, acc0))
+    return out_prev, acc
+
+
+def ring_allreduce_bucketed(arena: jax.Array, axis: str, *, op: Op = jnp.add,
+                            staggers: jax.Array | None = None) -> jax.Array:
+    """Ring allreduce of B equal-size buckets with all B blocks in flight.
+
+    ``arena`` is ``(B, S)`` with ``S`` divisible by the axis size (the
+    arena plan guarantees this).  The schedule is the vmapped ring: round
+    s of *every* bucket's reduce-scatter (then all-gather) executes as
+    ONE batched ppermute carrying a ``(B, S/P)`` payload — the paper's B
+    concurrent reduction blocks sharing the network (§6.2), each offset
+    by its own ``stagger`` phase (§5) so no two blocks touch the same
+    chunk index in the same round.  2(P-1) collective rounds total,
+    versus 2B(P-1) for the seed's one-bucket-at-a-time loop; per bucket
+    the combine chain is exactly ``allreduce_ring``'s, so results are
+    bitwise-equal to the per-bucket loop.
+    """
+    b, size = arena.shape
+    p = _axis_size(axis)
+    if p == 1:
+        return arena
+    if size % p:
+        raise ValueError(f"ring_allreduce_bucketed: S {size} % {p} != 0")
+    if staggers is None:
+        staggers = jnp.zeros((b,), jnp.int32)
+    return jax.vmap(
+        lambda v, s: allreduce_ring(v, axis, op=op, stagger=s)
+    )(arena, staggers)
+
+
+def allreduce_ring_pipelined(x: jax.Array, axis: str, *, op: Op = jnp.add,
+                             stagger: int = 0) -> jax.Array:
+    """Double-buffered ring allreduce of one flat vector (§6.2).
+
+    The vector's P ring chunks are each split front/back into two
+    in-flight buffers; the middle wave interleaves the all-gather of
+    buffer 0 with the reduce-scatter of buffer 1 in fused sends.  Every
+    element keeps its ``allreduce_ring`` chunk index and combine chain, so
+    for sizes divisible by 2P the result is bitwise-identical to
+    ``allreduce_ring`` (and numerically equal otherwise).
+    """
+    p = _axis_size(axis)
+    if p == 1:
+        return x
+    xp, n = pad_to_multiple(x, 2 * p)
+    m = xp.shape[0] // (2 * p)
+    halves = xp.reshape(p, 2, m)
+    front, back = halves[:, 0, :], halves[:, 1, :]
+    r = lax.axis_index(axis)
+    perm = _ring_perm(p)
+
+    acc_f = _rs_wave(front, axis, perm, r, p, stagger, op)
+    out_f, acc_b = _fused_wave(acc_f, stagger, back, axis, perm, r, p,
+                               stagger, op)
+    out_b = _ag_wave(acc_b, axis, perm, r, p, stagger)
+    full = jnp.stack([out_f, out_b], axis=1).reshape(2 * p * m)
     return full[:n]
 
 
@@ -154,7 +288,7 @@ def rhd_reduce_scatter(x: jax.Array, axis: str, *, op: Op = jnp.add) -> jax.Arra
     Rank ``r`` ends with the segment at bit-reversed position; use
     ``rhd_all_gather`` to invert.
     """
-    p = lax.axis_size(axis)
+    p = _axis_size(axis)
     if not _is_pow2(p):
         raise ValueError(f"rhd requires power-of-two axis size, got {p}")
     r = lax.axis_index(axis)
@@ -176,7 +310,7 @@ def rhd_reduce_scatter(x: jax.Array, axis: str, *, op: Op = jnp.add) -> jax.Arra
 
 def rhd_all_gather(seg: jax.Array, axis: str) -> jax.Array:
     """Distance-halving all-gather inverting ``rhd_reduce_scatter``."""
-    p = lax.axis_size(axis)
+    p = _axis_size(axis)
     r = lax.axis_index(axis)
     steps = p.bit_length() - 1
     for k in reversed(range(steps)):
@@ -192,7 +326,7 @@ def rhd_all_gather(seg: jax.Array, axis: str) -> jax.Array:
 
 def allreduce_rhd(x: jax.Array, axis: str, *, op: Op = jnp.add) -> jax.Array:
     """Recursive halving-doubling allreduce (multi-buffer design analogue)."""
-    p = lax.axis_size(axis)
+    p = _axis_size(axis)
     xp, n = pad_to_multiple(x, p)
     seg = rhd_reduce_scatter(xp, axis, op=op)
     full = rhd_all_gather(seg, axis)
@@ -215,7 +349,7 @@ def allreduce_fixed_tree(x: jax.Array, axis: str, *, op: Op = jnp.add,
     paper pays the same structural price — tree aggregation keeps
     (P-1)/log(P) buffers alive instead of 1).
     """
-    p = lax.axis_size(axis)
+    p = _axis_size(axis)
     if not _is_pow2(p):
         raise ValueError(f"fixed_tree requires power-of-two axis size, got {p}")
     orig_dtype = x.dtype
@@ -256,7 +390,7 @@ def allreduce_two_level(x: jax.Array, inner_axis: str, outer_axis: str, *,
     over all P ranks — the paper's 2x in-network traffic reduction shows up
     exactly here) plus Z/P_in * f(P_out) on the scarce inter-pod links.
     """
-    p_in = lax.axis_size(inner_axis)
+    p_in = _axis_size(inner_axis)
     xp, n = pad_to_multiple(x, p_in)
     if inner == "ring":
         seg = ring_reduce_scatter(xp, inner_axis, op=op, stagger=stagger)
@@ -343,6 +477,8 @@ def allreduce(x: jax.Array, axes: tuple[str, ...], *, algorithm: str = "auto",
         inner = axes[0]
         if algorithm == "ring":
             return allreduce_ring(x, inner, op=op, stagger=stagger)
+        if algorithm == "ring_pipelined":
+            return allreduce_ring_pipelined(x, inner, op=op, stagger=stagger)
         if algorithm == "rhd":
             return allreduce_rhd(x, inner, op=op)
         if algorithm == "fixed_tree":
@@ -367,6 +503,9 @@ def allreduce(x: jax.Array, axes: tuple[str, ...], *, algorithm: str = "auto",
     if algorithm == "ring":
         x = allreduce_ring(x, inner, op=op, stagger=stagger)
         return allreduce_ring(x, outer, op=op, stagger=stagger)
+    if algorithm == "ring_pipelined":
+        x = allreduce_ring_pipelined(x, inner, op=op, stagger=stagger)
+        return allreduce_ring_pipelined(x, outer, op=op, stagger=stagger)
     if algorithm == "rhd":
         x = allreduce_rhd(x, inner, op=op)
         return allreduce_rhd(x, outer, op=op)
@@ -387,10 +526,10 @@ def reduce_scatter(x: jax.Array, axes: tuple[str, ...], *,
     matched reduce-scatter/all-gather pairs don't care.
     """
     *outers, inner = axes
-    p = lax.axis_size(inner)
+    p = _axis_size(inner)
     if x.shape[0] % p:
         raise ValueError(f"reduce_scatter: len {x.shape[0]} % {p} != 0")
-    if algorithm == "ring":
+    if algorithm in ("ring", "ring_pipelined"):
         seg = ring_reduce_scatter(x, inner, op=op,
                                   stagger=-1 if ordered else stagger)
     elif algorithm == "rhd" or algorithm == "fixed_tree":
@@ -412,12 +551,12 @@ def all_gather(seg: jax.Array, axes: tuple[str, ...], *,
                ordered: bool = False) -> jax.Array:
     """All-gather over the innermost axis (inverse of ``reduce_scatter``)."""
     *_, inner = axes
-    if algorithm == "ring":
+    if algorithm in ("ring", "ring_pipelined"):
         return ring_all_gather(seg, inner,
                                stagger=-1 if ordered else stagger)
     if algorithm in ("rhd", "fixed_tree"):
         if ordered:
-            seg = lax.ppermute(seg, inner, _bitrev_perm(lax.axis_size(inner)))
+            seg = lax.ppermute(seg, inner, _bitrev_perm(_axis_size(inner)))
         return rhd_all_gather(seg, inner)
     if algorithm == "psum":
         return lax.all_gather(seg, inner, tiled=True)
@@ -432,7 +571,8 @@ def wire_bytes_per_rank(nbytes: int, p_inner: int, p_outer: int = 1, *,
                         algorithm: str) -> float:
     """Bytes each rank puts on the wire for a Z-byte allreduce."""
     z = float(nbytes)
-    if algorithm == "ring":
+    if algorithm in ("ring", "ring_pipelined"):
+        # the pipelined ring reorders rounds but moves identical bytes
         return 2 * z * (p_inner - 1) / p_inner * (1 if p_outer == 1 else 2)
     if algorithm == "rhd":
         return 2 * z * (p_inner - 1) / p_inner

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size as _axis_size
 from repro.core import collectives as coll
 
 INT8_MAX = 127.0
@@ -66,7 +67,7 @@ def quantized_allreduce(x: jax.Array, axis: str, *, block: int = 256,
     round each way), matching the paper's transport-precision trade; use
     ``error_feedback_step`` to fold the residual into the next iteration.
     """
-    p = lax.axis_size(axis)
+    p = _axis_size(axis)
     # pad so each of the P chunks is a multiple of `block`
     xp, n = coll.pad_to_multiple(x, p * block)
     chunk_len = xp.shape[0] // p

@@ -3,15 +3,28 @@
 ``GradReducer`` is the composable entry point that training loops call on
 an *unreduced* gradient pytree inside a manual ``shard_map`` region.  It:
 
-  1. packs leaves into reduction blocks (``core/bucketing.py``),
+  1. packs leaves into reduction blocks — by default through the
+     **flat-arena plan** (``core/arena.py``): one padded buffer per
+     dtype, equal-size buckets as a leading axis, per-leaf offsets
+     computed once per pytree structure,
   2. per block, selects the aggregation algorithm by size — the paper's
      §6.4 switchover (tree < 128 KiB ≤ rhd < 512 KiB ≤ ring/two-level) —
      or honours an explicit choice,
-  3. applies transport compression (int8 + error feedback) or top-k
+  3. reduces **all blocks in one traced computation**: a single
+     ``lax.scan`` over the bucket axis, and for the ring a fused wave
+     pipeline (``collectives.ring_allreduce_bucketed``) that keeps B
+     blocks in flight — the paper's multi-buffer aggregation (§6.2) —
+     instead of the seed's per-bucket Python dispatch loop,
+  4. applies transport compression (int8 + error feedback) or top-k
      sparsification (the §7 sparse allreduce) when configured,
-  4. staggers concurrent blocks' ring phases (staggered sending, §5),
-  5. guarantees bitwise reproducibility when asked (F3: fixed-tree only,
-     fp32 accumulation).
+  5. staggers concurrent blocks' ring phases (staggered sending, §5) via
+     a per-bucket phase scalar threaded through the scan,
+  6. guarantees bitwise reproducibility when asked (F3: fixed-tree only,
+     fp32 accumulation) — the arena and legacy paths are bitwise-equal
+     there because the fixed tree combines elementwise.
+
+``FlareConfig(arena=False)`` keeps the seed per-bucket loop alive as the
+benchmark baseline (``benchmarks/collectives_bench.py`` measures both).
 
 Error-feedback state is functional: ``reduce(grads, state) -> (out,
 state)``; the trainer threads it through its optimizer state.
@@ -23,7 +36,10 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
+from repro import compat
+from repro.core import arena as arena_mod
 from repro.core import bucketing, collectives as coll, compression, sparse
 
 
@@ -32,7 +48,8 @@ class FlareConfig:
     """Configuration of the in-network-style gradient reduction."""
 
     axes: tuple[str, ...] = ("data",)   # (outer..., inner); inner = leaf level
-    algorithm: str = "auto"             # auto|ring|rhd|fixed_tree|two_level|psum
+    algorithm: str = "auto"             # auto|ring|ring_pipelined|rhd|
+    #                                     fixed_tree|two_level|psum
     reproducible: bool = False          # F3: bitwise-deterministic reduction
     compression: str = "none"           # none|int8  (F1 transport dtypes)
     sparse_k_frac: float = 0.0          # >0 → §7 sparse allreduce
@@ -40,6 +57,7 @@ class FlareConfig:
     bucket_bytes: int = 4 << 20
     stagger: bool = True                # §5 staggered sending
     mean: bool = False                  # divide by world size after reduce
+    arena: bool = True                  # flat-arena pipelined hot path
 
     def __post_init__(self):
         if self.reproducible and self.compression != "none":
@@ -72,6 +90,114 @@ class GradReducer:
 
     # -- the reduction -------------------------------------------------------
     def __call__(self, grads: Any, state: Any = None) -> tuple[Any, Any]:
+        if self.config.arena:
+            return self._reduce_arena(grads, state)
+        return self._reduce_legacy(grads, state)
+
+    def _world(self) -> int:
+        w = 1
+        for ax in self.config.axes:
+            w *= compat.axis_size(ax)
+        return w
+
+    # -- flat-arena pipelined path (the hot path) ----------------------------
+    def _reduce_arena(self, grads: Any, state: Any) -> tuple[Any, Any]:
+        c = self.config
+        leaves, treedef = jax.tree.flatten(grads)
+        ef_leaves = (jax.tree.flatten(state)[0] if state is not None
+                     else None)
+        # fold every collective's chunk-divisibility need into the plan:
+        # 2·world covers ring (P), pipelined ring waves, rhd (P) and the
+        # two-level inner/outer split — no runtime pad_to_multiple.
+        plan = arena_mod.build_plan(leaves, c.bucket_bytes,
+                                    pad_multiple=2 * self._world())
+
+        ef_out_groups: list[jax.Array | None] = []
+        red_groups: list[jax.Array] = []
+        for g in plan.groups:
+            buf = g.pack(leaves)
+            ef_buf = g.pack(ef_leaves) if ef_leaves is not None else None
+            staggers = g.staggers(c.stagger)
+            red, ef_red = self._reduce_group(buf, ef_buf, staggers, g)
+            red_groups.append(red)
+            ef_out_groups.append(ef_red)
+        out_leaves = plan.unpack(red_groups)
+
+        out = jax.tree.unflatten(treedef, out_leaves)
+        if not self.needs_state:
+            return out, None
+        ef_flat = plan.unpack([e if e is not None else jnp.zeros_like(r)
+                               for e, r in zip(ef_out_groups, red_groups)])
+        return out, jax.tree.unflatten(treedef, ef_flat)
+
+    def _reduce_group(self, buf: jax.Array, ef: jax.Array | None,
+                      staggers: jax.Array, group: arena_mod.DtypeArena,
+                      ) -> tuple[jax.Array, jax.Array | None]:
+        """Reduce one dtype's (B, S) arena in a single traced computation."""
+        c = self.config
+        *outer_axes, inner = c.axes
+        nbuckets, size = buf.shape
+        nbytes = size * jnp.dtype(group.dtype).itemsize
+        alg = c.algorithm
+        if alg == "auto":
+            alg = coll.select_algorithm(nbytes, reproducible=c.reproducible,
+                                        multi_level=len(c.axes) > 1)
+        is_float = jnp.issubdtype(buf.dtype, jnp.floating)
+
+        if c.sparse_k_frac > 0 and is_float:
+            k = max(1, min(size, int(c.sparse_k_frac * size)))
+
+            def body(_, xs):
+                flat, e, _s = xs
+                v = flat + e
+                if outer_axes:
+                    red, mine = sparse.sparse_allreduce_two_level(
+                        v, inner, outer_axes[-1], k,
+                        density_threshold=c.density_threshold)
+                else:
+                    red, mine = sparse.sparse_allreduce(
+                        v, inner, k, density_threshold=c.density_threshold)
+                if c.mean:
+                    red = red / self._world()
+                return None, (red, v - mine)
+
+            _, (red, ef_out) = lax.scan(body, None, (buf, ef, staggers))
+            return red, ef_out
+
+        if c.compression == "int8" and is_float:
+
+            def body(_, xs):
+                flat, e, _s = xs
+                v = flat + e
+                red = compression.quantized_allreduce(v, inner)
+                for ax in outer_axes:
+                    red = compression.quantized_allreduce(red, ax)
+                if c.mean:
+                    red = red / self._world()
+                return None, (red, v - compression.quantize_roundtrip(v))
+
+            _, (red, ef_out) = lax.scan(body, None, (buf, ef, staggers))
+            return red, ef_out
+
+        # dense, lossless path: ALL B buckets in one vmapped schedule —
+        # every collective round carries the whole arena's worth of
+        # payload in one batched ppermute/exchange, the §6.2 multi-buffer
+        # parallelism (2(P-1) ring rounds total instead of 2B(P-1)).
+        # Per bucket the combine chain is unchanged, so this is
+        # bitwise-equal to the per-bucket loop for every algorithm.
+        ef_out = jnp.zeros_like(ef) if ef is not None else None
+        if alg == "ring_pipelined":
+            alg = "ring"        # batched rounds already overlap blocks
+        red = jax.vmap(
+            lambda v, s: coll.allreduce(
+                v, tuple(c.axes), algorithm=alg,
+                reproducible=c.reproducible, stagger=s))(buf, staggers)
+        if c.mean:
+            red = red / self._world()
+        return red, ef_out
+
+    # -- seed per-bucket loop (benchmark baseline) ---------------------------
+    def _reduce_legacy(self, grads: Any, state: Any) -> tuple[Any, Any]:
         c = self.config
         leaves, treedef = jax.tree.flatten(grads)
         ef_leaves = (jax.tree.flatten(state)[0] if state is not None
@@ -80,7 +206,6 @@ class GradReducer:
 
         out_leaves: list[jax.Array | None] = [None] * len(leaves)
         new_ef: list[jax.Array | None] = [None] * len(leaves)
-        world = 1  # resolved lazily inside reduce via axis sizes
 
         for b in buckets:
             flat = bucketing.pack_bucket(leaves, b)
@@ -97,12 +222,6 @@ class GradReducer:
         state_out = (jax.tree.unflatten(treedef, new_ef)
                      if self.needs_state else None)
         return out, state_out
-
-    def _world(self) -> int:
-        w = 1
-        for ax in self.config.axes:
-            w *= jax.lax.axis_size(ax)
-        return w
 
     def _reduce_block(self, flat: jax.Array, ef: jax.Array | None,
                       bucket: bucketing.Bucket,

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size as _axis_size
 from repro.core import collectives as coll
 
 #: Sentinel index marking an empty slot; sorts after every valid index.
@@ -74,6 +75,7 @@ def merge_coordinate_lists(idx_a: jax.Array, val_a: jax.Array,
     two-pointer merge becomes sort + adjacent-duplicate combine, which maps
     onto the VPU instead of data-dependent branches.
     """
+    n = idx_a.shape[0] + idx_b.shape[0]
     idx = jnp.concatenate([idx_a, idx_b])
     val = jnp.concatenate([val_a, val_b])
     order = jnp.argsort(idx)
@@ -85,11 +87,16 @@ def merge_coordinate_lists(idx_a: jax.Array, val_a: jax.Array,
                                 jnp.zeros((1,), bool)])
     folded = val + jnp.where(dup_next, jnp.roll(val, -1), 0).astype(val.dtype)
     is_dup = jnp.concatenate([jnp.zeros((1,), bool), idx[1:] == idx[:-1]])
-    idx = jnp.where(is_dup, SENTINEL, idx)
-    val = jnp.where(is_dup, 0, folded)
-    # compact: push sentinels to the tail, preserving index order
-    order = jnp.argsort(idx)
-    return idx[order], val[order]
+    # compact: the survivors are already in index order, so their
+    # destinations are a running count of non-duplicates — an O(n) cumsum
+    # scatter replaces the second full argsort the seed paid here.
+    keep = ~is_dup
+    dest = jnp.where(keep, jnp.cumsum(keep) - 1, n)   # n → dropped by mode
+    out_idx = jnp.full((n,), SENTINEL, idx.dtype).at[dest].set(
+        idx, mode="drop")
+    out_val = jnp.zeros((n,), val.dtype).at[dest].set(
+        jnp.where(keep, folded, 0), mode="drop")
+    return out_idx, out_val
 
 
 def densify_step(nnz_cap: int, size: int, density_threshold: float) -> bool:
@@ -116,7 +123,7 @@ def sparse_allreduce(x: jax.Array, axis: str, k: int, *,
     hash-at-the-leaves / array-at-the-root split, with the crossover depth
     chosen statically from (k, Z, threshold).
     """
-    p = lax.axis_size(axis)
+    p = _axis_size(axis)
     if not (p > 0 and (p & (p - 1)) == 0):
         raise ValueError(f"sparse_allreduce requires power-of-two P, got {p}")
     size = x.shape[0]
@@ -162,7 +169,7 @@ def sparse_allreduce_two_level(x: jax.Array, inner_axis: str, outer_axis: str,
                                      density_threshold=density_threshold)
     reduced = coll.allreduce_rhd(reduced, outer_axis)
     if mean:
-        total = lax.axis_size(inner_axis) * lax.axis_size(outer_axis)
+        total = _axis_size(inner_axis) * _axis_size(outer_axis)
         reduced = reduced / total
     return reduced, mine
 

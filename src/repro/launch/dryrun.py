@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import configs
+from repro import compat, configs
 from repro.core.engine import FlareConfig
 from repro.data import pipeline
 from repro.launch import analytic, hlo_analysis, mesh as mesh_mod
@@ -107,7 +107,7 @@ def run_cell(arch: str, cell, *, multi_pod: bool, out_dir: str,
     label = f"{arch}.{cell.name}.{mesh_name}" + (f".{tag}" if tag else "")
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if cell.kind == "train":
             lowered = _train_lowered(model, mesh, mcfg, cell,
                                      flare_algorithm, gather_algorithm)

@@ -41,7 +41,11 @@ _SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
 _WHILE = re.compile(r"while\(.*condition=%?([\w.\-_]+),\s*body=%?([\w.\-_]+)")
 _CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-_]+)")
 _CONST = re.compile(r"constant\((\d+)\)")
-_DOT = re.compile(r"\bdot\(%?([\w.\-_]+),\s*%?([\w.\-_]+)\)")
+_TRIPN = re.compile(r'known_trip_count[^0-9]*(\d+)')
+# One instruction operand: an optional inline `dtype[dims]{layout}` type
+# (newer XLA text dumps annotate every operand) followed by the %name.
+_OPERAND = r"(?:(\w+)\[([\d,]*)\](?:\{[\d,]*\})?\s+)?%?([\w.\-_]+)"
+_DOT = re.compile(r"\bdot\(" + _OPERAND + r",\s*" + _OPERAND + r"\)")
 _CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _COLL = re.compile(r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
                    r"collective-permute)(?:-start)?\(")
@@ -154,7 +158,10 @@ def analyze(hlo: str) -> HloStats:
             if wm:
                 cond, body = wm.group(1), wm.group(2)
                 t = 1
-                cc = by_name.get(cond)
+                tn = _TRIPN.search(line)   # XLA's own known_trip_count
+                if tn:
+                    t = int(tn.group(1))
+                cc = by_name.get(cond) if not tn else None
                 if cc:
                     consts = [int(x) for l in cc.lines
                               for x in _CONST.findall(l)]
@@ -205,8 +212,19 @@ def analyze(hlo: str) -> HloStats:
     _NO_TRAFFIC = re.compile(
         r"\b(get-tuple-element|tuple|bitcast|parameter|constant|while|"
         r"conditional|call|after-all|custom-call)\(")
-    _DUS = re.compile(r"dynamic-update-slice\(%?[\w.\-_]+,\s*%?([\w.\-_]+)")
+    _DUS = re.compile(r"dynamic-update-slice\(" + _OPERAND + r",\s*"
+                      + _OPERAND)
     _FUSION_CALL = re.compile(r"\bfusion\(.*calls=%?([\w.\-_]+)")
+
+    def _operand_shape(m: "re.Match", first: int,
+                       table: dict) -> tuple | None:
+        """Shape of a matched _OPERAND group triple: inline type if the
+        dump annotates operands, else the computation's symbol table."""
+        dt, dims, name = m.group(first), m.group(first + 1), m.group(first + 2)
+        if dt is not None and dt in _DTYPE_BYTES:
+            shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+            return dt, shape
+        return table.get(name)
 
     # pre-pass: per-computation symbol tables + DUS update sizes
     comp_shapes: dict[str, dict] = {}
@@ -227,7 +245,7 @@ def analyze(hlo: str) -> HloStats:
             # were otherwise trip-multiplied at full-buffer size)
             if "dynamic-update-slice(" in line:
                 dm = _DUS.search(line)
-                upd = table.get(dm.group(1)) if dm else None
+                upd = _operand_shape(dm, 4, table) if dm else None
                 if upd:
                     ub = _nelems(upd[1]) * _DTYPE_BYTES[upd[0]]
                     dus_update_bytes[c.name] = max(
@@ -250,7 +268,7 @@ def analyze(hlo: str) -> HloStats:
                 # in-place cache updates: only the update slice is traffic
                 if "dynamic-update-slice(" in rhs:
                     dm = _DUS.search(rhs)
-                    upd = shapes.get(dm.group(1)) if dm else None
+                    upd = _operand_shape(dm, 4, shapes) if dm else None
                     if upd:
                         nbytes = _nelems(upd[1]) * _DTYPE_BYTES[upd[0]]
                 else:
@@ -262,7 +280,7 @@ def analyze(hlo: str) -> HloStats:
 
             dm = _DOT.search(rhs)
             if dm and sh:
-                lhs = shapes.get(dm.group(1))
+                lhs = _operand_shape(dm, 1, shapes)
                 k = 1
                 cd = _CDIMS.search(rhs)
                 if lhs and cd:

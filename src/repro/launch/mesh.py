@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
 from repro.sharding.rules import MeshCfg
 
 SINGLE_POD = (16, 16)                 # 256 chips: (data, model)
@@ -27,9 +28,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             "— the dry-run must set "
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "any jax import")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape),
-                         devices=devices)
+    return compat.make_mesh(shape, axes, devices=devices)
 
 
 def mesh_cfg(*, multi_pod: bool = False) -> MeshCfg:

@@ -43,7 +43,7 @@ def main():
     import jax.numpy as jnp
     import numpy as np
 
-    from repro import configs
+    from repro import compat, configs
     from repro.core.engine import FlareConfig
     from repro.data import pipeline
     from repro.ft import CheckpointManager
@@ -58,8 +58,7 @@ def main():
         axes, shape = ("pod", "data", "model"), tuple(dims)
     else:
         sys.exit("--mesh must be DxM or PxDxM")
-    mesh = jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    mesh = compat.make_mesh(shape, axes)
     mcfg = rules.MeshCfg(axes, shape)
 
     mod = configs.load(args.arch)
@@ -84,7 +83,7 @@ def main():
                           compression=args.compression,
                           sparse_k_frac=args.sparse_k))
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         fn, param_sh, opt_sh, batch_sh, init_opt = trainer.jit_train_step(
             model, mesh, mcfg, tcfg, params_shapes, batch_shapes,
             donate=True)

@@ -8,9 +8,11 @@ Gradient flow — the paper's technique, end to end:
     walks the stack (compute/communication overlap falls out of the scan
     schedule: layer L's reduce-scatter overlaps layer L−1's backward).
   * Replicated leaves (norms, biases, routers) are reduced by the
-    ``GradReducer`` engine: size-based algorithm switchover (§6.4),
-    staggered buckets (§5), optional int8/top-k compression (F1/§7) with
-    error feedback, optional bitwise-reproducible mode (F3).
+    ``GradReducer`` engine on its flat-arena pipelined path: one padded
+    buffer per dtype, all reduction blocks in one scanned/fused-wave
+    computation (§6.2 multi-buffer), size-based algorithm switchover
+    (§6.4), staggered block phases (§5), optional int8/top-k compression
+    (F1/§7) with error feedback, optional bitwise-reproducible mode (F3).
   * The optimizer runs ZeRO-style on the local shards.
 """
 from __future__ import annotations
@@ -23,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.engine import FlareConfig, GradReducer
 from repro.sharding import rules
 from repro.train import optim
@@ -107,7 +110,7 @@ def make_train_step(model, mesh_cfg: rules.MeshCfg, tcfg: TrainConfig,
                      _opt_specs(manual_specs), bspec))
         out_specs = (manual_specs, _opt_specs(manual_specs),
                      {"loss": P(), "grad_norm": P()})
-        return jax.shard_map(
+        return compat.shard_map(
             step_body, in_specs=in_specs, out_specs=out_specs,
             axis_names=set(reduce_axes), check_vma=False)
 

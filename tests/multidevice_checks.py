@@ -5,7 +5,8 @@ Invoked by tests/test_collectives.py as::
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         python tests/multidevice_checks.py <group>
 
-Groups: collectives | sparse_quant | fsdp_engine | trainer | repro
+Groups: collectives | arena_pipeline | sparse_quant | fsdp_engine |
+        trainer | repro
 Exits non-zero on any failure (assertion output on stderr).
 """
 import os
@@ -20,21 +21,21 @@ import jax.numpy as jnp                                        # noqa: E402
 import numpy as np                                             # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P     # noqa: E402
 
+from repro import compat                                       # noqa: E402
 from repro.core import collectives as coll                     # noqa: E402
 from repro.core import compression, fsdp, reproducible, sparse  # noqa: E402
 from repro.core.engine import FlareConfig, GradReducer         # noqa: E402
 
 
 def _mesh():
-    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 def _run(fn, xs, mesh, out_spec=P(None)):
-    g = jax.jit(jax.shard_map(fn, in_specs=(P(("pod", "data"), None),),
-                              out_specs=out_spec,
-                              axis_names={"pod", "data"}, check_vma=False))
-    with jax.set_mesh(mesh):
+    g = jax.jit(compat.shard_map(fn, in_specs=(P(("pod", "data"), None),),
+                                 out_specs=out_spec,
+                                 axis_names={"pod", "data"}, check_vma=False))
+    with compat.set_mesh(mesh):
         x = jax.device_put(xs, NamedSharding(mesh, P(("pod", "data"), None)))
         return np.asarray(g(x))
 
@@ -84,6 +85,78 @@ def check_collectives():
     want = np.maximum(np.asarray(xs)[0], np.asarray(xs)[1])
     assert np.allclose(got, want), "custom-op allreduce"
     print("collectives OK")
+
+
+def check_arena_pipeline():
+    """The PR-1 hot path: pipelined ring + flat-arena GradReducer.
+
+    Bitwise claims verified here:
+      * ``allreduce_ring_pipelined`` ≡ ``allreduce_ring`` (op=add, 2P | Z);
+      * ``ring_allreduce_bucketed``  ≡ per-bucket ``allreduce_ring`` with
+        the same staggers (the §6.2 fused waves reorder rounds only);
+      * arena ``GradReducer`` ≡ legacy per-bucket loop in reproducible
+        fixed-tree mode (F3 — elementwise combine, layout-independent).
+    """
+    mesh = _mesh()
+    rng = np.random.default_rng(11)
+    Z = 256                       # divisible by 2P for P ∈ {2, 4}
+    xs = jnp.asarray((rng.normal(size=(4, Z)) * 1e3).astype(np.float32))
+    expect = np.asarray(xs, np.float64).sum(0)
+
+    # pipelined ring vs plain ring: bitwise (single "data" axis, P=2)
+    for stag in (0, 3):
+        a = _run(lambda x, s=stag: coll.allreduce_ring(
+            x[0], "data", stagger=s), xs, mesh)
+        b = _run(lambda x, s=stag: coll.allreduce_ring_pipelined(
+            x[0], "data", stagger=s), xs, mesh)
+        assert a.tobytes() == b.tobytes(), f"pipelined ring stagger={stag}"
+    # and numerically correct on a ragged length (internal padding)
+    g = _run(lambda x: coll.allreduce_ring_pipelined(x[0][:97], "data"),
+             xs, mesh)
+    # data-axis groups are {0,1} and {2,3}; out_spec P(None) returns rank 0
+    want = np.asarray(xs[0][:97]) + np.asarray(xs[1][:97])
+    assert np.allclose(g, want, atol=1e-3), "pipelined ring ragged"
+
+    # bucketed waves vs per-bucket plain rings: bitwise, same staggers
+    B, S = 4, Z // 4
+    def bucketed(x):
+        arena = x[0].reshape(B, S)
+        return coll.ring_allreduce_bucketed(
+            arena, "data", staggers=jnp.arange(B, dtype=jnp.int32))
+    def loop(x):
+        arena = x[0].reshape(B, S)
+        return jnp.stack([coll.allreduce_ring(arena[i], "data", stagger=i)
+                          for i in range(B)])
+    a = _run(bucketed, xs, mesh)
+    b = _run(loop, xs, mesh)
+    assert a.tobytes() == b.tobytes(), "bucketed waves vs per-bucket loop"
+
+    # GradReducer: arena path vs legacy loop
+    def reduce_with(x, **kw):
+        g = {"a": x[0][:192].reshape(2, 96), "b": x[0][192:250],
+             "c": x[0][250:]}
+        r = GradReducer(FlareConfig(axes=("pod", "data"),
+                                    bucket_bytes=256, **kw))
+        red, _ = r(g, r.init_state(g))
+        return jnp.concatenate([red["a"].reshape(-1), red["b"], red["c"]])
+
+    # reproducible fixed-tree: bitwise-identical across the two packings
+    a = _run(lambda x: reduce_with(x, reproducible=True,
+                                   algorithm="fixed_tree", arena=True),
+             xs, mesh)
+    b = _run(lambda x: reduce_with(x, reproducible=True,
+                                   algorithm="fixed_tree", arena=False),
+             xs, mesh)
+    assert a.tobytes() == b.tobytes(), "arena vs legacy fixed_tree bitwise"
+
+    # every dense algorithm: arena path matches the fp64 oracle
+    for alg in ("ring", "ring_pipelined", "rhd", "fixed_tree",
+                "two_level", "auto"):
+        got = _run(lambda x, a=alg: reduce_with(x, algorithm=a, arena=True),
+                   xs, mesh)
+        assert np.allclose(got, expect, rtol=1e-5,
+                           atol=1e-2), f"arena engine {alg}"
+    print("arena/pipeline OK")
 
 
 def check_sparse_quant():
@@ -137,11 +210,11 @@ def check_fsdp_engine():
                 w = fsdp.gather_params(ws, ("pod", "data"), alg)
                 return jnp.sum((x_local @ w) ** 2) / 64.0
             return jax.grad(loss)(w_shard)
-        g = jax.jit(jax.shard_map(
+        g = jax.jit(compat.shard_map(
             step, in_specs=(P("data", None), P(("pod", "data"), None, None)),
             out_specs=P("data", None), axis_names={"pod", "data"},
             check_vma=False))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             ws = jax.device_put(W, NamedSharding(mesh, P("data", None)))
             xs = jax.device_put(X, NamedSharding(
                 mesh, P(("pod", "data"), None, None)))
@@ -186,7 +259,7 @@ def check_trainer():
     batch = {"tokens": jax.random.randint(key, (8, 16), 0, cfg.vocab),
              "labels": jax.random.randint(key, (8, 16), 0, cfg.vocab)}
     tcfg = trainer.TrainConfig(lr=1e-2)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         fn, param_sh, opt_sh, batch_sh, init_opt = trainer.jit_train_step(
             m, mesh, mcfg, tcfg, jax.eval_shape(m.init, key), batch,
             donate=False)
@@ -221,6 +294,7 @@ def check_repro():
 
 GROUPS = {
     "collectives": check_collectives,
+    "arena_pipeline": check_arena_pipeline,
     "sparse_quant": check_sparse_quant,
     "fsdp_engine": check_fsdp_engine,
     "trainer": check_trainer,

@@ -1,0 +1,93 @@
+"""FlatArena plan: pack→unpack identity, padding, bucket invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import arena
+
+
+def _random_tree(rng, n_leaves, dtypes=("float32", "int32", "float16")):
+    tree = {}
+    for i in range(n_leaves):
+        dt = dtypes[rng.integers(len(dtypes))]
+        ndim = int(rng.integers(0, 4))
+        shape = tuple(int(rng.integers(1, 7)) for _ in range(ndim))
+        x = rng.normal(size=shape) * 100
+        tree[f"leaf{i}"] = jnp.asarray(x.astype(dt))
+    return tree
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("pad_multiple", [1, 8, 16])
+def test_pack_unpack_identity_ragged(seed, pad_multiple):
+    """Arena pack→unpack is the identity for ragged mixed-dtype pytrees
+    (scalar leaves, non-divisible sizes, several dtypes)."""
+    rng = np.random.default_rng(seed)
+    tree = _random_tree(rng, n_leaves=int(rng.integers(1, 24)))
+    leaves, treedef = jax.tree.flatten(tree)
+    plan = arena.build_plan(leaves, bucket_bytes=256,
+                            pad_multiple=pad_multiple)
+    arenas = plan.pack(leaves)
+    out = plan.unpack(arenas)
+    restored = jax.tree.unflatten(treedef, out)
+    for k in tree:
+        assert restored[k].dtype == tree[k].dtype, k
+        assert restored[k].shape == tree[k].shape, k
+        np.testing.assert_array_equal(np.asarray(restored[k]),
+                                      np.asarray(tree[k]), err_msg=k)
+
+
+def test_scalar_and_single_leaf():
+    leaves = [jnp.float32(3.5)]
+    plan = arena.build_plan(leaves, bucket_bytes=1 << 20, pad_multiple=16)
+    (buf,) = plan.pack(leaves)
+    assert buf.shape == (1, 16)          # padded up to pad_multiple
+    out = plan.unpack([buf])
+    assert out[0].shape == () and float(out[0]) == 3.5
+
+
+def test_bucket_invariants():
+    rng = np.random.default_rng(7)
+    leaves = [jnp.asarray(rng.normal(size=(s,)).astype(np.float32))
+              for s in (1000, 3, 4096, 17, 999)]
+    plan = arena.build_plan(leaves, bucket_bytes=4096, pad_multiple=8)
+    assert len(plan.groups) == 1
+    g = plan.groups[0]
+    total = sum(l.size for l in leaves)
+    assert g.used_elems == total
+    assert g.bucket_elems % 8 == 0
+    assert g.total_elems >= total
+    # equal-size blocks sized to ~bucket_bytes: B = ceil(bytes / bucket_bytes)
+    assert g.num_buckets == -(-total * 4 // 4096)
+    # slots tile the arena contiguously in leaf order
+    off = 0
+    for slot in g.slots:
+        assert slot.offset == off
+        off += slot.size
+    # padding lives only at the tail
+    assert g.total_elems - off < g.bucket_elems + 8
+
+
+def test_multi_dtype_groups_and_staggers():
+    leaves = [jnp.zeros((100,), jnp.float32), jnp.zeros((50,), jnp.int32),
+              jnp.zeros((200,), jnp.float32)]
+    plan = arena.build_plan(leaves, bucket_bytes=512, pad_multiple=4)
+    assert len(plan.groups) == 2
+    # global bucket numbering: groups get disjoint stagger ranges (§5)
+    all_stags = np.concatenate(
+        [np.asarray(g.staggers(True)) for g in plan.groups])
+    assert sorted(all_stags.tolist()) == list(range(plan.num_buckets))
+    for g in plan.groups:
+        assert np.all(np.asarray(g.staggers(False)) == 0)
+
+
+def test_plan_cached_per_structure():
+    leaves = [jnp.zeros((64, 3), jnp.float32), jnp.zeros((5,), jnp.float32)]
+    a = arena.build_plan(leaves, 1 << 20, pad_multiple=8)
+    b = arena.build_plan([jnp.ones((64, 3), jnp.float32),
+                          jnp.ones((5,), jnp.float32)], 1 << 20,
+                         pad_multiple=8)
+    assert a is b                         # keyed by shapes/dtypes only
+    c = arena.build_plan(leaves, 1 << 20, pad_multiple=16)
+    assert c is not a

@@ -24,8 +24,9 @@ def _run_group(group: str):
     return r.stdout
 
 
-@pytest.mark.parametrize("group", ["collectives", "sparse_quant",
-                                   "fsdp_engine", "trainer", "repro"])
+@pytest.mark.parametrize("group", ["collectives", "arena_pipeline",
+                                   "sparse_quant", "fsdp_engine",
+                                   "trainer", "repro"])
 def test_multidevice(group):
     out = _run_group(group)
     assert "OK" in out
