@@ -95,6 +95,87 @@ speedup = times["legacy_loop"] / times["arena_pipeline"]
 print(f"gradreducer.arena_speedup_x,{speedup:.2f},legacy/arena_ring")
 speedup_auto = times["legacy_auto"] / times["arena_auto"]
 print(f"gradreducer.arena_speedup_auto_x,{speedup_auto:.2f},legacy/arena_auto")
+
+# --- transport layer: per-bucket scan vs batched arena schedules -----------
+# the PR-2 headline: the sparse and int8 transports reduce a whole (B, S)
+# dtype arena in one batched schedule (O(log P) / O(1) collectives) vs
+# the per-bucket lax.scan ancestor's O(B log P) / O(B); bitwise-equal
+# outputs (asserted in multidevice_checks.py group `transports`).
+# B=16 8-KiB buckets is the latency-bound many-blocks-in-flight regime
+# the arena engine serves (§6.2) — where the batched schedule's
+# B-independent collective count bites hardest.
+from repro.core import transports
+
+B, S = 16, 1 << 11
+arena = jnp.asarray(rng.normal(size=(B, S)).astype(np.float32))
+exts = (S,) * B
+with compat.set_mesh(mesh8):
+    ad = jax.device_put(arena, NamedSharding(mesh8, P()))
+    for name, kw in [("sparse", dict(sparse_k_frac=0.01)),
+                     ("int8", dict(compression="int8"))]:
+        ts = {}
+        for mode, batched in [("scan", False), ("batched", True)]:
+            cfg = FlareConfig(axes=("data",), **kw)
+            t = transports.from_config(cfg, jnp.float32, batched=batched)
+            fn = jax.jit(compat.shard_map(
+                lambda a, t=t: t(a, jnp.zeros_like(a),
+                                 jnp.zeros((B,), jnp.int32), exts)[0],
+                in_specs=(P(),), out_specs=P(), axis_names={"data"},
+                check_vma=False))
+            ts[mode] = timeit(fn, ad, iters=5)
+            print(f"transports.{name}.{mode}.us_per_call,"
+                  f"{ts[mode]*1e6:.0f},8dev_cpu_B{B}xS{S}")
+        print(f"transports.{name}.batched_speedup_x,"
+              f"{ts['scan']/ts['batched']:.2f},scan/batched")
+"""
+
+# tiny-shape variant for `run.py --quick` / the tier-1 smoke test: all
+# three transports, scan vs batched, seconds not minutes — the harness
+# can't silently rot if CI exercises this end to end.
+_QUICK_CHILD = r"""
+import os, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
+from repro.core import transports
+from repro.core.engine import FlareConfig
+
+
+def timeit(fn, *args, iters=2):
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+B, S = 4, 2048
+rng = np.random.default_rng(0)
+arena = jnp.asarray(rng.normal(size=(B, S)).astype(np.float32))
+exts = (S,) * B
+mesh8 = compat.make_mesh((8,), ("data",))
+with compat.set_mesh(mesh8):
+    ad = jax.device_put(arena, NamedSharding(mesh8, P()))
+    for name, kw in [("dense", dict(algorithm="ring")),
+                     ("sparse", dict(sparse_k_frac=0.01)),
+                     ("int8", dict(compression="int8"))]:
+        ts = {}
+        for mode, batched in [("scan", False), ("batched", True)]:
+            cfg = FlareConfig(axes=("data",), **kw)
+            t = transports.from_config(cfg, jnp.float32, batched=batched)
+            fn = jax.jit(compat.shard_map(
+                lambda a, t=t: t(a, jnp.zeros_like(a),
+                                 jnp.zeros((B,), jnp.int32), exts)[0],
+                in_specs=(P(),), out_specs=P(), axis_names={"data"},
+                check_vma=False))
+            ts[mode] = timeit(fn, ad)
+            print(f"quick.{name}.{mode}.us_per_call,{ts[mode]*1e6:.0f},"
+                  f"8dev_cpu_B{B}xS{S}")
+        print(f"quick.{name}.batched_speedup_x,"
+              f"{ts['scan']/ts['batched']:.2f},scan/batched")
 """
 
 
@@ -117,7 +198,8 @@ def run(write_json: bool = True):
         if out.returncode != 0:                         # pragma: no cover
             raise RuntimeError(out.stderr[-2000:])
         for line in out.stdout.splitlines():
-            if line.startswith(("collectives.", "gradreducer.")):
+            if line.startswith(("collectives.", "gradreducer.",
+                                "transports.")):
                 name, val, der = line.split(",")
                 rows.append((name, float(val), der))
         ok = True
@@ -127,6 +209,30 @@ def run(write_json: bool = True):
         # only persist complete runs: a failed child must not overwrite
         # the tracked perf trajectory with a wall-clock-less record
         write_bench_json(rows)
+    return rows
+
+
+def run_quick():
+    """Tiny-shape transport smoke benchmark (never touches the JSON).
+
+    Exercises all three transports, scan vs batched, on 8 fake CPU
+    devices in seconds — the tier-1 smoke test
+    (``tests/test_benchmarks.py``) runs this so the benchmark harness
+    can't silently rot between full ``--json`` refreshes.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_ROOT, "src"), env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", _QUICK_CHILD],
+                         capture_output=True, text=True, timeout=600,
+                         env=env)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    rows = []
+    for line in out.stdout.splitlines():
+        if line.startswith("quick."):
+            name, val, der = line.split(",")
+            rows.append((name, float(val), der))
     return rows
 
 

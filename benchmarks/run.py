@@ -8,6 +8,11 @@ dry-run artifacts if present.
 
 ``--json`` runs only the collective wall-clock benchmark and (re)writes
 ``BENCH_collectives.json``.
+
+``--quick`` runs the tiny-shape transport benchmark (all three
+transports, per-bucket scan vs batched, 8 fake CPU devices, seconds not
+minutes) and never writes the JSON — the tier-1 smoke test invokes this
+so the harness can't silently rot.
 """
 import sys
 import time
@@ -19,6 +24,11 @@ def main(argv=None) -> None:
                             fig10_aggregation, fig11_switch_bw,
                             fig13_sparse_model, fig14_sparse_sim,
                             fig15_network, roofline)
+    if "--quick" in argv:
+        print("name,value,derived")
+        for name, val, derived in collectives_bench.run_quick():
+            print(f"{name},{val},{derived}")
+        return
     if "--json" in argv:
         print("name,value,derived")
         for name, val, derived in collectives_bench.run(write_json=True):

@@ -36,6 +36,39 @@ def axis_size(axis: str) -> int:
     return lax.psum(1, axis)
 
 
+def world_size(axes) -> int:
+    """Product of manual-axis sizes (trace time, inside ``shard_map``)."""
+    w = 1
+    for ax in axes:
+        w *= axis_size(ax)
+    return w
+
+
+def ambient_axis_size(axis: str) -> int | None:
+    """Size of ``axis`` in the ambient mesh, outside any traced region.
+
+    Unlike :func:`axis_size` (trace-time, inside ``shard_map``), this
+    reads the ``with set_mesh(...)`` context so constructors can validate
+    mesh-shape preconditions up front.  Returns ``None`` when no ambient
+    mesh is installed or the mesh has no such axis — callers then defer
+    validation to trace time.
+    """
+    mesh = None
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        m = get_abstract()
+        if m is not None and not m.empty:
+            mesh = m
+    if mesh is None:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if not m.empty:
+            mesh = m
+    if mesh is None or axis not in mesh.shape:
+        return None
+    return int(mesh.shape[axis])
+
+
 def make_mesh(axis_shapes, axis_names, *, devices=None):
     """``jax.make_mesh`` with ``axis_types`` only where supported."""
     if HAS_AXIS_TYPE:

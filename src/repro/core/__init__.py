@@ -5,6 +5,8 @@ Public API:
     primitives (call inside a manual ``shard_map`` region).
   - ``sparse``: the §7 top-k sparse allreduce with densify-on-overflow.
   - ``compression``: int8 transport + error feedback (F1).
+  - ``transports``: the unified transport layer — dense / int8 / sparse
+    batched (B, S) arena schedules behind one dispatch.
   - ``reproducible``: bitwise-deterministic reduction (F3).
   - ``fsdp``: parameter gather / gradient reduce-scatter custom_vjp.
   - ``engine.FlareConfig`` / ``engine.GradReducer``: the composable
@@ -12,10 +14,10 @@ Public API:
   - ``topology``: reduction trees + the control-plane network manager.
 """
 from repro.core import (bucketing, collectives, compression, fsdp,
-                        reproducible, sparse, topology)
+                        reproducible, sparse, topology, transports)
 from repro.core.engine import FlareConfig, GradReducer
 
 __all__ = [
     "bucketing", "collectives", "compression", "fsdp", "reproducible",
-    "sparse", "topology", "FlareConfig", "GradReducer",
+    "sparse", "topology", "transports", "FlareConfig", "GradReducer",
 ]

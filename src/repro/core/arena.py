@@ -62,6 +62,23 @@ class DtypeArena:
     def used_elems(self) -> int:
         return sum(s.size for s in self.slots)
 
+    @property
+    def valid_extents(self) -> tuple[int, ...]:
+        """Unpadded element count of each bucket.
+
+        Slots tile the arena contiguously from offset 0 and padding lives
+        only at the tail, so bucket ``b`` holds real data in its first
+        ``min(S, used - b*S)`` elements.  Size-derived transport knobs
+        (the sparse top-k, quantization block counts) are computed from
+        these extents, never from the padded ``bucket_elems`` — the
+        padded size would inflate k relative to the legacy per-bucket
+        path (see ``sparse.sparse_k``).
+        """
+        used = self.used_elems
+        return tuple(
+            max(0, min(self.bucket_elems, used - b * self.bucket_elems))
+            for b in range(self.num_buckets))
+
     def staggers(self, enabled: bool = True) -> jax.Array:
         """Per-bucket ring-phase offsets (staggered sending, §5)."""
         if not enabled:

@@ -57,6 +57,16 @@ def _ring_perm(p: int) -> list[tuple[int, int]]:
     return [(i, (i + 1) % p) for i in range(p)]
 
 
+def xor_perm(p: int, d: int) -> list[tuple[int, int]]:
+    """The recursive-doubling involution at distance ``d``: rank i <-> i^d.
+
+    One XOR step of every log-depth schedule in this repo — rhd,
+    fixed-tree, and the sparse coordinate-list exchange all walk
+    ``xor_perm(p, 1<<s)`` for s in range(log2 P).
+    """
+    return [(i, i ^ d) for i in range(p)]
+
+
 def _bitrev_perm(p: int) -> list[tuple[int, int]]:
     """The bit-reversal involution: rank i <-> bitrev(i).
 
@@ -297,7 +307,7 @@ def rhd_reduce_scatter(x: jax.Array, axis: str, *, op: Op = jnp.add) -> jax.Arra
     steps = p.bit_length() - 1
     for k in range(steps):
         d = 1 << k
-        perm = [(i, i ^ d) for i in range(p)]
+        perm = xor_perm(p, d)
         half = x.shape[0] // 2
         lo, hi = x[:half], x[half:]
         bit = jnp.reshape((r & d) != 0, (1,) * x.ndim)
@@ -315,7 +325,7 @@ def rhd_all_gather(seg: jax.Array, axis: str) -> jax.Array:
     steps = p.bit_length() - 1
     for k in reversed(range(steps)):
         d = 1 << k
-        perm = [(i, i ^ d) for i in range(p)]
+        perm = xor_perm(p, d)
         recv = lax.ppermute(seg, axis, perm)
         bit = jnp.reshape((r & d) != 0, (1,) * seg.ndim)
         seg = jnp.where(bit,
@@ -358,7 +368,7 @@ def allreduce_fixed_tree(x: jax.Array, axis: str, *, op: Op = jnp.add,
     steps = p.bit_length() - 1
     for k in range(steps):
         d = 1 << k
-        perm = [(i, i ^ d) for i in range(p)]
+        perm = xor_perm(p, d)
         recv = lax.ppermute(x, axis, perm)
         # IEEE addition is commutative bitwise, so op(x, recv) on one side
         # and op(recv, x) on the other produce identical bits; the tree

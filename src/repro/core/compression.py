@@ -20,7 +20,6 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.compat import axis_size as _axis_size
-from repro.core import collectives as coll
 
 INT8_MAX = 127.0
 
@@ -28,25 +27,37 @@ INT8_MAX = 127.0
 def quantize_int8(x: jax.Array, block: int = 256) -> tuple[jax.Array, jax.Array]:
     """Blockwise symmetric int8 quantization.
 
-    Returns ``(q, scales)`` with ``q`` int8 of x.shape (flat, padded by the
-    caller to a multiple of ``block``) and ``scales`` fp32 of shape
-    ``(x.size // block,)``.
+    Returns ``(q, scales)`` with ``q`` int8 of x.shape (flat along the
+    last axis, padded by the caller to a multiple of ``block``) and
+    ``scales`` fp32 of shape ``(*lead, n // block)``.  Leading axes (the
+    arena bucket axis) vectorize: each bucket quantizes exactly as the
+    flat form would.
     """
-    n = x.shape[0]
+    *lead, n = x.shape
     if n % block:
         raise ValueError(f"quantize_int8: len {n} % {block} != 0")
-    xb = x.reshape(n // block, block).astype(jnp.float32)
-    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / INT8_MAX
+    xb = x.reshape(*lead, n // block, block).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / INT8_MAX
     scale = jnp.maximum(scale, 1e-30)
     q = jnp.clip(jnp.round(xb / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
-    return q.reshape(n), scale[:, 0]
+    return q.reshape(x.shape), scale[..., 0]
 
 
 def dequantize_int8(q: jax.Array, scales: jax.Array, block: int = 256,
                     dtype=jnp.float32) -> jax.Array:
-    n = q.shape[0]
-    qb = q.reshape(n // block, block).astype(jnp.float32)
-    return (qb * scales[:, None]).reshape(n).astype(dtype)
+    *lead, n = q.shape
+    qb = q.reshape(*lead, n // block, block).astype(jnp.float32)
+    return (qb * scales[..., None]).reshape(q.shape).astype(dtype)
+
+
+def _pad_last(x: jax.Array, m: int) -> tuple[jax.Array, int]:
+    """Pad the last axis of ``x`` to a multiple of ``m``; return (padded, n)."""
+    n = x.shape[-1]
+    rem = (-n) % m
+    if rem:
+        pad = jnp.zeros(x.shape[:-1] + (rem,), x.dtype)
+        x = jnp.concatenate([x, pad], axis=-1)
+    return x, n
 
 
 def quantized_allreduce(x: jax.Array, axis: str, *, block: int = 256,
@@ -69,7 +80,7 @@ def quantized_allreduce(x: jax.Array, axis: str, *, block: int = 256,
     """
     p = _axis_size(axis)
     # pad so each of the P chunks is a multiple of `block`
-    xp, n = coll.pad_to_multiple(x, p * block)
+    xp, n = _pad_last(x, p * block)
     chunk_len = xp.shape[0] // p
 
     q, scales = quantize_int8(xp, block)                    # (Z,), (Z/block,)
@@ -97,6 +108,46 @@ def quantized_allreduce(x: jax.Array, axis: str, *, block: int = 256,
     return out[:n]
 
 
+def quantized_allreduce_batched(x: jax.Array, axis: str, *, block: int = 256,
+                                mean: bool = False) -> jax.Array:
+    """int8-transport allreduce of a whole ``(B, Z)`` arena.
+
+    The batched form of :func:`quantized_allreduce`: ONE ``all_to_all``
+    moves every bucket's int8 chunks (plus one for the scales) and ONE
+    ``all_gather`` pair brings the requantized sums back — O(1)
+    collectives per dtype group instead of the O(B) a per-bucket
+    ``lax.scan`` pays.  Per bucket the quantize → exchange → fp32
+    accumulate → requantize chain is exactly the flat form's, so results
+    are bitwise-equal to the scan.
+    """
+    p = _axis_size(axis)
+    b = x.shape[0]
+    xp, n = _pad_last(x, p * block)
+    chunk = xp.shape[-1] // p
+
+    q, scales = quantize_int8(xp, block)            # (B, Zp), (B, Zp/block)
+    q = q.reshape(b, p, chunk)
+    scales = scales.reshape(b, p, chunk // block)
+
+    # one exchange for all B buckets: axis 1 is the chunk/destination index
+    qt = lax.all_to_all(q, axis, split_axis=1, concat_axis=1, tiled=True)
+    st = lax.all_to_all(scales, axis, split_axis=1, concat_axis=1, tiled=True)
+
+    # local fp32 accumulation of everyone's copy of my chunk, per bucket
+    deq = qt.astype(jnp.float32).reshape(b, p, chunk // block, block)
+    deq = deq * st[:, :, :, None]
+    red = jnp.sum(deq, axis=1).reshape(b, chunk)    # fp32
+    if mean:
+        red = red / p
+
+    # broadcast leg: requantize + all_gather along the chunk axis
+    qr, sr = quantize_int8(red, block)
+    qg = lax.all_gather(qr, axis, axis=1, tiled=True)        # (B, Zp) int8
+    sg = lax.all_gather(sr, axis, axis=1, tiled=True)        # (B, Zp/blk)
+    out = dequantize_int8(qg, sg, block, dtype=x.dtype)
+    return out[:, :n]
+
+
 def error_feedback_step(grad: jax.Array, ef: jax.Array,
                         transmit_fn) -> tuple[jax.Array, jax.Array]:
     """One EF-compressed reduction step.
@@ -113,7 +164,11 @@ def error_feedback_step(grad: jax.Array, ef: jax.Array,
 
 
 def quantize_roundtrip(x: jax.Array, block: int = 256) -> jax.Array:
-    """What this rank's contribution looks like after encode+decode."""
-    xp, n = coll.pad_to_multiple(x, block)
+    """What this rank's contribution looks like after encode+decode.
+
+    Accepts leading batch axes (the arena bucket axis); padding and the
+    quantization blocks run along the last axis.
+    """
+    xp, n = _pad_last(x, block)
     q, s = quantize_int8(xp, block)
-    return dequantize_int8(q, s, block, dtype=x.dtype)[:n]
+    return dequantize_int8(q, s, block, dtype=x.dtype)[..., :n]

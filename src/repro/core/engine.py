@@ -7,24 +7,29 @@ an *unreduced* gradient pytree inside a manual ``shard_map`` region.  It:
      **flat-arena plan** (``core/arena.py``): one padded buffer per
      dtype, equal-size buckets as a leading axis, per-leaf offsets
      computed once per pytree structure,
-  2. per block, selects the aggregation algorithm by size — the paper's
-     §6.4 switchover (tree < 128 KiB ≤ rhd < 512 KiB ≤ ring/two-level) —
-     or honours an explicit choice,
-  3. reduces **all blocks in one traced computation**: a single
-     ``lax.scan`` over the bucket axis, and for the ring a fused wave
-     pipeline (``collectives.ring_allreduce_bucketed``) that keeps B
-     blocks in flight — the paper's multi-buffer aggregation (§6.2) —
-     instead of the seed's per-bucket Python dispatch loop,
-  4. applies transport compression (int8 + error feedback) or top-k
-     sparsification (the §7 sparse allreduce) when configured,
+  2. per dtype group, selects a **transport** (``core/transports.py``):
+     dense lossless (with the paper's §6.4 size switchover — tree <
+     128 KiB ≤ rhd < 512 KiB ≤ ring/two-level), int8 quantized (F1), or
+     §7 top-k sparse — the three-way dispatch lives in exactly one place,
+  3. reduces **all B buckets of a group in one batched schedule**: the
+     dense path vmaps its collective rounds, the sparse path issues one
+     ppermute per recursive-doubling step carrying every bucket's
+     coordinate list, the int8 path moves the whole arena's payload in a
+     single all_to_all/all_gather pair — the paper's multi-buffer
+     aggregation (§6.2) applied to every transport, not just dense,
+  4. folds top-k + error feedback into the same trace, with the EF
+     residual computed by ``compression.error_feedback_step`` and ``k``
+     derived from each bucket's unpadded extent (``sparse.sparse_k``),
   5. staggers concurrent blocks' ring phases (staggered sending, §5) via
-     a per-bucket phase scalar threaded through the scan,
+     a per-bucket phase scalar,
   6. guarantees bitwise reproducibility when asked (F3: fixed-tree only,
      fp32 accumulation) — the arena and legacy paths are bitwise-equal
      there because the fixed tree combines elementwise.
 
-``FlareConfig(arena=False)`` keeps the seed per-bucket loop alive as the
-benchmark baseline (``benchmarks/collectives_bench.py`` measures both).
+``FlareConfig(arena=False)`` keeps the per-bucket loop alive as the
+benchmark baseline (``benchmarks/collectives_bench.py`` measures both);
+it routes through the same transport objects as a loop over B=1 groups,
+so the wire math is shared and only the batching differs.
 
 Error-feedback state is functional: ``reduce(grads, state) -> (out,
 state)``; the trainer threads it through its optimizer state.
@@ -32,15 +37,15 @@ state)``; the trainer threads it through its optimizer state.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro import compat
 from repro.core import arena as arena_mod
-from repro.core import bucketing, collectives as coll, compression, sparse
+from repro.core import bucketing, transports
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +80,18 @@ class GradReducer:
 
     def __init__(self, config: FlareConfig):
         self.config = config
+        if config.sparse_k_frac > 0:
+            # fail fast: sparse_allreduce's recursive doubling needs a
+            # power-of-two inner axis, and a bad mesh shape should raise
+            # here, not deep inside the traced schedule.  When no ambient
+            # mesh is installed yet the check defers to trace time.
+            inner = config.axes[-1]
+            p = compat.ambient_axis_size(inner)
+            if p is not None and p & (p - 1):
+                raise ValueError(
+                    f"sparse_k_frac={config.sparse_k_frac} requires a "
+                    f"power-of-two inner axis for the §7 recursive-doubling "
+                    f"merge; mesh axis {inner!r} has size {p}")
 
     # -- error-feedback state ------------------------------------------------
     @property
@@ -95,10 +112,20 @@ class GradReducer:
         return self._reduce_legacy(grads, state)
 
     def _world(self) -> int:
-        w = 1
-        for ax in self.config.axes:
-            w *= compat.axis_size(ax)
-        return w
+        return compat.world_size(self.config.axes)
+
+    def _pad_multiple(self, world: int) -> int:
+        """Chunk-divisibility folded into the arena plan.
+
+        ``2 · world`` covers ring (P), pipelined ring waves (2P), rhd (P)
+        and the two-level inner/outer split; with int8 transport the
+        quantization block rides along too, so every bucket chunk is a
+        whole number of quant blocks — no runtime pad anywhere.
+        """
+        pad = 2 * world
+        if self.config.compression == "int8":
+            pad = math.lcm(pad, world * transports.QUANT_BLOCK)
+        return pad
 
     # -- flat-arena pipelined path (the hot path) ----------------------------
     def _reduce_arena(self, grads: Any, state: Any) -> tuple[Any, Any]:
@@ -106,19 +133,18 @@ class GradReducer:
         leaves, treedef = jax.tree.flatten(grads)
         ef_leaves = (jax.tree.flatten(state)[0] if state is not None
                      else None)
-        # fold every collective's chunk-divisibility need into the plan:
-        # 2·world covers ring (P), pipelined ring waves, rhd (P) and the
-        # two-level inner/outer split — no runtime pad_to_multiple.
         plan = arena_mod.build_plan(leaves, c.bucket_bytes,
-                                    pad_multiple=2 * self._world())
+                                    pad_multiple=self._pad_multiple(
+                                        self._world()))
 
         ef_out_groups: list[jax.Array | None] = []
         red_groups: list[jax.Array] = []
         for g in plan.groups:
             buf = g.pack(leaves)
             ef_buf = g.pack(ef_leaves) if ef_leaves is not None else None
-            staggers = g.staggers(c.stagger)
-            red, ef_red = self._reduce_group(buf, ef_buf, staggers, g)
+            transport = transports.from_config(c, g.dtype, batched=True)
+            red, ef_red = transport(buf, ef_buf, g.staggers(c.stagger),
+                                    g.valid_extents)
             red_groups.append(red)
             ef_out_groups.append(ef_red)
         out_leaves = plan.unpack(red_groups)
@@ -130,74 +156,9 @@ class GradReducer:
                                for e, r in zip(ef_out_groups, red_groups)])
         return out, jax.tree.unflatten(treedef, ef_flat)
 
-    def _reduce_group(self, buf: jax.Array, ef: jax.Array | None,
-                      staggers: jax.Array, group: arena_mod.DtypeArena,
-                      ) -> tuple[jax.Array, jax.Array | None]:
-        """Reduce one dtype's (B, S) arena in a single traced computation."""
-        c = self.config
-        *outer_axes, inner = c.axes
-        nbuckets, size = buf.shape
-        nbytes = size * jnp.dtype(group.dtype).itemsize
-        alg = c.algorithm
-        if alg == "auto":
-            alg = coll.select_algorithm(nbytes, reproducible=c.reproducible,
-                                        multi_level=len(c.axes) > 1)
-        is_float = jnp.issubdtype(buf.dtype, jnp.floating)
-
-        if c.sparse_k_frac > 0 and is_float:
-            k = max(1, min(size, int(c.sparse_k_frac * size)))
-
-            def body(_, xs):
-                flat, e, _s = xs
-                v = flat + e
-                if outer_axes:
-                    red, mine = sparse.sparse_allreduce_two_level(
-                        v, inner, outer_axes[-1], k,
-                        density_threshold=c.density_threshold)
-                else:
-                    red, mine = sparse.sparse_allreduce(
-                        v, inner, k, density_threshold=c.density_threshold)
-                if c.mean:
-                    red = red / self._world()
-                return None, (red, v - mine)
-
-            _, (red, ef_out) = lax.scan(body, None, (buf, ef, staggers))
-            return red, ef_out
-
-        if c.compression == "int8" and is_float:
-
-            def body(_, xs):
-                flat, e, _s = xs
-                v = flat + e
-                red = compression.quantized_allreduce(v, inner)
-                for ax in outer_axes:
-                    red = compression.quantized_allreduce(red, ax)
-                if c.mean:
-                    red = red / self._world()
-                return None, (red, v - compression.quantize_roundtrip(v))
-
-            _, (red, ef_out) = lax.scan(body, None, (buf, ef, staggers))
-            return red, ef_out
-
-        # dense, lossless path: ALL B buckets in one vmapped schedule —
-        # every collective round carries the whole arena's worth of
-        # payload in one batched ppermute/exchange, the §6.2 multi-buffer
-        # parallelism (2(P-1) ring rounds total instead of 2B(P-1)).
-        # Per bucket the combine chain is unchanged, so this is
-        # bitwise-equal to the per-bucket loop for every algorithm.
-        ef_out = jnp.zeros_like(ef) if ef is not None else None
-        if alg == "ring_pipelined":
-            alg = "ring"        # batched rounds already overlap blocks
-        red = jax.vmap(
-            lambda v, s: coll.allreduce(
-                v, tuple(c.axes), algorithm=alg,
-                reproducible=c.reproducible, stagger=s))(buf, staggers)
-        if c.mean:
-            red = red / self._world()
-        return red, ef_out
-
-    # -- seed per-bucket loop (benchmark baseline) ---------------------------
+    # -- per-bucket loop (benchmark baseline) --------------------------------
     def _reduce_legacy(self, grads: Any, state: Any) -> tuple[Any, Any]:
+        """The seed dispatch loop, now a loop over B=1 transport groups."""
         c = self.config
         leaves, treedef = jax.tree.flatten(grads)
         ef_leaves = (jax.tree.flatten(state)[0] if state is not None
@@ -211,52 +172,18 @@ class GradReducer:
             flat = bucketing.pack_bucket(leaves, b)
             ef_flat = (bucketing.pack_bucket(ef_leaves, b)
                        if self.needs_state else None)
-            reduced, ef_out = self._reduce_block(flat, ef_flat, b)
-            for i, piece in bucketing.unpack_bucket(reduced, leaves, b):
+            transport = transports.from_config(c, flat.dtype, batched=False)
+            stagger = b.stagger if c.stagger else 0
+            red, ef_out = transport(
+                flat[None], ef_flat[None] if ef_flat is not None else None,
+                jnp.full((1,), stagger, jnp.int32), (b.num_elements,))
+            for i, piece in bucketing.unpack_bucket(red[0], leaves, b):
                 out_leaves[i] = piece
             if ef_out is not None:
-                for i, piece in bucketing.unpack_bucket(ef_out, leaves, b):
+                for i, piece in bucketing.unpack_bucket(ef_out[0], leaves, b):
                     new_ef[i] = piece
 
         out = jax.tree.unflatten(treedef, out_leaves)
         state_out = (jax.tree.unflatten(treedef, new_ef)
                      if self.needs_state else None)
         return out, state_out
-
-    def _reduce_block(self, flat: jax.Array, ef: jax.Array | None,
-                      bucket: bucketing.Bucket,
-                      ) -> tuple[jax.Array, jax.Array | None]:
-        c = self.config
-        stagger = bucket.stagger if c.stagger else 0
-        *outer_axes, inner = c.axes
-
-        if c.sparse_k_frac > 0 and jnp.issubdtype(flat.dtype, jnp.floating):
-            v = flat + ef
-            k = max(1, int(c.sparse_k_frac * v.shape[0]))
-            if outer_axes:
-                reduced, mine = sparse.sparse_allreduce_two_level(
-                    v, inner, outer_axes[-1], k,
-                    density_threshold=c.density_threshold)
-            else:
-                reduced, mine = sparse.sparse_allreduce(
-                    v, inner, k, density_threshold=c.density_threshold)
-            if c.mean:
-                reduced = reduced / self._world()
-            return reduced, v - mine
-
-        if c.compression == "int8" and jnp.issubdtype(flat.dtype, jnp.floating):
-            v = flat + ef
-            reduced = compression.quantized_allreduce(v, inner)
-            for ax in outer_axes:
-                reduced = compression.quantized_allreduce(reduced, ax)
-            if c.mean:
-                reduced = reduced / self._world()
-            return reduced, v - compression.quantize_roundtrip(v)
-
-        # dense, lossless path
-        reduced = coll.allreduce(
-            flat, tuple(c.axes), algorithm=c.algorithm,
-            reproducible=c.reproducible, stagger=stagger)
-        if c.mean:
-            reduced = reduced / self._world()
-        return reduced, (jnp.zeros_like(ef) if ef is not None else None)

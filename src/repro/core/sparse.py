@@ -24,7 +24,7 @@ quantitative claims are validated.
 from __future__ import annotations
 
 import math
-from typing import Callable
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -37,19 +37,47 @@ from repro.core import collectives as coll
 SENTINEL = jnp.iinfo(jnp.int32).max
 
 
-def topk_sparsify(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+def sparse_k(frac: float, extent: int) -> int:
+    """The single source of truth for top-k sizing.
+
+    ``k`` derives from the **unpadded** extent of a reduction block and is
+    clamped to ``[1, extent]`` — the legacy engine used to skip the upper
+    clamp (crashing in ``topk_sparsify`` for ``frac >= 1``) while the
+    arena engine computed it from the padded arena size (inflating it);
+    both now call this.
+    """
+    return max(1, min(int(extent), int(frac * extent)))
+
+
+def topk_sparsify(x: jax.Array, k: int,
+                  k_eff: jax.Array | int | None = None,
+                  ) -> tuple[jax.Array, jax.Array]:
     """Magnitude top-k: returns (values[k], indices[k]) sorted by index.
 
     This is the host-side sparsification step that feeds the paper's F2
     pipeline (e.g. top-0.1%/1% gradient sparsification, SparCML-style).
+
+    ``k`` is the static list *capacity*; ``k_eff`` (optional, may be a
+    traced scalar) keeps only the ``k_eff`` largest-magnitude entries and
+    sentinels out the rest — how the batched transport gives every arena
+    bucket its own unpadded-extent-derived k under one uniform trace.
     """
-    if k > x.shape[0]:
-        raise ValueError(f"k={k} > len(x)={x.shape[0]}")
+    size = x.shape[0]
+    if k > size:
+        raise ValueError(f"k={k} > len(x)={size}")
     _, idx = lax.top_k(jnp.abs(x), k)
     idx = idx.astype(jnp.int32)
+    if k_eff is None:
+        order = jnp.argsort(idx)
+        idx = idx[order]
+        return x[idx], idx
+    # entries come out of top_k in magnitude order: position i holds the
+    # (i+1)-th largest, so masking positions >= k_eff keeps the top k_eff.
+    idx = jnp.where(jnp.arange(k) < k_eff, idx, SENTINEL)
     order = jnp.argsort(idx)
     idx = idx[order]
-    val = x[idx]
+    val = jnp.where(idx < size, x[jnp.minimum(idx, size - 1)],
+                    jnp.zeros((), x.dtype))
     return val, idx
 
 
@@ -74,7 +102,13 @@ def merge_coordinate_lists(idx_a: jax.Array, val_a: jax.Array,
     analogue of the paper's hash-table insert-or-accumulate handler; the
     two-pointer merge becomes sort + adjacent-duplicate combine, which maps
     onto the VPU instead of data-dependent branches.
+
+    Inputs may carry a leading bucket axis ``(B, n)``: each bucket merges
+    independently (one vmapped sort + cumsum scatter) — the form the
+    batched transport feeds with all B arena buckets' lists at once.
     """
+    if idx_a.ndim == 2:
+        return jax.vmap(merge_coordinate_lists)(idx_a, val_a, idx_b, val_b)
     n = idx_a.shape[0] + idx_b.shape[0]
     idx = jnp.concatenate([idx_a, idx_b])
     val = jnp.concatenate([val_a, val_b])
@@ -107,6 +141,7 @@ def densify_step(nnz_cap: int, size: int, density_threshold: float) -> bool:
 def sparse_allreduce(x: jax.Array, axis: str, k: int, *,
                      density_threshold: float = 0.25,
                      mean: bool = False,
+                     k_eff: jax.Array | int | None = None,
                      ) -> tuple[jax.Array, jax.Array]:
     """Top-k sparse allreduce over one manual mesh axis.
 
@@ -129,14 +164,14 @@ def sparse_allreduce(x: jax.Array, axis: str, k: int, *,
     size = x.shape[0]
     steps = p.bit_length() - 1
 
-    val, idx = topk_sparsify(x, k)
+    val, idx = topk_sparsify(x, k, k_eff)
     mine = scatter_dense(val, idx, size, dtype=x.dtype)
 
     dense: jax.Array | None = None
     cap = k
     for s in range(steps):
         d = 1 << s
-        perm = [(i, i ^ d) for i in range(p)]
+        perm = coll.xor_perm(p, d)
         if dense is None and densify_step(cap * 2, size, density_threshold):
             dense = scatter_dense(val, idx, size, dtype=jnp.float32)
         if dense is None:
@@ -154,9 +189,86 @@ def sparse_allreduce(x: jax.Array, axis: str, k: int, *,
     return dense.astype(x.dtype), mine
 
 
+def _exchange_lists(idx: jax.Array, val: jax.Array, axis: str, perm,
+                    ) -> tuple[jax.Array, jax.Array]:
+    """ppermute a batch of coordinate lists to the XOR partner.
+
+    For 32-bit values the (idx, val) pair travels as ONE ppermute — the
+    values are bitcast to int32 and stacked with the indices, so each
+    recursive-doubling step of the batched schedule issues a single
+    collective carrying all B buckets' lists (bit-exact: the bitcast
+    round-trips every payload, NaNs included).  Sub-32-bit floats fall
+    back to two ppermutes (idx + val) — still one pair per step for the
+    whole batch, never per bucket.
+    """
+    if val.dtype.itemsize == 4:
+        packed = jnp.stack([idx, lax.bitcast_convert_type(val, jnp.int32)])
+        recv = lax.ppermute(packed, axis, perm)
+        return recv[0], lax.bitcast_convert_type(recv[1], val.dtype)
+    return (lax.ppermute(idx, axis, perm), lax.ppermute(val, axis, perm))
+
+
+def sparse_allreduce_batched(x: jax.Array, axis: str,
+                             ks: Sequence[int] | int, *,
+                             density_threshold: float = 0.25,
+                             mean: bool = False,
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Top-k sparse allreduce of a whole ``(B, Z)`` arena in one schedule.
+
+    The batched form of :func:`sparse_allreduce`: every recursive-doubling
+    step issues **one** ppermute carrying all B buckets' coordinate lists
+    (the sort + cumsum-scatter merge vmaps cleanly over the bucket axis),
+    so a dtype group costs O(log P) collectives instead of the
+    O(B log P) a per-bucket ``lax.scan`` pays.  Per bucket the combine
+    chain — topk, merge order, densify crossover — is exactly the
+    single-bucket schedule's, so results are bitwise-equal to the scan.
+
+    ``ks`` gives each bucket its own k (derived from its unpadded
+    extent); the static list capacity is ``max(ks)`` and smaller buckets
+    mask their tails with sentinels.
+    """
+    p = _axis_size(axis)
+    if not (p > 0 and (p & (p - 1)) == 0):
+        raise ValueError(f"sparse_allreduce requires power-of-two P, got {p}")
+    b, size = x.shape
+    ks = tuple(int(k) for k in (ks if hasattr(ks, "__len__") else [ks] * b))
+    if len(ks) != b:
+        raise ValueError(f"got {len(ks)} ks for {b} buckets")
+    k_max = max(ks)
+    steps = p.bit_length() - 1
+    ks_arr = jnp.asarray(ks, jnp.int32)
+
+    val, idx = jax.vmap(lambda v, ke: topk_sparsify(v, k_max, ke))(x, ks_arr)
+    scatter = jax.vmap(lambda v, i, dt=x.dtype: scatter_dense(v, i, size,
+                                                              dtype=dt))
+    scatter32 = jax.vmap(lambda v, i: scatter_dense(v, i, size,
+                                                    dtype=jnp.float32))
+    mine = scatter(val, idx)
+
+    dense: jax.Array | None = None
+    cap = k_max
+    for s in range(steps):
+        d = 1 << s
+        perm = coll.xor_perm(p, d)
+        if dense is None and densify_step(cap * 2, size, density_threshold):
+            dense = scatter32(val, idx)
+        if dense is None:
+            idx_r, val_r = _exchange_lists(idx, val, axis, perm)
+            idx, val = merge_coordinate_lists(idx, val, idx_r, val_r)
+            cap *= 2
+        else:
+            dense = dense + lax.ppermute(dense, axis, perm)
+    if dense is None:
+        dense = scatter32(val, idx)
+    if mean:
+        dense = dense / p
+    return dense.astype(x.dtype), mine
+
+
 def sparse_allreduce_two_level(x: jax.Array, inner_axis: str, outer_axis: str,
                                k: int, *, density_threshold: float = 0.25,
                                mean: bool = False,
+                               k_eff: jax.Array | int | None = None,
                                ) -> tuple[jax.Array, jax.Array]:
     """Multi-pod sparse allreduce: sparse tree within the pod, dense across.
 
@@ -166,8 +278,30 @@ def sparse_allreduce_two_level(x: jax.Array, inner_axis: str, outer_axis: str,
     already replicated within each pod.
     """
     reduced, mine = sparse_allreduce(x, inner_axis, k,
-                                     density_threshold=density_threshold)
+                                     density_threshold=density_threshold,
+                                     k_eff=k_eff)
     reduced = coll.allreduce_rhd(reduced, outer_axis)
+    if mean:
+        total = _axis_size(inner_axis) * _axis_size(outer_axis)
+        reduced = reduced / total
+    return reduced, mine
+
+
+def sparse_allreduce_two_level_batched(x: jax.Array, inner_axis: str,
+                                       outer_axis: str,
+                                       ks: Sequence[int] | int, *,
+                                       density_threshold: float = 0.25,
+                                       mean: bool = False,
+                                       ) -> tuple[jax.Array, jax.Array]:
+    """Batched (B, Z) form of :func:`sparse_allreduce_two_level`.
+
+    Sparse batched schedule within the pod, then a vmapped dense rhd
+    across pods — each outer exchange round carries all B buckets' dense
+    vectors in one batched ppermute.
+    """
+    reduced, mine = sparse_allreduce_batched(
+        x, inner_axis, ks, density_threshold=density_threshold)
+    reduced = jax.vmap(lambda v: coll.allreduce_rhd(v, outer_axis))(reduced)
     if mean:
         total = _axis_size(inner_axis) * _axis_size(outer_axis)
         reduced = reduced / total

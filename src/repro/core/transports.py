@@ -1,0 +1,251 @@
+"""The unified transport layer: one batched wire schedule per dtype arena.
+
+``GradReducer`` used to re-implement the sparse / int8 / dense three-way
+dispatch twice (once for the flat-arena path, once for the legacy
+per-bucket loop), and the sparse and int8 branches serialized the arena's
+B buckets under a ``lax.scan`` — exactly the workloads the paper argues
+benefit most from flexible aggregation (§7 sparse, F1 custom dtypes).
+This module is the single home of that dispatch: a ``Transport`` reduces
+a whole ``(B, S)`` dtype arena in one traced computation, with top-k +
+error-feedback folded into the same trace.
+
+=============  ============================================================
+transport       batched wire schedule (per dtype group)
+=============  ============================================================
+``dense``       vmapped allreduce: every ring/rhd/tree round carries all B
+                buckets' chunks in one collective — 2(P-1) or log P rounds
+                total (PR 1's §6.2 multi-buffer schedule, unchanged).
+``int8``        ``compression.quantized_allreduce_batched``: ONE
+                ``all_to_all`` + ONE ``all_gather`` pair move every
+                bucket's int8 payload — O(1) collectives per group.
+``sparse``      ``sparse.sparse_allreduce_batched``: each recursive-
+                doubling step issues ONE ppermute carrying all B buckets'
+                coordinate lists — O(log P) collectives per group.
+=============  ============================================================
+
+Every transport also keeps its per-bucket ``lax.scan`` ancestor alive
+behind ``batched=False`` — the bitwise-equality oracle for tests and the
+scan-vs-batched baseline for ``benchmarks/run.py --quick``; per bucket
+the combine chains are identical, so ``batched`` never changes results,
+only how many collectives carry them.
+
+Error feedback lives in exactly one place: every lossy transport routes
+through ``compression.error_feedback_step`` with its own ``transmit``
+closure (sparse returns the decoded top-k contribution, int8 the
+quantize round-trip), and ``k`` for the sparse transport derives from
+each bucket's **unpadded** extent via ``sparse.sparse_k`` — shared with
+the legacy path, which is now just a B=1 loop over these same objects.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import compat
+from repro.core import collectives as coll, compression, sparse
+
+#: Quantization block of the int8 transport; ``GradReducer`` folds
+#: ``world * QUANT_BLOCK`` into the arena plan's pad multiple so every
+#: bucket chunk is a whole number of quantization blocks (no runtime pad).
+QUANT_BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class Transport:
+    """Reduces one dtype's ``(B, S)`` arena in a single traced schedule.
+
+    ``__call__(buf, ef, staggers, extents)``:
+      * ``buf`` — the ``(B, S)`` arena buffer;
+      * ``ef`` — error-feedback residuals of the same shape (or None);
+      * ``staggers`` — per-bucket ring-phase offsets (§5), shape ``(B,)``;
+      * ``extents`` — static per-bucket unpadded element counts from the
+        arena plan (``DtypeArena.valid_extents``); k and other
+        size-derived knobs come from these, never the padded S.
+
+    Returns ``(reduced, ef_out)`` with ``ef_out`` None for lossless
+    transports.
+    """
+
+    axes: tuple[str, ...]
+    mean: bool = False
+    batched: bool = True    # False → the per-bucket lax.scan ancestor
+
+    @property
+    def needs_state(self) -> bool:
+        return False
+
+    def _world(self) -> int:
+        return compat.world_size(self.axes)
+
+    def __call__(self, buf: jax.Array, ef: jax.Array | None,
+                 staggers: jax.Array, extents: Sequence[int],
+                 ) -> tuple[jax.Array, jax.Array | None]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseTransport(Transport):
+    """Lossless allreduce of the arena — PR 1's vmapped schedule."""
+
+    algorithm: str = "auto"
+    reproducible: bool = False
+
+    def _resolve(self, buf: jax.Array) -> str:
+        alg = self.algorithm
+        if alg == "auto":
+            nbytes = buf.shape[1] * jnp.dtype(buf.dtype).itemsize
+            alg = coll.select_algorithm(nbytes, reproducible=self.reproducible,
+                                        multi_level=len(self.axes) > 1)
+        if alg == "ring_pipelined" and self.batched:
+            alg = "ring"        # batched rounds already overlap blocks
+        return alg
+
+    def __call__(self, buf, ef, staggers, extents):
+        alg = self._resolve(buf)
+        one = lambda v, s: coll.allreduce(
+            v, self.axes, algorithm=alg, reproducible=self.reproducible,
+            stagger=s)
+        if self.batched:
+            # all B buckets in one vmapped schedule: every collective
+            # round carries the whole arena's worth of payload in one
+            # batched ppermute/exchange (§6.2 multi-buffer parallelism).
+            # Per bucket the combine chain is unchanged, so this is
+            # bitwise-equal to the scan for every algorithm.
+            red = jax.vmap(one)(buf, staggers)
+        else:
+            _, red = lax.scan(lambda _, xs: (None, one(*xs)), None,
+                              (buf, staggers))
+        if self.mean:
+            red = red / self._world()
+        return red, (jnp.zeros_like(ef) if ef is not None else None)
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Transport(Transport):
+    """F1 int8 transport: quantized exchange with error feedback."""
+
+    block: int = QUANT_BLOCK
+
+    @property
+    def needs_state(self) -> bool:
+        return True
+
+    def __call__(self, buf, ef, staggers, extents):
+        if ef is None:
+            ef = jnp.zeros_like(buf)
+        *outer_axes, inner = self.axes
+
+        if self.batched:
+            def transmit(v):            # v: (B, S)
+                red = compression.quantized_allreduce_batched(
+                    v, inner, block=self.block)
+                for ax in outer_axes:
+                    red = compression.quantized_allreduce_batched(
+                        red, ax, block=self.block)
+                return red, compression.quantize_roundtrip(v, self.block)
+
+            red, ef_out = compression.error_feedback_step(buf, ef, transmit)
+        else:
+            def body(_, xs):
+                v, e, _s = xs
+
+                def transmit(w):        # w: (S,)
+                    red = compression.quantized_allreduce(
+                        w, inner, block=self.block)
+                    for ax in outer_axes:
+                        red = compression.quantized_allreduce(
+                            red, ax, block=self.block)
+                    return red, compression.quantize_roundtrip(w, self.block)
+
+                return None, compression.error_feedback_step(v, e, transmit)
+
+            _, (red, ef_out) = lax.scan(body, None, (buf, ef, staggers))
+        if self.mean:
+            red = red / self._world()
+        return red, ef_out
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseTransport(Transport):
+    """§7 top-k sparse transport with densify-on-overflow + EF."""
+
+    k_frac: float = 0.01
+    density_threshold: float = 0.25
+
+    @property
+    def needs_state(self) -> bool:
+        return True
+
+    def _ks(self, extents: Sequence[int]) -> tuple[int, ...]:
+        return tuple(sparse.sparse_k(self.k_frac, e) for e in extents)
+
+    def __call__(self, buf, ef, staggers, extents):
+        if ef is None:
+            ef = jnp.zeros_like(buf)
+        *outer_axes, inner = self.axes
+        p = compat.axis_size(inner)
+        if p & (p - 1):
+            raise ValueError(
+                f"sparse transport requires a power-of-two inner axis; "
+                f"mesh axis {inner!r} has size {p}")
+        ks = self._ks(extents)
+
+        if self.batched:
+            def transmit(v):            # v: (B, S)
+                if outer_axes:
+                    return sparse.sparse_allreduce_two_level_batched(
+                        v, inner, outer_axes[-1], ks,
+                        density_threshold=self.density_threshold)
+                return sparse.sparse_allreduce_batched(
+                    v, inner, ks, density_threshold=self.density_threshold)
+
+            red, ef_out = compression.error_feedback_step(buf, ef, transmit)
+        else:
+            k_max = max(ks)
+            ks_arr = jnp.asarray(ks, jnp.int32)
+
+            def body(_, xs):
+                v, e, _s, ke = xs
+
+                def transmit(w):        # w: (S,)
+                    if outer_axes:
+                        return sparse.sparse_allreduce_two_level(
+                            w, inner, outer_axes[-1], k_max,
+                            density_threshold=self.density_threshold,
+                            k_eff=ke)
+                    return sparse.sparse_allreduce(
+                        w, inner, k_max,
+                        density_threshold=self.density_threshold, k_eff=ke)
+
+                return None, compression.error_feedback_step(v, e, transmit)
+
+            _, (red, ef_out) = lax.scan(body, None, (buf, ef, staggers,
+                                                     ks_arr))
+        if self.mean:
+            red = red / self._world()
+        return red, ef_out
+
+
+def from_config(config, dtype, *, batched: bool = True) -> Transport:
+    """The three-way dispatch, in one place.
+
+    ``config`` is any object with the ``FlareConfig`` transport fields
+    (axes, algorithm, reproducible, compression, sparse_k_frac,
+    density_threshold, mean).  Lossy transports apply to floating dtypes
+    only; everything else rides the dense path.
+    """
+    axes = tuple(config.axes)
+    is_float = jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
+    if config.sparse_k_frac > 0 and is_float:
+        return SparseTransport(axes, mean=config.mean, batched=batched,
+                               k_frac=config.sparse_k_frac,
+                               density_threshold=config.density_threshold)
+    if config.compression == "int8" and is_float:
+        return Int8Transport(axes, mean=config.mean, batched=batched)
+    return DenseTransport(axes, mean=config.mean, batched=batched,
+                          algorithm=config.algorithm,
+                          reproducible=config.reproducible)

@@ -6,7 +6,7 @@ Invoked by tests/test_collectives.py as::
         python tests/multidevice_checks.py <group>
 
 Groups: collectives | arena_pipeline | sparse_quant | fsdp_engine |
-        trainer | repro
+        trainer | repro | transports
 Exits non-zero on any failure (assertion output on stderr).
 """
 import os
@@ -24,6 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P     # noqa: E402
 from repro import compat                                       # noqa: E402
 from repro.core import collectives as coll                     # noqa: E402
 from repro.core import compression, fsdp, reproducible, sparse  # noqa: E402
+from repro.core import transports                              # noqa: E402
 from repro.core.engine import FlareConfig, GradReducer         # noqa: E402
 
 
@@ -199,6 +200,112 @@ def check_sparse_quant():
     print("sparse/quant OK")
 
 
+def check_transports():
+    """PR 2: the unified transport layer.
+
+    Verified here:
+      * the batched sparse and int8 schedules are **bitwise-equal** to
+        their per-bucket ``lax.scan`` ancestors (``batched=False``) —
+        the per-bucket combine chains are identical, batching only
+        changes how many collectives carry them;
+      * HLO op counts: the batched sparse transport issues O(log P)
+        ``collective-permute``s and the batched int8 transport O(1)
+        ``all-to-all``/``all-gather``s per dtype group, *independent of
+        B* (doubling B leaves the collective count unchanged);
+      * ``GradReducer`` arena sparse/int8 end-to-end vs a numpy oracle
+        with a ragged tail bucket (k from unpadded extents);
+      * sparse preconditions raise at ``GradReducer`` construction on a
+        non-power-of-two inner axis.
+    """
+    import re
+    from jax.sharding import Mesh
+
+    mesh = _mesh()
+    rng = np.random.default_rng(21)
+    B, S = 4, 64
+    xs = jnp.asarray(rng.normal(size=(4, B * S)).astype(np.float32))
+    extents = (S, S, S, 40)              # ragged tail bucket
+
+    def transport_fn(cfg, batched, b=B, s=S, ext=extents):
+        def fn(x):
+            t = transports.from_config(cfg, jnp.float32, batched=batched)
+            arena = x[0][:b * s].reshape(b, s)
+            red, ef = t(arena, jnp.zeros_like(arena),
+                        jnp.arange(b, dtype=jnp.int32), ext)
+            return jnp.stack([red, ef if ef is not None
+                              else jnp.zeros_like(red)])
+        return fn
+
+    # batched schedule ≡ per-bucket scan ancestor, bitwise (reduced AND
+    # EF residual), across axis layouts and the densify crossover
+    for axes in [("data",), ("pod", "data")]:
+        for kw, name in [(dict(sparse_k_frac=0.1), "sparse"),
+                         (dict(sparse_k_frac=0.45,
+                               density_threshold=0.5), "sparse_densify"),
+                         (dict(compression="int8"), "int8")]:
+            cfg = FlareConfig(axes=axes, **kw)
+            got = _run(transport_fn(cfg, True), xs, mesh)
+            want = _run(transport_fn(cfg, False), xs, mesh)
+            assert got.tobytes() == want.tobytes(), \
+                f"batched != scan: {name} axes={axes}"
+
+    # HLO collective counts: independent of B for the batched transports
+    def count_collectives(cfg, batched, b):
+        fn = jax.jit(compat.shard_map(
+            transport_fn(cfg, batched, b=b, ext=(S,) * b),
+            in_specs=(P(("pod", "data"), None),), out_specs=P(None),
+            axis_names={"pod", "data"}, check_vma=False))
+        x = jax.ShapeDtypeStruct((4, b * S), jnp.float32)
+        with compat.set_mesh(mesh):
+            txt = fn.lower(x).compile().as_text()
+        return {op: len(re.findall(op + r"(?:-start)?\(", txt))
+                for op in ("collective-permute", "all-to-all", "all-gather")}
+
+    sp = FlareConfig(axes=("pod", "data"), sparse_k_frac=0.1)
+    c4, c8 = count_collectives(sp, True, 4), count_collectives(sp, True, 8)
+    assert c4 == c8, f"sparse collective count grew with B: {c4} vs {c8}"
+    # inner data axis (P=2): 1 RD step, one packed ppermute; outer pod
+    # rhd: 1 RS + 1 AG ppermute — O(log P), not O(B log P)
+    assert c4["collective-permute"] == 3, c4
+    q8 = FlareConfig(axes=("pod", "data"), compression="int8")
+    q4, q8c = count_collectives(q8, True, 4), count_collectives(q8, True, 8)
+    assert q4 == q8c, f"int8 collective count grew with B: {q4} vs {q8c}"
+    # per axis leg: one all_to_all + one all_gather for payload, one each
+    # for scales — O(1) per dtype group regardless of B
+    assert q4["all-to-all"] == 4 and q4["all-gather"] == 4, q4
+
+    # GradReducer end-to-end: arena sparse/int8 vs oracle, ragged leaves
+    Z = 192
+    xs2 = jnp.asarray(rng.normal(size=(4, Z)).astype(np.float32))
+    expect = np.asarray(xs2).sum(0)
+
+    def eng(x, kw):
+        g = {"a": x[0][:100], "b": x[0][100:164].reshape(8, 8),
+             "c": x[0][164:]}
+        r = GradReducer(FlareConfig(axes=("pod", "data"), bucket_bytes=256,
+                                    **kw))
+        red, _ = r(g, r.init_state(g))
+        return jnp.concatenate([red["a"], red["b"].reshape(-1), red["c"]])
+
+    for kw, tol in [(dict(sparse_k_frac=1.0), 1e-4),
+                    (dict(compression="int8"), 0.5)]:
+        got = _run(lambda x, kw=kw: eng(x, kw), xs2, mesh)
+        assert np.allclose(got, expect, atol=tol), f"engine arena {kw}"
+
+    # construction-time sparse validation: non-power-of-two inner axis
+    mesh6 = Mesh(np.array(jax.devices()[:6]), ("data",))
+    with compat.set_mesh(mesh6):
+        try:
+            GradReducer(FlareConfig(axes=("data",), sparse_k_frac=0.01))
+        except ValueError as e:
+            assert "power-of-two" in str(e), e
+        else:
+            raise AssertionError("non-pow2 sparse mesh must raise at "
+                                 "construction")
+        GradReducer(FlareConfig(axes=("data",)))   # dense: fine on 6 ranks
+    print("transports OK")
+
+
 def check_fsdp_engine():
     mesh = _mesh()
     rng = np.random.default_rng(2)
@@ -296,6 +403,7 @@ GROUPS = {
     "collectives": check_collectives,
     "arena_pipeline": check_arena_pipeline,
     "sparse_quant": check_sparse_quant,
+    "transports": check_transports,
     "fsdp_engine": check_fsdp_engine,
     "trainer": check_trainer,
     "repro": check_repro,

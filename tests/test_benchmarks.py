@@ -1,0 +1,31 @@
+"""Smoke test for the benchmark harness: ``benchmarks/run.py --quick``.
+
+Runs the tiny-shape transport benchmark end to end (subprocess, 8 fake
+CPU devices) so the harness — the child script, the transport layer's
+benchmark surface, the CSV plumbing — can't silently rot between full
+``--json`` refreshes of ``BENCH_collectives.json``.
+"""
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_run_quick_smoke():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_ROOT, "src"), env.get("PYTHONPATH", "")])
+    r = subprocess.run([sys.executable, "-m", "benchmarks.run", "--quick"],
+                       capture_output=True, text=True, timeout=600,
+                       cwd=_ROOT, env=env)
+    assert r.returncode == 0, f"--quick failed:\n{r.stdout}\n{r.stderr}"
+    rows = [l for l in r.stdout.splitlines() if l.startswith("quick.")]
+    names = {l.split(",")[0] for l in rows}
+    for transport in ("dense", "sparse", "int8"):
+        for mode in ("scan", "batched"):
+            assert f"quick.{transport}.{mode}.us_per_call" in names, names
+        assert f"quick.{transport}.batched_speedup_x" in names, names
+    # wall-clock values are positive microseconds
+    for l in rows:
+        assert float(l.split(",")[1]) > 0, l

@@ -25,8 +25,8 @@ def _run_group(group: str):
 
 
 @pytest.mark.parametrize("group", ["collectives", "arena_pipeline",
-                                   "sparse_quant", "fsdp_engine",
-                                   "trainer", "repro"])
+                                   "sparse_quant", "transports",
+                                   "fsdp_engine", "trainer", "repro"])
 def test_multidevice(group):
     out = _run_group(group)
     assert "OK" in out
