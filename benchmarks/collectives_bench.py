@@ -127,6 +127,45 @@ with compat.set_mesh(mesh8):
                   f"{ts[mode]*1e6:.0f},8dev_cpu_B{B}xS{S}")
         print(f"transports.{name}.batched_speedup_x,"
               f"{ts['scan']/ts['batched']:.2f},scan/batched")
+
+# --- flat vs hierarchical transport schedules on a (2, 4) mesh (PR 3) ------
+# the tree-driven two-level schedule (DESIGN.md §11): reduce-scatter
+# intra-pod, reduce only Z/fanin across pods, all-gather back — vs the
+# flat per-axis schedule at full Z on both axes.  Shapes are per
+# transport, each in its bandwidth-bound regime where the wire-byte
+# model (~(1 + 1/fanin)·Z inter-pod vs 2Z flat) governs: dense 1-MiB
+# buckets, int8 256-KiB, sparse 4-MiB with k = 0.05% (the inter-pod hop
+# carries coordinate lists instead of dense vectors).
+from repro.launch import mesh as launch_mesh
+
+mesh24 = launch_mesh.make_fake_mesh(launch_mesh.FAKE_2D)
+HIER_CASES = [
+    ("dense", 4, 1 << 18, dict(algorithm="ring"), dict(algorithm="auto")),
+    ("int8", 8, 1 << 16, dict(compression="int8"), dict(compression="int8")),
+    ("sparse", 8, 1 << 20, dict(sparse_k_frac=0.0005),
+     dict(sparse_k_frac=0.0005)),
+]
+with compat.set_mesh(mesh24):
+    for name, b, s, flat_kw, hier_kw in HIER_CASES:
+        arena = jnp.asarray(rng.normal(size=(b, s)).astype(np.float32))
+        ad = jax.device_put(arena, NamedSharding(mesh24, P()))
+        exts = (s,) * b
+        ts = {}
+        for mode, kw, hier in [("flat", flat_kw, False),
+                               ("hier", hier_kw, True)]:
+            cfg = FlareConfig(axes=("pod", "data"), hierarchical=hier, **kw)
+            t = transports.from_config(cfg, jnp.float32, batched=True)
+            fn = jax.jit(compat.shard_map(
+                lambda a, t=t, b=b: t(a, jnp.zeros_like(a),
+                                      jnp.zeros((b,), jnp.int32),
+                                      (a.shape[1],) * b)[0],
+                in_specs=(P(),), out_specs=P(), axis_names={"pod", "data"},
+                check_vma=False))
+            ts[mode] = timeit(fn, ad, iters=5)
+            print(f"transports.{name}_{mode}.us_per_call,"
+                  f"{ts[mode]*1e6:.0f},2x4dev_cpu_B{b}xS{s}")
+        print(f"transports.{name}.hier_speedup_x,"
+              f"{ts['flat']/ts['hier']:.2f},flat/hier_2x4mesh")
 """
 
 # tiny-shape variant for `run.py --quick` / the tier-1 smoke test: all
@@ -176,6 +215,32 @@ with compat.set_mesh(mesh8):
                   f"8dev_cpu_B{B}xS{S}")
         print(f"quick.{name}.batched_speedup_x,"
               f"{ts['scan']/ts['batched']:.2f},scan/batched")
+
+# flat vs hierarchical, tiny shapes, (2, 4) mesh — keeps the tree-driven
+# schedule plumbing (PR 3) under the tier-1 smoke test
+if os.environ.get("REPRO_QUICK_INJECT_FAIL"):
+    raise RuntimeError("injected failure (REPRO_QUICK_INJECT_FAIL)")
+from repro.launch import mesh as launch_mesh
+mesh24 = launch_mesh.make_fake_mesh(launch_mesh.FAKE_2D)
+with compat.set_mesh(mesh24):
+    ad = jax.device_put(arena, NamedSharding(mesh24, P()))
+    for name, kw in [("dense", dict()),
+                     ("sparse", dict(sparse_k_frac=0.01)),
+                     ("int8", dict(compression="int8"))]:
+        ts = {}
+        for mode, hier in [("flat", False), ("hier", True)]:
+            cfg = FlareConfig(axes=("pod", "data"), hierarchical=hier, **kw)
+            t = transports.from_config(cfg, jnp.float32, batched=True)
+            fn = jax.jit(compat.shard_map(
+                lambda a, t=t: t(a, jnp.zeros_like(a),
+                                 jnp.zeros((B,), jnp.int32), exts)[0],
+                in_specs=(P(),), out_specs=P(), axis_names={"pod", "data"},
+                check_vma=False))
+            ts[mode] = timeit(fn, ad)
+            print(f"quick.hier.{name}.{mode}.us_per_call,{ts[mode]*1e6:.0f},"
+                  f"2x4dev_cpu_B{B}xS{S}")
+        print(f"quick.hier.{name}.speedup_x,"
+              f"{ts['flat']/ts['hier']:.2f},flat/hier_2x4mesh")
 """
 
 
@@ -212,13 +277,29 @@ def run(write_json: bool = True):
     return rows
 
 
+#: Every row ``--quick`` must produce; a child that dies (or silently
+#: stops printing) after a partial run is a harness failure, not a
+#: shorter report.
+QUICK_EXPECTED_ROWS = frozenset(
+    [f"quick.{t}.{m}.us_per_call" for t in ("dense", "sparse", "int8")
+     for m in ("scan", "batched")]
+    + [f"quick.{t}.batched_speedup_x" for t in ("dense", "sparse", "int8")]
+    + [f"quick.hier.{t}.{m}.us_per_call"
+       for t in ("dense", "sparse", "int8") for m in ("flat", "hier")]
+    + [f"quick.hier.{t}.speedup_x" for t in ("dense", "sparse", "int8")])
+
+
 def run_quick():
     """Tiny-shape transport smoke benchmark (never touches the JSON).
 
-    Exercises all three transports, scan vs batched, on 8 fake CPU
-    devices in seconds — the tier-1 smoke test
-    (``tests/test_benchmarks.py``) runs this so the benchmark harness
-    can't silently rot between full ``--json`` refreshes.
+    Exercises all three transports — scan vs batched on the flat mesh,
+    flat vs hierarchical on the (2, 4) mesh — on 8 fake CPU devices in
+    seconds; the tier-1 smoke test (``tests/test_benchmarks.py``) runs
+    this so the benchmark harness can't silently rot between full
+    ``--json`` refreshes.  Raises (→ ``benchmarks/run.py --quick`` exits
+    nonzero) if the child fails OR comes back with an incomplete row
+    set — a crashed benchmark must never look like a passing run with
+    fewer rows.
     """
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
@@ -233,6 +314,10 @@ def run_quick():
         if line.startswith("quick."):
             name, val, der = line.split(",")
             rows.append((name, float(val), der))
+    missing = QUICK_EXPECTED_ROWS - {name for name, _, _ in rows}
+    if missing:
+        raise RuntimeError(
+            f"--quick benchmark incomplete; missing rows: {sorted(missing)}")
     return rows
 
 

@@ -25,8 +25,17 @@ def main(argv=None) -> None:
                             fig13_sparse_model, fig14_sparse_sim,
                             fig15_network, roofline)
     if "--quick" in argv:
+        # --quick is the tier-1 smoke gate: a raising benchmark must exit
+        # nonzero, never degrade into a shorter CSV (the full run below
+        # keeps its per-module ERROR-row-and-continue behavior — it is a
+        # report, --quick is a check).
         print("name,value,derived")
-        for name, val, derived in collectives_bench.run_quick():
+        try:
+            rows = collectives_bench.run_quick()
+        except Exception as e:
+            print(f"benchmarks.run.quick.ERROR,0,{e!r}", file=sys.stderr)
+            raise SystemExit(1)
+        for name, val, derived in rows:
             print(f"{name},{val},{derived}")
         return
     if "--json" in argv:

@@ -4,6 +4,15 @@ Puts ``src`` on ``sys.path`` so ``python -m pytest -q`` works without the
 ``PYTHONPATH=src`` incantation, and installs the offline ``hypothesis``
 stand-in when the real package isn't available (the container has no
 network access; five tier-1 modules import it at collection time).
+
+Also defines ``--mesh-shape``: the mesh-shape-parametric multidevice
+checks (tests requesting the ``mesh_shape`` fixture) run once per shape.
+Shapes are ``(pod, data)`` reduction topologies over 8 fake CPU devices,
+written ``8`` (flat) or ``2x4`` (two-level); by default one pytest
+invocation covers both, so the flat and hierarchical transport schedules
+are differentially tested on every tier-1 run.  Example::
+
+    python -m pytest tests/test_collectives.py --mesh-shape 2x4
 """
 import os
 import sys
@@ -17,3 +26,23 @@ try:
 except ImportError:
     from repro import _hypothesis_stub
     _hypothesis_stub.install()
+
+#: Default topologies for the shape-parametric multidevice checks: the
+#: flat single-level mesh and the (2, 4) mesh whose reduction tree picks
+#: the hierarchical schedule.
+DEFAULT_MESH_SHAPES = ("8", "2x4")
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--mesh-shape", action="append", default=None, dest="mesh_shapes",
+        metavar="PxD",
+        help="(pod, data) mesh shape for the multidevice checks, e.g. 8 or "
+             "2x4; repeat to test several (default: 8 and 2x4)")
+
+
+def pytest_generate_tests(metafunc):
+    if "mesh_shape" in metafunc.fixturenames:
+        shapes = metafunc.config.getoption("mesh_shapes") \
+            or list(DEFAULT_MESH_SHAPES)
+        metafunc.parametrize("mesh_shape", shapes)

@@ -69,6 +69,24 @@ def ambient_axis_size(axis: str) -> int | None:
     return int(mesh.shape[axis])
 
 
+def axis_tuple(axes) -> tuple[str, ...]:
+    """Normalize a single axis name or a sequence of names to a tuple."""
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def ambient_axis_sizes(axes) -> tuple[int, ...] | None:
+    """Sizes of several ambient-mesh axes, or None if any is unknown.
+
+    The tuple form of :func:`ambient_axis_size`, used by constructors
+    that validate multi-axis (hierarchical-schedule) preconditions up
+    front; ``None`` defers validation to trace time.
+    """
+    sizes = tuple(ambient_axis_size(a) for a in axes)
+    if any(s is None for s in sizes):
+        return None
+    return sizes
+
+
 def make_mesh(axis_shapes, axis_names, *, devices=None):
     """``jax.make_mesh`` with ``axis_types`` only where supported."""
     if HAS_AXIS_TYPE:

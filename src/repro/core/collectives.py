@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.compat import axis_size as _axis_size
+from repro.core import topology
 
 Op = Callable[[jax.Array, jax.Array], jax.Array]
 
@@ -428,6 +429,101 @@ def allreduce_two_level(x: jax.Array, inner_axis: str, outer_axis: str, *,
 
 
 # ---------------------------------------------------------------------------
+# Tree-driven hierarchical schedule — the ReductionTree as source of truth.
+# ---------------------------------------------------------------------------
+
+def hierarchical_allreduce(x: jax.Array, axes: tuple[str, ...], *,
+                           op: Op = jnp.add,
+                           stagger: int = 0,
+                           fixed_tree: bool = False,
+                           accum_dtype: jnp.dtype | None = None) -> jax.Array:
+    """Allreduce scheduled by the mesh's reduction tree (§1, §4).
+
+    ``axes`` is outermost-first (``("pod", "data")``).  The schedule
+    walks ``topology.mesh_levels``: level 1 (leaf switches) reduce-
+    scatters over the innermost axis — each rank ends owning
+    ``1/fanin`` of the partially-reduced vector, the leaf switch's
+    aggregation buffer — levels ≥ 2 allreduce the owned segment over
+    their axes (the tree's upper switches), and the root multicast is
+    the closing all-gather back over level 1.  Inter-level traffic per
+    rank is ``~Z/leaf_fanin · f(outer)`` instead of the flat schedule's
+    ``~Z`` — the switch-aggregation bandwidth argument on mesh wires.
+
+    ``fixed_tree=True`` is the reproducible variant (F3): the leaf level
+    runs the recursive-halving reduce-scatter (per-segment combine tree
+    = the aligned binary tree over inner rank ids), upper levels the
+    XOR fixed tree, with fp32 accumulation.  Every combine is a pure
+    function of rank ids, never of arrival order or device placement —
+    bitwise-identical across runs and device permutations.  Requires
+    power-of-two axis sizes.
+
+    Per-level wire algorithms otherwise come from the level fan-in:
+    power-of-two fan-ins take the log-depth rhd path, others the ring.
+    """
+    sizes = tuple(_axis_size(a) for a in axes)
+    levels = topology.mesh_levels(axes, sizes)
+    if len(levels) == 1 and levels[0].fanin == 1:       # 1-host mesh
+        return x
+    leaf = levels[0]
+
+    orig_dtype = x.dtype
+    if fixed_tree:
+        if accum_dtype is None:
+            accum_dtype = jnp.float32
+        if any(not _is_pow2(l.fanin) for l in levels):
+            raise ValueError(
+                f"hierarchical fixed_tree requires power-of-two fan-ins, "
+                f"got {[l.fanin for l in levels]}")
+        x = x.astype(accum_dtype)
+
+    xp, n = pad_to_multiple(x, leaf.fanin)
+    # level 1: leaf-switch aggregation (reduce-scatter over the inner axis)
+    if fixed_tree or _is_pow2(leaf.fanin):
+        seg = rhd_reduce_scatter(xp, leaf.axis, op=op)
+    else:
+        seg = ring_reduce_scatter(xp, leaf.axis, op=op, stagger=stagger)
+    # levels >= 2: upper switches allreduce the owned segment
+    for lvl in levels[1:]:
+        if fixed_tree:
+            seg = allreduce_fixed_tree(seg, lvl.axis, op=op)
+        elif _is_pow2(lvl.fanin):
+            seg = allreduce_rhd(seg, lvl.axis, op=op)
+        else:
+            seg = allreduce_ring(seg, lvl.axis, op=op, stagger=stagger)
+    # root multicast: all-gather back down the leaf level
+    if fixed_tree or _is_pow2(leaf.fanin):
+        full = rhd_all_gather(seg, leaf.axis)
+    else:
+        full = ring_all_gather(seg, leaf.axis, stagger=stagger)
+    return full[:n].astype(orig_dtype)
+
+
+def hierarchical_allreduce_bucketed(arena: jax.Array, axes: tuple[str, ...],
+                                    *, op: Op = jnp.add,
+                                    staggers: jax.Array | None = None,
+                                    fixed_tree: bool = False,
+                                    accum_dtype: jnp.dtype | None = None,
+                                    ) -> jax.Array:
+    """Hierarchical allreduce of a ``(B, S)`` arena, all buckets in flight.
+
+    The vmapped form of :func:`hierarchical_allreduce`: every collective
+    round of every level carries all B buckets' payloads in ONE batched
+    exchange (the §6.2 multi-buffer schedule applied to the tree), each
+    bucket offset by its own ring ``stagger`` phase where the ring is in
+    play.  Per bucket the combine chain is exactly the single-vector
+    schedule's, so results are bitwise-equal to a per-bucket loop.
+    """
+    b = arena.shape[0]
+    if staggers is None:
+        staggers = jnp.zeros((b,), jnp.int32)
+    return jax.vmap(
+        lambda v, s: hierarchical_allreduce(v, axes, op=op, stagger=s,
+                                            fixed_tree=fixed_tree,
+                                            accum_dtype=accum_dtype)
+    )(arena, staggers)
+
+
+# ---------------------------------------------------------------------------
 # Vendor baseline.
 # ---------------------------------------------------------------------------
 
@@ -478,10 +574,16 @@ def allreduce(x: jax.Array, axes: tuple[str, ...], *, algorithm: str = "auto",
     if algorithm == "auto":
         algorithm = select_algorithm(nbytes, reproducible=reproducible,
                                      multi_level=len(axes) > 1)
-    if reproducible and algorithm not in ("fixed_tree",):
-        raise ValueError("reproducible mode requires the fixed_tree algorithm")
+    if reproducible and algorithm not in ("fixed_tree", "hierarchical"):
+        raise ValueError("reproducible mode requires the fixed_tree or "
+                         "hierarchical (fixed-tree levels) algorithm")
     if accum_dtype is None and reproducible:
         accum_dtype = jnp.float32
+
+    if algorithm == "hierarchical":
+        return hierarchical_allreduce(x, axes, op=op, stagger=stagger,
+                                      fixed_tree=reproducible,
+                                      accum_dtype=accum_dtype)
 
     if len(axes) == 1:
         inner = axes[0]
@@ -590,7 +692,11 @@ def wire_bytes_per_rank(nbytes: int, p_inner: int, p_outer: int = 1, *,
         import math
         return z * math.log2(max(p_inner, 2)) + (
             z * math.log2(p_outer) if p_outer > 1 else 0.0)
-    if algorithm == "two_level":
+    if algorithm in ("two_level", "hierarchical"):
+        # The tree-driven schedule's wire model (DESIGN.md §11): the leaf
+        # level carries ~2Z(1-1/fanin) intra-pod (RS up + AG down), and
+        # the inter-level hop shrinks by the leaf fan-in — each leaf
+        # switch forwards ONE aggregated segment for `fanin` inputs.
         inner = z * (p_inner - 1) / p_inner        # RS up the tree
         inner += z * (p_inner - 1) / p_inner       # AG down the tree
         outer = 2 * (z / p_inner) * (p_outer - 1) / max(p_outer, 1)

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.compat import axis_size as _axis_size
+from repro.compat import axis_size as _axis_size, axis_tuple as _axis_tuple
 
 INT8_MAX = 127.0
 
@@ -60,23 +60,16 @@ def _pad_last(x: jax.Array, m: int) -> tuple[jax.Array, int]:
     return x, n
 
 
-def quantized_allreduce(x: jax.Array, axis: str, *, block: int = 256,
-                        mean: bool = False) -> jax.Array:
-    """int8-transport allreduce over one manual mesh axis.
+def quantized_reduce_scatter(x: jax.Array, axis: str, *, block: int = 256,
+                             ) -> tuple[jax.Array, int]:
+    """The reduce-scatter leg of the int8 wire protocol (steps 1–3).
 
-    Wire protocol (Z elements, P ranks):
-      1. split into P chunks; quantize each chunk blockwise → int8 + scales;
-      2. ``all_to_all``: rank r receives every rank's int8 copy of chunk r
-         (Z/P · P = Z int8 bytes on the wire per rank);
-      3. dequantize to fp32, reduce locally (exact fp32 accumulation — the
-         switch's "FPU in every HPU");
-      4. re-quantize the reduced chunk, ``all_gather`` int8 + scales back
-         (Z int8 bytes);
-      5. dequantize.
-
-    The result carries quantization error from steps 1 and 4 only (one
-    round each way), matching the paper's transport-precision trade; use
-    ``error_feedback_step`` to fold the residual into the next iteration.
+    Quantize P chunks blockwise, ``all_to_all`` so rank r holds every
+    rank's int8 copy of chunk r, dequantize and accumulate in fp32 (the
+    switch's "FPU in every HPU").  Returns ``(red, n)``: the rank's fp32
+    reduced chunk — the leaf switch's aggregation buffer — and the
+    unpadded input length, which :func:`quantized_all_gather` needs to
+    invert the pad.
     """
     p = _axis_size(axis)
     # pad so each of the P chunks is a multiple of `block`
@@ -96,30 +89,74 @@ def quantized_allreduce(x: jax.Array, axis: str, *, block: int = 256,
     # local fp32 accumulation of everyone's copy of my chunk
     deq = qt.astype(jnp.float32).reshape(p, chunk_len // block, block)
     deq = deq * st[:, :, None]
-    red = jnp.sum(deq, axis=0).reshape(chunk_len)           # fp32
-    if mean:
-        red = red / p
+    return jnp.sum(deq, axis=0).reshape(chunk_len), n       # fp32
 
-    # broadcast leg: requantize + all_gather
+
+def quantized_all_gather(red: jax.Array, axis: str, *, block: int = 256,
+                         dtype=jnp.float32, n: int | None = None) -> jax.Array:
+    """The broadcast leg (steps 4–5): requantize + ``all_gather`` int8."""
     qr, sr = quantize_int8(red, block)
     qg = lax.all_gather(qr, axis, tiled=True)               # (Z,) int8
     sg = lax.all_gather(sr, axis, tiled=True)               # (Z/block,) fp32
-    out = dequantize_int8(qg, sg, block, dtype=x.dtype)
-    return out[:n]
+    out = dequantize_int8(qg, sg, block, dtype=dtype)
+    return out if n is None else out[:n]
 
 
-def quantized_allreduce_batched(x: jax.Array, axis: str, *, block: int = 256,
-                                mean: bool = False) -> jax.Array:
-    """int8-transport allreduce of a whole ``(B, Z)`` arena.
+def quantized_allreduce(x: jax.Array, axis: str, *, block: int = 256,
+                        mean: bool = False) -> jax.Array:
+    """int8-transport allreduce over one manual mesh axis.
 
-    The batched form of :func:`quantized_allreduce`: ONE ``all_to_all``
-    moves every bucket's int8 chunks (plus one for the scales) and ONE
-    ``all_gather`` pair brings the requantized sums back — O(1)
-    collectives per dtype group instead of the O(B) a per-bucket
-    ``lax.scan`` pays.  Per bucket the quantize → exchange → fp32
-    accumulate → requantize chain is exactly the flat form's, so results
-    are bitwise-equal to the scan.
+    Wire protocol (Z elements, P ranks):
+      1. split into P chunks; quantize each chunk blockwise → int8 + scales;
+      2. ``all_to_all``: rank r receives every rank's int8 copy of chunk r
+         (Z/P · P = Z int8 bytes on the wire per rank);
+      3. dequantize to fp32, reduce locally (exact fp32 accumulation — the
+         switch's "FPU in every HPU");
+      4. re-quantize the reduced chunk, ``all_gather`` int8 + scales back
+         (Z int8 bytes);
+      5. dequantize.
+
+    The result carries quantization error from steps 1 and 4 only (one
+    round each way), matching the paper's transport-precision trade; use
+    ``error_feedback_step`` to fold the residual into the next iteration.
     """
+    red, n = quantized_reduce_scatter(x, axis, block=block)
+    if mean:
+        red = red / _axis_size(axis)
+    return quantized_all_gather(red, axis, block=block, dtype=x.dtype, n=n)
+
+
+def quantized_allreduce_hier(x: jax.Array, inner_axis: str, outer_axes,
+                             *, block: int = 256,
+                             mean: bool = False) -> jax.Array:
+    """Hierarchical int8 allreduce over a multi-level reduction tree.
+
+    The flat schedule pays full-Z quantized legs on *every* axis; here
+    only the leaf level sees Z: reduce-scatter intra-pod (leaf-switch
+    aggregation, Z int8 on intra-pod wires), quantized allreduce of the
+    owned ``Z/fanin`` segment across each upper level (the tree's upper
+    switches — the expensive inter-pod hops shrink by the leaf fan-in),
+    then requantize + all-gather back down (root multicast).  One extra
+    quantization round per upper level is the price of keeping those
+    hops at ``Z/fanin``.  ``outer_axes`` is a name or a tuple of names,
+    innermost first.
+    """
+    red, n = quantized_reduce_scatter(x, inner_axis, block=block)
+    world = _axis_size(inner_axis)
+    for ax in _axis_tuple(outer_axes):
+        red = quantized_allreduce(red, ax, block=block)
+        world *= _axis_size(ax)
+    if mean:
+        red = red / world
+    return quantized_all_gather(red, inner_axis, block=block, dtype=x.dtype,
+                                n=n)
+
+
+def quantized_reduce_scatter_batched(x: jax.Array, axis: str, *,
+                                     block: int = 256,
+                                     ) -> tuple[jax.Array, int]:
+    """Reduce-scatter leg for a whole ``(B, Z)`` arena: ONE ``all_to_all``
+    (plus one for scales) carries every bucket's int8 chunks."""
     p = _axis_size(axis)
     b = x.shape[0]
     xp, n = _pad_last(x, p * block)
@@ -136,16 +173,58 @@ def quantized_allreduce_batched(x: jax.Array, axis: str, *, block: int = 256,
     # local fp32 accumulation of everyone's copy of my chunk, per bucket
     deq = qt.astype(jnp.float32).reshape(b, p, chunk // block, block)
     deq = deq * st[:, :, :, None]
-    red = jnp.sum(deq, axis=1).reshape(b, chunk)    # fp32
-    if mean:
-        red = red / p
+    return jnp.sum(deq, axis=1).reshape(b, chunk), n        # fp32
 
-    # broadcast leg: requantize + all_gather along the chunk axis
+
+def quantized_all_gather_batched(red: jax.Array, axis: str, *,
+                                 block: int = 256, dtype=jnp.float32,
+                                 n: int | None = None) -> jax.Array:
+    """Broadcast leg for a ``(B, chunk)`` arena: ONE ``all_gather`` pair."""
     qr, sr = quantize_int8(red, block)
     qg = lax.all_gather(qr, axis, axis=1, tiled=True)        # (B, Zp) int8
     sg = lax.all_gather(sr, axis, axis=1, tiled=True)        # (B, Zp/blk)
-    out = dequantize_int8(qg, sg, block, dtype=x.dtype)
-    return out[:, :n]
+    out = dequantize_int8(qg, sg, block, dtype=dtype)
+    return out if n is None else out[:, :n]
+
+
+def quantized_allreduce_batched(x: jax.Array, axis: str, *, block: int = 256,
+                                mean: bool = False) -> jax.Array:
+    """int8-transport allreduce of a whole ``(B, Z)`` arena.
+
+    The batched form of :func:`quantized_allreduce`: ONE ``all_to_all``
+    moves every bucket's int8 chunks (plus one for the scales) and ONE
+    ``all_gather`` pair brings the requantized sums back — O(1)
+    collectives per dtype group instead of the O(B) a per-bucket
+    ``lax.scan`` pays.  Per bucket the quantize → exchange → fp32
+    accumulate → requantize chain is exactly the flat form's, so results
+    are bitwise-equal to the scan.
+    """
+    red, n = quantized_reduce_scatter_batched(x, axis, block=block)
+    if mean:
+        red = red / _axis_size(axis)
+    return quantized_all_gather_batched(red, axis, block=block, dtype=x.dtype,
+                                        n=n)
+
+
+def quantized_allreduce_hier_batched(x: jax.Array, inner_axis: str,
+                                     outer_axes, *, block: int = 256,
+                                     mean: bool = False) -> jax.Array:
+    """Batched ``(B, Z)`` form of :func:`quantized_allreduce_hier`.
+
+    Still O(1) collectives per dtype group — one ``all_to_all`` pair
+    intra-pod, one ``all_to_all`` + ``all_gather`` pair per upper level
+    at ``Z/fanin``, one ``all_gather`` pair back — with every exchange
+    carrying all B buckets.
+    """
+    red, n = quantized_reduce_scatter_batched(x, inner_axis, block=block)
+    world = _axis_size(inner_axis)
+    for ax in _axis_tuple(outer_axes):
+        red = quantized_allreduce_batched(red, ax, block=block)
+        world *= _axis_size(ax)
+    if mean:
+        red = red / world
+    return quantized_all_gather_batched(red, inner_axis, block=block,
+                                        dtype=x.dtype, n=n)
 
 
 def error_feedback_step(grad: jax.Array, ef: jax.Array,

@@ -54,7 +54,8 @@ class FlareConfig:
 
     axes: tuple[str, ...] = ("data",)   # (outer..., inner); inner = leaf level
     algorithm: str = "auto"             # auto|ring|ring_pipelined|rhd|
-    #                                     fixed_tree|two_level|psum
+    #                                     fixed_tree|two_level|hierarchical|
+    #                                     psum
     reproducible: bool = False          # F3: bitwise-deterministic reduction
     compression: str = "none"           # none|int8  (F1 transport dtypes)
     sparse_k_frac: float = 0.0          # >0 → §7 sparse allreduce
@@ -63,6 +64,10 @@ class FlareConfig:
     stagger: bool = True                # §5 staggered sending
     mean: bool = False                  # divide by world size after reduce
     arena: bool = True                  # flat-arena pipelined hot path
+    #: flat vs hierarchical (tree-driven) wire schedule on multi-axis
+    #: meshes.  None → the reduction tree decides from the mesh shape
+    #: (``topology.transport_schedule``); True/False force it.
+    hierarchical: bool | None = None
 
     def __post_init__(self):
         if self.reproducible and self.compression != "none":
@@ -73,6 +78,19 @@ class FlareConfig:
                              "sparsification")
         if self.compression not in ("none", "int8"):
             raise ValueError(f"unknown compression {self.compression!r}")
+        if self.hierarchical and len(self.axes) < 2:
+            raise ValueError("hierarchical=True needs a multi-axis mesh "
+                             f"(axes={self.axes!r}); the tree has one level")
+        # the force flag and an explicit dense algorithm must agree — a
+        # silently-ignored force is worse than an error
+        if (self.hierarchical is True
+                and self.algorithm not in ("auto", "hierarchical")):
+            raise ValueError(
+                f"hierarchical=True conflicts with algorithm="
+                f"{self.algorithm!r}; use algorithm='auto' or 'hierarchical'")
+        if self.hierarchical is False and self.algorithm == "hierarchical":
+            raise ValueError("hierarchical=False conflicts with "
+                             "algorithm='hierarchical'")
 
 
 class GradReducer:
@@ -92,6 +110,15 @@ class GradReducer:
                     f"sparse_k_frac={config.sparse_k_frac} requires a "
                     f"power-of-two inner axis for the §7 recursive-doubling "
                     f"merge; mesh axis {inner!r} has size {p}")
+            if config.hierarchical:
+                # the hierarchical sparse merge continues the recursive
+                # doubling across the outer axes too
+                sizes = compat.ambient_axis_sizes(config.axes[:-1])
+                if sizes is not None and any(s & (s - 1) for s in sizes):
+                    raise ValueError(
+                        "hierarchical sparse transport requires power-of-two "
+                        f"outer axes; mesh axes {config.axes[:-1]!r} have "
+                        f"sizes {sizes}")
 
     # -- error-feedback state ------------------------------------------------
     @property

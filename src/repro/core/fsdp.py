@@ -43,7 +43,8 @@ def _alg(algorithm: str) -> str:
     FSDP path uses the same ring schedule (and stays bitwise-compatible
     with the arena hot path's per-chunk combine chains).
     """
-    return "rhd" if algorithm in ("auto", "two_level") else algorithm
+    return ("rhd" if algorithm in ("auto", "two_level", "hierarchical")
+            else algorithm)
 
 
 def _gather_impl(shard, axes, algorithm, axis):

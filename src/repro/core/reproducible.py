@@ -23,9 +23,22 @@ import jax.numpy as jnp
 from repro.core import collectives as coll
 
 
-def reproducible_allreduce(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
-    """Bitwise-deterministic allreduce: fixed tree, fp32 accumulation."""
-    return coll.allreduce(x, axes, algorithm="fixed_tree",
+def reproducible_allreduce(x: jax.Array, axes: tuple[str, ...], *,
+                           hierarchical: bool = False) -> jax.Array:
+    """Bitwise-deterministic allreduce: fixed tree, fp32 accumulation.
+
+    ``hierarchical=True`` selects the tree-driven two-level schedule's
+    fixed-tree variant (``collectives.hierarchical_allreduce``): the
+    leaf level reduce-scatters with the recursive-halving aligned tree,
+    upper levels combine with the XOR fixed tree — every combine still a
+    pure function of rank ids, so the F3 guarantee (bitwise-identical
+    across runs and device permutations) holds while the inter-pod hop
+    pays ``Z/fanin`` instead of ``Z``.  The two modes produce different
+    (each internally stable) bit patterns: the combine *trees* differ.
+    """
+    return coll.allreduce(x, axes,
+                          algorithm="hierarchical" if hierarchical
+                          else "fixed_tree",
                           reproducible=True, accum_dtype=jnp.float32)
 
 

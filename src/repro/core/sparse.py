@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.compat import axis_size as _axis_size
+from repro.compat import axis_size as _axis_size, axis_tuple as _axis_tuple
 from repro.core import collectives as coll
 
 #: Sentinel index marking an empty slot; sorts after every valid index.
@@ -138,6 +138,43 @@ def densify_step(nnz_cap: int, size: int, density_threshold: float) -> bool:
     return nnz_cap >= density_threshold * size or nnz_cap >= size
 
 
+def _merge_over_axis(idx, val, dense, cap: int, axis: str, size: int,
+                     density_threshold: float, scatter32, exchange):
+    """One tree level of the sparse schedule: recursive doubling over
+    ``axis`` with densify-on-overflow.
+
+    Carries the (lists | dense) state across levels so the hierarchical
+    schedule can keep coordinate lists through the inter-pod hop: the
+    intra-pod level merges lists first, and the inter-pod level inherits
+    whatever representation the leaf level ended with — sparse lists of
+    capacity ``cap`` while they fit, a dense fp32 accumulator after the
+    crossover (the paper's hash-at-the-leaves / array-at-the-root split,
+    now spanning tree levels).  Returns the updated state.
+    """
+    p = _axis_size(axis)
+    if not (p > 0 and (p & (p - 1)) == 0):
+        raise ValueError(f"sparse merge requires power-of-two P, got {p}")
+    steps = p.bit_length() - 1
+    for s in range(steps):
+        d = 1 << s
+        perm = coll.xor_perm(p, d)
+        if dense is None and densify_step(cap * 2, size, density_threshold):
+            dense = scatter32(val, idx)
+        if dense is None:
+            idx_r, val_r = exchange(idx, val, axis, perm)
+            idx, val = merge_coordinate_lists(idx, val, idx_r, val_r)
+            cap *= 2
+        else:
+            dense = dense + lax.ppermute(dense, axis, perm)
+    return idx, val, dense, cap
+
+
+def _exchange_flat(idx: jax.Array, val: jax.Array, axis: str, perm,
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Single-vector list exchange: one ppermute each for idx and val."""
+    return (lax.ppermute(idx, axis, perm), lax.ppermute(val, axis, perm))
+
+
 def sparse_allreduce(x: jax.Array, axis: str, k: int, *,
                      density_threshold: float = 0.25,
                      mean: bool = False,
@@ -162,28 +199,16 @@ def sparse_allreduce(x: jax.Array, axis: str, k: int, *,
     if not (p > 0 and (p & (p - 1)) == 0):
         raise ValueError(f"sparse_allreduce requires power-of-two P, got {p}")
     size = x.shape[0]
-    steps = p.bit_length() - 1
 
     val, idx = topk_sparsify(x, k, k_eff)
     mine = scatter_dense(val, idx, size, dtype=x.dtype)
+    scatter32 = lambda v, i: scatter_dense(v, i, size, dtype=jnp.float32)
 
-    dense: jax.Array | None = None
-    cap = k
-    for s in range(steps):
-        d = 1 << s
-        perm = coll.xor_perm(p, d)
-        if dense is None and densify_step(cap * 2, size, density_threshold):
-            dense = scatter_dense(val, idx, size, dtype=jnp.float32)
-        if dense is None:
-            idx_r = lax.ppermute(idx, axis, perm)
-            val_r = lax.ppermute(val, axis, perm)
-            idx, val = merge_coordinate_lists(idx, val, idx_r, val_r)
-            cap *= 2
-        else:
-            recv = lax.ppermute(dense, axis, perm)
-            dense = dense + recv
+    idx, val, dense, _ = _merge_over_axis(
+        idx, val, None, k, axis, size, density_threshold, scatter32,
+        _exchange_flat)
     if dense is None:
-        dense = scatter_dense(val, idx, size, dtype=jnp.float32)
+        dense = scatter32(val, idx)
     if mean:
         dense = dense / p
     return dense.astype(x.dtype), mine
@@ -235,7 +260,6 @@ def sparse_allreduce_batched(x: jax.Array, axis: str,
     if len(ks) != b:
         raise ValueError(f"got {len(ks)} ks for {b} buckets")
     k_max = max(ks)
-    steps = p.bit_length() - 1
     ks_arr = jnp.asarray(ks, jnp.int32)
 
     val, idx = jax.vmap(lambda v, ke: topk_sparsify(v, k_max, ke))(x, ks_arr)
@@ -245,24 +269,25 @@ def sparse_allreduce_batched(x: jax.Array, axis: str,
                                                     dtype=jnp.float32))
     mine = scatter(val, idx)
 
-    dense: jax.Array | None = None
-    cap = k_max
-    for s in range(steps):
-        d = 1 << s
-        perm = coll.xor_perm(p, d)
-        if dense is None and densify_step(cap * 2, size, density_threshold):
-            dense = scatter32(val, idx)
-        if dense is None:
-            idx_r, val_r = _exchange_lists(idx, val, axis, perm)
-            idx, val = merge_coordinate_lists(idx, val, idx_r, val_r)
-            cap *= 2
-        else:
-            dense = dense + lax.ppermute(dense, axis, perm)
+    idx, val, dense, _ = _merge_over_axis(
+        idx, val, None, k_max, axis, size, density_threshold, scatter32,
+        _exchange_lists)
     if dense is None:
         dense = scatter32(val, idx)
     if mean:
         dense = dense / p
     return dense.astype(x.dtype), mine
+
+
+def _dense_outer(v: jax.Array, axis: str) -> jax.Array:
+    """Dense inter-pod allreduce: rhd when the axis is a power of two,
+    ring otherwise — the dense exchange must work for *any* pod count
+    (it is also the fallback for meshes the sparse hierarchical merge
+    cannot cross)."""
+    p = _axis_size(axis)
+    if p & (p - 1):
+        return coll.allreduce_ring(v, axis)
+    return coll.allreduce_rhd(v, axis)
 
 
 def sparse_allreduce_two_level(x: jax.Array, inner_axis: str, outer_axis: str,
@@ -280,7 +305,7 @@ def sparse_allreduce_two_level(x: jax.Array, inner_axis: str, outer_axis: str,
     reduced, mine = sparse_allreduce(x, inner_axis, k,
                                      density_threshold=density_threshold,
                                      k_eff=k_eff)
-    reduced = coll.allreduce_rhd(reduced, outer_axis)
+    reduced = _dense_outer(reduced, outer_axis)
     if mean:
         total = _axis_size(inner_axis) * _axis_size(outer_axis)
         reduced = reduced / total
@@ -301,11 +326,92 @@ def sparse_allreduce_two_level_batched(x: jax.Array, inner_axis: str,
     """
     reduced, mine = sparse_allreduce_batched(
         x, inner_axis, ks, density_threshold=density_threshold)
-    reduced = jax.vmap(lambda v: coll.allreduce_rhd(v, outer_axis))(reduced)
+    reduced = jax.vmap(lambda v: _dense_outer(v, outer_axis))(reduced)
     if mean:
         total = _axis_size(inner_axis) * _axis_size(outer_axis)
         reduced = reduced / total
     return reduced, mine
+
+
+def sparse_allreduce_hier(x: jax.Array, inner_axis: str, outer_axes,
+                          k: int, *, density_threshold: float = 0.25,
+                          mean: bool = False,
+                          k_eff: jax.Array | int | None = None,
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Hierarchical sparse allreduce: coordinate lists cross the tree.
+
+    :func:`sparse_allreduce_two_level` always goes *dense* for the
+    inter-pod exchange (Z fp32 elements over the scarce links).  Here
+    the leaf level merges coordinate lists intra-pod first — shrinking
+    the expensive hop's payload to the merged list, capacity
+    ``k·fanin`` — and the upper levels *continue the sparse recursive
+    doubling across pods*, densifying only when the running capacity
+    crosses ``density_threshold · Z`` (wherever in the tree that
+    happens).  When gradients are genuinely sparse the inter-pod wires
+    never see a dense vector at all.  ``outer_axes`` is a name or a
+    tuple of names, innermost first; every reduced axis must be a
+    power of two.
+    """
+    size = x.shape[0]
+    val, idx = topk_sparsify(x, k, k_eff)
+    mine = scatter_dense(val, idx, size, dtype=x.dtype)
+    scatter32 = lambda v, i: scatter_dense(v, i, size, dtype=jnp.float32)
+
+    dense: jax.Array | None = None
+    cap = k
+    world = 1
+    for axis in (inner_axis, *_axis_tuple(outer_axes)):
+        world *= _axis_size(axis)
+        idx, val, dense, cap = _merge_over_axis(
+            idx, val, dense, cap, axis, size, density_threshold, scatter32,
+            _exchange_flat)
+    if dense is None:
+        dense = scatter32(val, idx)
+    if mean:
+        dense = dense / world
+    return dense.astype(x.dtype), mine
+
+
+def sparse_allreduce_hier_batched(x: jax.Array, inner_axis: str,
+                                  outer_axes,
+                                  ks: Sequence[int] | int, *,
+                                  density_threshold: float = 0.25,
+                                  mean: bool = False,
+                                  ) -> tuple[jax.Array, jax.Array]:
+    """Batched ``(B, Z)`` form of :func:`sparse_allreduce_hier`.
+
+    Every recursive-doubling step — intra-pod *and* inter-pod — issues
+    ONE ppermute carrying all B buckets' coordinate lists, so a dtype
+    group costs O(log P_in + Σ log P_out) collectives and the inter-pod
+    steps carry lists, not dense vectors.
+    """
+    b, size = x.shape
+    ks = tuple(int(k) for k in (ks if hasattr(ks, "__len__") else [ks] * b))
+    if len(ks) != b:
+        raise ValueError(f"got {len(ks)} ks for {b} buckets")
+    k_max = max(ks)
+    ks_arr = jnp.asarray(ks, jnp.int32)
+
+    val, idx = jax.vmap(lambda v, ke: topk_sparsify(v, k_max, ke))(x, ks_arr)
+    scatter = jax.vmap(lambda v, i, dt=x.dtype: scatter_dense(v, i, size,
+                                                              dtype=dt))
+    scatter32 = jax.vmap(lambda v, i: scatter_dense(v, i, size,
+                                                    dtype=jnp.float32))
+    mine = scatter(val, idx)
+
+    dense: jax.Array | None = None
+    cap = k_max
+    world = 1
+    for axis in (inner_axis, *_axis_tuple(outer_axes)):
+        world *= _axis_size(axis)
+        idx, val, dense, cap = _merge_over_axis(
+            idx, val, dense, cap, axis, size, density_threshold, scatter32,
+            _exchange_lists)
+    if dense is None:
+        dense = scatter32(val, idx)
+    if mean:
+        dense = dense / world
+    return dense.astype(x.dtype), mine
 
 
 def expected_sparse_wire_bytes(z_elems: int, k: int, p: int, *,

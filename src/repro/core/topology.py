@@ -52,12 +52,18 @@ class ReductionTree:
     shared between levels exactly as in the paper's Figure 1: each switch
     aggregates the packets of its children and forwards one aggregated
     packet to its parent; the root multicasts the result back down.
+
+    ``level_radices`` records the fan-in used at each switch level
+    (innermost/leaf first).  For mesh-mapped trees
+    (:func:`build_mesh_tree`) the entries are the mesh axis sizes; for
+    uniform trees every entry equals ``radix``.
     """
 
     num_hosts: int
     radix: int
     nodes: tuple[TreeNode, ...]
     levels: tuple[tuple[int, ...], ...]   # node_ids per level
+    level_radices: tuple[int, ...] = ()   # fan-in per switch level, leaf first
 
     @property
     def depth(self) -> int:
@@ -70,6 +76,19 @@ class ReductionTree:
     @property
     def num_switches(self) -> int:
         return len(self.nodes) - self.num_hosts
+
+    @property
+    def leaf_fanin(self) -> int:
+        """Children per leaf switch — the inner-axis aggregation factor.
+
+        The hierarchical schedule's inter-level traffic shrinks by exactly
+        this factor (each leaf switch forwards ONE aggregated packet for
+        ``leaf_fanin`` child packets), so it is the quantity the
+        flat-vs-hierarchical policy (:func:`transport_schedule`) keys on.
+        """
+        if self.depth < 1:
+            return 1
+        return len(self.nodes[self.levels[1][0]].children)
 
     def switch_children_counts(self) -> list[int]:
         """Per-switch expected packet count per block (the paper's ``P``)."""
@@ -92,15 +111,11 @@ class ReductionTree:
         return 2 * num_edges * z_bytes
 
 
-def build_tree(num_hosts: int, radix: int) -> ReductionTree:
-    """Build a complete radix-``radix`` reduction tree over the hosts."""
-    if num_hosts < 1:
-        raise ValueError("num_hosts must be >= 1")
-    if radix < 2:
-        raise ValueError("radix must be >= 2")
-
+def _build(num_hosts: int, radix_at) -> tuple[tuple, tuple, tuple]:
+    """Shared level-by-level builder: ``radix_at(level)`` gives the fan-in."""
     nodes: list[TreeNode] = []
     levels: list[list[int]] = []
+    radices: list[int] = []
 
     current = list(range(num_hosts))
     for nid in current:
@@ -110,6 +125,8 @@ def build_tree(num_hosts: int, radix: int) -> ReductionTree:
     level = 0
     while len(current) > 1:
         level += 1
+        radix = radix_at(level)
+        radices.append(radix)
         parents: list[int] = []
         for i in range(0, len(current), radix):
             group = current[i:i + radix]
@@ -123,9 +140,49 @@ def build_tree(num_hosts: int, radix: int) -> ReductionTree:
         levels.append(parents)
         current = parents
 
-    return ReductionTree(num_hosts=num_hosts, radix=radix,
-                         nodes=tuple(nodes),
-                         levels=tuple(tuple(l) for l in levels))
+    return (tuple(nodes), tuple(tuple(l) for l in levels), tuple(radices))
+
+
+def build_tree(num_hosts: int, radix: int) -> ReductionTree:
+    """Build a complete radix-``radix`` reduction tree over the hosts."""
+    if num_hosts < 1:
+        raise ValueError("num_hosts must be >= 1")
+    if radix < 2:
+        raise ValueError("radix must be >= 2")
+    nodes, levels, radices = _build(num_hosts, lambda _lvl: radix)
+    return ReductionTree(num_hosts=num_hosts, radix=radix, nodes=nodes,
+                         levels=levels, level_radices=radices)
+
+
+def build_mesh_tree(axis_sizes: Sequence[int]) -> ReductionTree:
+    """The reduction tree of a nested mesh: one switch level per axis.
+
+    ``axis_sizes`` is outermost-first (the mesh convention, e.g.
+    ``("pod", "data")`` → ``(pods, hosts_per_pod)``).  Level 1 (leaf
+    switches) aggregates over the **innermost** axis — each leaf switch
+    has ``axis_sizes[-1]`` children — level 2 over the next axis out, and
+    so on to the root.  This is the tree the hierarchical transport
+    schedule executes (``core/collectives.hierarchical_allreduce``): the
+    tree is the source of truth, the mesh axes are its wire realization.
+
+    Size-1 axes contribute a (degenerate) single-child level only when
+    they are the sole axis; otherwise they collapse into the level above,
+    matching what the wire schedule actually does (a collective over a
+    size-1 axis moves no bytes).
+    """
+    sizes = [int(s) for s in axis_sizes]
+    if not sizes or any(s < 1 for s in sizes):
+        raise ValueError(f"axis sizes must be >= 1, got {axis_sizes!r}")
+    num_hosts = math.prod(sizes)
+    inner_first = [s for s in reversed(sizes) if s > 1]
+    if not inner_first:                     # all axes trivial → 1-host mesh
+        return ReductionTree(num_hosts=1, radix=2,
+                             nodes=(TreeNode(0, 0, (), None),),
+                             levels=((0,),), level_radices=())
+    nodes, levels, radices = _build(
+        num_hosts, lambda lvl: inner_first[min(lvl, len(inner_first)) - 1])
+    return ReductionTree(num_hosts=num_hosts, radix=inner_first[0],
+                         nodes=nodes, levels=levels, level_radices=radices)
 
 
 def rebuild_excluding(tree: ReductionTree,
@@ -142,6 +199,35 @@ def rebuild_excluding(tree: ReductionTree,
     if not survivors:
         raise ValueError("all hosts failed; no tree to rebuild")
     return build_tree(len(survivors), tree.radix)
+
+
+def rebuild_excluding_switch(tree: ReductionTree,
+                             switch_id: int) -> ReductionTree | None:
+    """Recompute a tree over the *same hosts* avoiding a failed switch.
+
+    The paper's §4 failure path: "the network manager can try to
+    recompute a different reduction tree excluding that switch".  A
+    failed switch means its level must make do with one switch fewer, so
+    the fan-in at that level grows until the level fits — the recomputed
+    tree spans every host but concentrates traffic on the survivors.
+    Returns ``None`` when the failed switch has no sibling at its level
+    (nothing to re-route through): the caller falls back to host-based
+    allreduce, exactly the paper's admission-failure path.
+    """
+    node = tree.nodes[switch_id]
+    if node.is_host:
+        raise ValueError(f"node {switch_id} is a host; use rebuild_excluding")
+    surviving = len(tree.levels[node.level]) - 1
+    if surviving < 1:
+        return None                       # no alternative switch → host-based
+    radix = tree.radix
+    while radix < tree.num_hosts:
+        radix += 1
+        t = build_tree(tree.num_hosts, radix)
+        if len(t.levels) <= node.level \
+                or len(t.levels[node.level]) <= surviving:
+            return t
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -208,19 +294,94 @@ class NetworkManager:
         """Paper §4.3: hosts may keep at most R/M blocks in flight."""
         return max(1, lease.buffers_per_switch // max(1, buffers_per_block))
 
+    def handle_switch_failure(self, lease: AllreduceLease,
+                              switch_id: int) -> AllreduceLease | None:
+        """§4 failure path: recompute the lease's tree, or host-fallback.
+
+        On success the lease is replaced in place (same id, new tree); on
+        ``None`` the lease is released — the caller must run the
+        host-based allreduce for this reduction.
+        """
+        new_tree = rebuild_excluding_switch(lease.tree, switch_id)
+        if new_tree is None:
+            self.release(lease.allreduce_id)
+            return None
+        new_lease = dataclasses.replace(lease, tree=new_tree)
+        self._active[lease.allreduce_id] = new_lease
+        return new_lease
+
+
+# ---------------------------------------------------------------------------
+# Mesh ↔ tree mapping: the hierarchical transport schedule's source of truth.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshLevel:
+    """One switch level of the reduction tree, bound to a mesh axis.
+
+    ``level`` counts from 1 at the leaf switches (innermost mesh axis)
+    toward the root; ``fanin`` is the number of children each switch at
+    this level aggregates — read off the :class:`ReductionTree`, not the
+    mesh, so the tree stays the source of truth for the schedule.
+    """
+
+    level: int
+    axis: str
+    fanin: int
+
 
 def mesh_axes_as_tree(axis_sizes: Sequence[int]) -> ReductionTree:
     """Interpret nested mesh axes as a reduction tree.
 
-    ``axis_sizes = (data,)`` → one-level tree (single switch);
-    ``axis_sizes = (pod, data)`` → two levels: per-pod leaf switch over the
-    ``data`` axis, a root switch over the ``pod`` axis.  This is the shape
-    the two-level collective in ``core/collectives.py`` executes.
+    ``axis_sizes = (data,)`` → one switch level over the ``data`` axis;
+    ``axis_sizes = (pod, data)`` → two levels: per-pod leaf switch over
+    the ``data`` axis, a root switch over the ``pod`` axis.  This is
+    exactly the shape ``core/collectives.hierarchical_allreduce``
+    executes (alias of :func:`build_mesh_tree`).
     """
-    num_hosts = math.prod(axis_sizes)
-    if len(axis_sizes) == 1:
-        return build_tree(num_hosts, radix=axis_sizes[0])
-    # nested: radix per level = axis size, innermost first
-    inner = axis_sizes[-1]
-    tree = build_tree(num_hosts, radix=inner)
-    return tree
+    return build_mesh_tree(axis_sizes)
+
+
+def mesh_levels(axis_names: Sequence[str],
+                axis_sizes: Sequence[int]) -> tuple[MeshLevel, ...]:
+    """Map reduction-tree levels onto mesh axes, leaf level first.
+
+    ``axis_names``/``axis_sizes`` are outermost-first (the mesh
+    convention: ``("pod", "data")``).  Builds the nested tree and walks
+    its switch levels, binding level ``l`` to the ``l``-th axis from the
+    inside; the per-level fan-in comes from the tree's nodes.  Size-1
+    axes carry no traffic and are skipped, mirroring
+    :func:`build_mesh_tree`.  The data plane iterates this: level 1 is
+    the reduce-scatter/all-gather (leaf aggregation + root multicast)
+    axis, levels ≥ 2 reduce the owned segment.
+    """
+    if len(axis_names) != len(axis_sizes):
+        raise ValueError(f"{len(axis_names)} axis names for "
+                         f"{len(axis_sizes)} sizes")
+    tree = build_mesh_tree(axis_sizes)
+    names_inner_first = [n for n, s in zip(reversed(tuple(axis_names)),
+                                           reversed(tuple(axis_sizes)))
+                         if s > 1]
+    if not names_inner_first:               # degenerate 1-host mesh
+        return (MeshLevel(level=1, axis=tuple(axis_names)[-1], fanin=1),)
+    out = []
+    for lvl in range(1, len(tree.levels)):
+        fanin = len(tree.nodes[tree.levels[lvl][0]].children)
+        out.append(MeshLevel(level=lvl, axis=names_inner_first[lvl - 1],
+                             fanin=fanin))
+    return tuple(out)
+
+
+def transport_schedule(tree: ReductionTree) -> str:
+    """Pick ``"flat"`` vs ``"hierarchical"`` from the tree shape.
+
+    The hierarchical schedule wins when the leaf level actually
+    aggregates: inter-level bytes shrink by ``1/leaf_fanin``, so with
+    fan-in ≤ 2 the saving is washed out by the extra phase boundaries
+    (DESIGN.md §11) and a single-level (flat) schedule is at least as
+    good.  Transports consult this with the trace-time mesh tree unless
+    ``FlareConfig.hierarchical`` overrides.
+    """
+    if tree.depth < 2:
+        return "flat"
+    return "hierarchical" if tree.leaf_fanin > 2 else "flat"

@@ -35,6 +35,16 @@ closure (sparse returns the decoded top-k contribution, int8 the
 quantize round-trip), and ``k`` for the sparse transport derives from
 each bucket's **unpadded** extent via ``sparse.sparse_k`` — shared with
 the legacy path, which is now just a B=1 loop over these same objects.
+
+On multi-axis meshes every transport additionally picks a **flat vs
+hierarchical** wire schedule (DESIGN.md §11): the mesh's reduction tree
+(``topology.build_mesh_tree`` + ``transport_schedule``) decides at
+trace time unless ``FlareConfig.hierarchical`` forces it.  Hierarchical
+means the two-level in-network shape — dense reduce-scatters intra-pod
+and reduces only ``Z/fanin`` across pods, int8 keeps the inter-pod
+quantized legs at ``Z/fanin``, and sparse merges coordinate lists
+intra-pod *before* the inter-pod exchange so the expensive hop carries
+lists, not dense vectors.
 """
 from __future__ import annotations
 
@@ -46,7 +56,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import compat
-from repro.core import collectives as coll, compression, sparse
+from repro.core import collectives as coll, compression, sparse, topology
 
 #: Quantization block of the int8 transport; ``GradReducer`` folds
 #: ``world * QUANT_BLOCK`` into the arena plan's pad multiple so every
@@ -73,6 +83,10 @@ class Transport:
     axes: tuple[str, ...]
     mean: bool = False
     batched: bool = True    # False → the per-bucket lax.scan ancestor
+    #: flat vs hierarchical wire schedule.  ``None`` → the reduction
+    #: tree decides (``topology.transport_schedule`` on the trace-time
+    #: mesh tree); True/False force it (``FlareConfig.hierarchical``).
+    hierarchical: bool | None = None
 
     @property
     def needs_state(self) -> bool:
@@ -80,6 +94,16 @@ class Transport:
 
     def _world(self) -> int:
         return compat.world_size(self.axes)
+
+    def _use_hierarchy(self) -> bool:
+        """Resolve flat vs hierarchical at trace time, tree as arbiter."""
+        if len(self.axes) < 2:
+            return False
+        if self.hierarchical is not None:
+            return self.hierarchical
+        sizes = tuple(compat.axis_size(a) for a in self.axes)
+        tree = topology.build_mesh_tree(sizes)
+        return topology.transport_schedule(tree) == "hierarchical"
 
     def __call__(self, buf: jax.Array, ef: jax.Array | None,
                  staggers: jax.Array, extents: Sequence[int],
@@ -97,6 +121,11 @@ class DenseTransport(Transport):
     def _resolve(self, buf: jax.Array) -> str:
         alg = self.algorithm
         if alg == "auto":
+            if self._use_hierarchy():
+                # the mesh tree (or the config) chose the hierarchical
+                # schedule: every size class rides the tree-driven path
+                # (reproducible mode takes its fixed-tree variant).
+                return "hierarchical"
             nbytes = buf.shape[1] * jnp.dtype(buf.dtype).itemsize
             alg = coll.select_algorithm(nbytes, reproducible=self.reproducible,
                                         multi_level=len(self.axes) > 1)
@@ -138,14 +167,22 @@ class Int8Transport(Transport):
         if ef is None:
             ef = jnp.zeros_like(buf)
         *outer_axes, inner = self.axes
+        hier = self._use_hierarchy() and bool(outer_axes)
+        # the hier functions walk upper tree levels leaf-first, so the
+        # outer axes go innermost-first (mesh order is outermost-first)
+        up_axes = tuple(reversed(outer_axes))
 
         if self.batched:
             def transmit(v):            # v: (B, S)
-                red = compression.quantized_allreduce_batched(
-                    v, inner, block=self.block)
-                for ax in outer_axes:
+                if hier:
+                    red = compression.quantized_allreduce_hier_batched(
+                        v, inner, up_axes, block=self.block)
+                else:
                     red = compression.quantized_allreduce_batched(
-                        red, ax, block=self.block)
+                        v, inner, block=self.block)
+                    for ax in outer_axes:
+                        red = compression.quantized_allreduce_batched(
+                            red, ax, block=self.block)
                 return red, compression.quantize_roundtrip(v, self.block)
 
             red, ef_out = compression.error_feedback_step(buf, ef, transmit)
@@ -154,11 +191,15 @@ class Int8Transport(Transport):
                 v, e, _s = xs
 
                 def transmit(w):        # w: (S,)
-                    red = compression.quantized_allreduce(
-                        w, inner, block=self.block)
-                    for ax in outer_axes:
+                    if hier:
+                        red = compression.quantized_allreduce_hier(
+                            w, inner, up_axes, block=self.block)
+                    else:
                         red = compression.quantized_allreduce(
-                            red, ax, block=self.block)
+                            w, inner, block=self.block)
+                        for ax in outer_axes:
+                            red = compression.quantized_allreduce(
+                                red, ax, block=self.block)
                     return red, compression.quantize_roundtrip(w, self.block)
 
                 return None, compression.error_feedback_step(v, e, transmit)
@@ -193,9 +234,31 @@ class SparseTransport(Transport):
                 f"sparse transport requires a power-of-two inner axis; "
                 f"mesh axis {inner!r} has size {p}")
         ks = self._ks(extents)
+        hier = self._use_hierarchy() and bool(outer_axes)
+        # upper tree levels run leaf-first: outer axes innermost-first
+        up_axes = tuple(reversed(outer_axes))
+        if hier:
+            # the hierarchical merge continues the recursive doubling
+            # across the outer axes, so those must be powers of two as
+            # well.  Auto mode (hierarchical=None) quietly keeps such
+            # meshes on the two_level schedule (dense across pods works
+            # for any outer size — the pre-hierarchy behavior); an
+            # explicit hierarchical=True is a config error.
+            bad = [a for a in outer_axes
+                   if compat.axis_size(a) & (compat.axis_size(a) - 1)]
+            if bad and self.hierarchical:
+                raise ValueError(
+                    f"hierarchical sparse transport requires power-of-two "
+                    f"outer axes; mesh axes {bad!r} are not")
+            hier = not bad
 
         if self.batched:
             def transmit(v):            # v: (B, S)
+                if hier:
+                    # lists stay sparse across the inter-pod hop
+                    return sparse.sparse_allreduce_hier_batched(
+                        v, inner, up_axes, ks,
+                        density_threshold=self.density_threshold)
                 if outer_axes:
                     return sparse.sparse_allreduce_two_level_batched(
                         v, inner, outer_axes[-1], ks,
@@ -212,6 +275,11 @@ class SparseTransport(Transport):
                 v, e, _s, ke = xs
 
                 def transmit(w):        # w: (S,)
+                    if hier:
+                        return sparse.sparse_allreduce_hier(
+                            w, inner, up_axes, k_max,
+                            density_threshold=self.density_threshold,
+                            k_eff=ke)
                     if outer_axes:
                         return sparse.sparse_allreduce_two_level(
                             w, inner, outer_axes[-1], k_max,
@@ -235,17 +303,24 @@ def from_config(config, dtype, *, batched: bool = True) -> Transport:
 
     ``config`` is any object with the ``FlareConfig`` transport fields
     (axes, algorithm, reproducible, compression, sparse_k_frac,
-    density_threshold, mean).  Lossy transports apply to floating dtypes
-    only; everything else rides the dense path.
+    density_threshold, mean, hierarchical).  Lossy transports apply to
+    floating dtypes only; everything else rides the dense path.  The
+    flat-vs-hierarchical choice threads through to every transport:
+    ``hierarchical=None`` lets the mesh's reduction tree decide at trace
+    time (``topology.transport_schedule``).
     """
     axes = tuple(config.axes)
+    hierarchical = getattr(config, "hierarchical", None)
     is_float = jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
     if config.sparse_k_frac > 0 and is_float:
         return SparseTransport(axes, mean=config.mean, batched=batched,
+                               hierarchical=hierarchical,
                                k_frac=config.sparse_k_frac,
                                density_threshold=config.density_threshold)
     if config.compression == "int8" and is_float:
-        return Int8Transport(axes, mean=config.mean, batched=batched)
+        return Int8Transport(axes, mean=config.mean, batched=batched,
+                             hierarchical=hierarchical)
     return DenseTransport(axes, mean=config.mean, batched=batched,
+                          hierarchical=hierarchical,
                           algorithm=config.algorithm,
                           reproducible=config.reproducible)

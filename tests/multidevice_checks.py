@@ -6,8 +6,13 @@ Invoked by tests/test_collectives.py as::
         python tests/multidevice_checks.py <group>
 
 Groups: collectives | arena_pipeline | sparse_quant | fsdp_engine |
-        trainer | repro | transports
+        trainer | repro | transports | hierarchy
 Exits non-zero on any failure (assertion output on stderr).
+
+The ``hierarchy`` group is mesh-shape-parametric: ``REPRO_MESH_SHAPE``
+(e.g. ``8`` or ``2x4``, the ``(pod, data)`` reduction axes) selects the
+topology, and the pytest wrapper runs it under both the flat and the
+two-level shape via the ``--mesh-shape`` conftest option.
 """
 import os
 import sys
@@ -26,10 +31,22 @@ from repro.core import collectives as coll                     # noqa: E402
 from repro.core import compression, fsdp, reproducible, sparse  # noqa: E402
 from repro.core import transports                              # noqa: E402
 from repro.core.engine import FlareConfig, GradReducer         # noqa: E402
+from repro.launch import mesh as launch_mesh                   # noqa: E402
 
 
 def _mesh():
     return compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+
+def _mesh_shape() -> tuple[int, int]:
+    """The (pod, data) reduction shape under test (``REPRO_MESH_SHAPE``)."""
+    s = os.environ.get("REPRO_MESH_SHAPE", "2x4")
+    parts = [int(p) for p in s.lower().split("x")]
+    if len(parts) == 1:
+        return (1, parts[0])
+    if len(parts) != 2:
+        raise ValueError(f"REPRO_MESH_SHAPE must be N or PxD, got {s!r}")
+    return (parts[0], parts[1])
 
 
 def _run(fn, xs, mesh, out_spec=P(None)):
@@ -399,6 +416,112 @@ def check_repro():
     print("reproducible OK")
 
 
+def check_hierarchy():
+    """PR 3: the tree-driven hierarchical transport schedule.
+
+    Mesh-shape-parametric (``REPRO_MESH_SHAPE``): runs under the flat
+    ``(1, 8)`` and the two-level ``(2, 4)`` topology in one tier-1
+    invocation (conftest ``--mesh-shape``).  Verified here, for
+    dense/int8/sparse:
+      * arena hierarchical == arena flat == legacy loop == fp oracle
+        within dtype tolerance — the schedules move different bytes but
+        reduce the same gradients;
+      * the batched hierarchical schedule is **bitwise-equal** to its
+        per-bucket scan ancestor (same per-bucket combine chains);
+      * reproducible hierarchical fixed-tree: arena ≡ legacy bitwise
+        (elementwise rank-pure combine — packing-independent, F3).
+    """
+    pod, data = _mesh_shape()
+    mesh = launch_mesh.make_fake_mesh((pod, data))
+    world = pod * data
+    rng = np.random.default_rng(31)
+    Z = 192
+    xs = jnp.asarray(rng.normal(size=(world, Z)).astype(np.float32))
+    expect = np.asarray(xs).sum(0)
+
+    def run(fn, xs=xs):
+        g = jax.jit(compat.shard_map(
+            fn, in_specs=(P(("pod", "data"), None),), out_specs=P(None),
+            axis_names={"pod", "data"}, check_vma=False))
+        with compat.set_mesh(mesh):
+            x = jax.device_put(xs, NamedSharding(mesh,
+                                                 P(("pod", "data"), None)))
+            return np.asarray(g(x))
+
+    def eng(x, kw):
+        g = {"a": x[0][:100], "b": x[0][100:164].reshape(8, 8),
+             "c": x[0][164:]}
+        r = GradReducer(FlareConfig(axes=("pod", "data"), bucket_bytes=256,
+                                    **kw))
+        red, _ = r(g, r.init_state(g))
+        return jnp.concatenate([red["a"], red["b"].reshape(-1), red["c"]])
+
+    for kw, tol, name in [(dict(), 1e-4, "dense"),
+                          (dict(sparse_k_frac=1.0), 1e-4, "sparse"),
+                          (dict(compression="int8"), 0.6, "int8")]:
+        outs = {}
+        for label, extra in [("hier", dict(hierarchical=True)),
+                             ("flat", dict(hierarchical=False)),
+                             ("auto", dict()),
+                             ("legacy", dict(hierarchical=True,
+                                             arena=False))]:
+            outs[label] = run(lambda x, kw={**kw, **extra}: eng(x, kw))
+        for label, got in outs.items():
+            assert np.allclose(got, expect, atol=tol), \
+                f"{name}/{label}: {np.abs(got - expect).max()}"
+
+    # reproducible hierarchical fixed tree: arena ≡ legacy, bitwise (F3)
+    a = run(lambda x: eng(x, dict(reproducible=True,
+                                  algorithm="hierarchical", arena=True)))
+    b = run(lambda x: eng(x, dict(reproducible=True,
+                                  algorithm="hierarchical", arena=False)))
+    assert a.tobytes() == b.tobytes(), "hier fixed_tree arena vs legacy"
+    assert np.allclose(a, expect, atol=1e-4), "hier fixed_tree accuracy"
+
+    # transport level: hierarchical batched ≡ per-bucket scan, bitwise
+    B, S = 4, 64
+    xs_t = jnp.asarray(rng.normal(size=(world, B * S)).astype(np.float32))
+    extents = (S, S, S, 40)              # ragged tail bucket
+
+    def transport_fn(cfg, batched):
+        def fn(x):
+            t = transports.from_config(cfg, jnp.float32, batched=batched)
+            arena = x[0].reshape(B, S)
+            red, ef = t(arena, jnp.zeros_like(arena),
+                        jnp.arange(B, dtype=jnp.int32), extents)
+            return jnp.stack([red, ef if ef is not None
+                              else jnp.zeros_like(red)])
+        return fn
+
+    for kw, name in [(dict(), "dense"),
+                     (dict(sparse_k_frac=0.1), "sparse"),
+                     (dict(sparse_k_frac=0.45,
+                           density_threshold=0.5), "sparse_densify"),
+                     (dict(compression="int8"), "int8")]:
+        cfg = FlareConfig(axes=("pod", "data"), hierarchical=True, **kw)
+        got = run(transport_fn(cfg, True), xs=xs_t)
+        want = run(transport_fn(cfg, False), xs=xs_t)
+        assert got.tobytes() == want.tobytes(), \
+            f"hier batched != scan: {name} shape={pod}x{data}"
+
+    # bucketed hierarchical waves ≡ per-bucket loop, bitwise (staggers on)
+    def bucketed(x):
+        arena = x[0].reshape(B, S)
+        return coll.hierarchical_allreduce_bucketed(
+            arena, ("pod", "data"),
+            staggers=jnp.arange(B, dtype=jnp.int32))
+
+    def loop(x):
+        arena = x[0].reshape(B, S)
+        return jnp.stack([coll.hierarchical_allreduce(
+            arena[i], ("pod", "data"), stagger=i) for i in range(B)])
+
+    a = run(bucketed, xs=xs_t)
+    b = run(loop, xs=xs_t)
+    assert a.tobytes() == b.tobytes(), "hier bucketed vs per-bucket loop"
+    print(f"hierarchy OK ({pod}x{data})")
+
+
 GROUPS = {
     "collectives": check_collectives,
     "arena_pipeline": check_arena_pipeline,
@@ -407,6 +530,7 @@ GROUPS = {
     "fsdp_engine": check_fsdp_engine,
     "trainer": check_trainer,
     "repro": check_repro,
+    "hierarchy": check_hierarchy,
 }
 
 if __name__ == "__main__":

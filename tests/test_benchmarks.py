@@ -12,13 +12,17 @@ import sys
 _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
-def test_run_quick_smoke():
+def _quick_env():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(_ROOT, "src"), env.get("PYTHONPATH", "")])
+    return env
+
+
+def test_run_quick_smoke():
     r = subprocess.run([sys.executable, "-m", "benchmarks.run", "--quick"],
                        capture_output=True, text=True, timeout=600,
-                       cwd=_ROOT, env=env)
+                       cwd=_ROOT, env=_quick_env())
     assert r.returncode == 0, f"--quick failed:\n{r.stdout}\n{r.stderr}"
     rows = [l for l in r.stdout.splitlines() if l.startswith("quick.")]
     names = {l.split(",")[0] for l in rows}
@@ -26,6 +30,52 @@ def test_run_quick_smoke():
         for mode in ("scan", "batched"):
             assert f"quick.{transport}.{mode}.us_per_call" in names, names
         assert f"quick.{transport}.batched_speedup_x" in names, names
+        # PR 3: flat vs hierarchical on the (2, 4) mesh rides along
+        for mode in ("flat", "hier"):
+            assert f"quick.hier.{transport}.{mode}.us_per_call" in names, \
+                names
+        assert f"quick.hier.{transport}.speedup_x" in names, names
     # wall-clock values are positive microseconds
     for l in rows:
         assert float(l.split(",")[1]) > 0, l
+
+
+def test_run_quick_exits_nonzero_when_benchmark_raises():
+    """A raising benchmark must fail the --quick gate, not silently skip
+    the row (the child aborts mid-run via the injected failure, so the
+    row set is incomplete AND the child's exit code is nonzero)."""
+    env = _quick_env()
+    env["REPRO_QUICK_INJECT_FAIL"] = "1"
+    r = subprocess.run([sys.executable, "-m", "benchmarks.run", "--quick"],
+                       capture_output=True, text=True, timeout=600,
+                       cwd=_ROOT, env=env)
+    assert r.returncode != 0, \
+        f"--quick must exit nonzero on a raising benchmark:\n{r.stdout}"
+    assert "ERROR" in r.stderr, r.stderr
+
+
+def test_run_quick_main_propagates_failure(monkeypatch):
+    """benchmarks/run.py --quick turns any run_quick exception into a
+    nonzero exit (in-process: no subprocess, no fake devices)."""
+    import pytest
+    if _ROOT not in sys.path:
+        sys.path.insert(0, _ROOT)
+    from benchmarks import collectives_bench, run
+
+    def boom():
+        raise RuntimeError("injected")
+
+    monkeypatch.setattr(collectives_bench, "run_quick", boom)
+    with pytest.raises(SystemExit) as e:
+        run.main(["--quick"])
+    assert e.value.code == 1
+
+
+def test_quick_expected_rows_cover_all_transports():
+    if _ROOT not in sys.path:
+        sys.path.insert(0, _ROOT)
+    from benchmarks import collectives_bench
+    names = collectives_bench.QUICK_EXPECTED_ROWS
+    for t in ("dense", "sparse", "int8"):
+        assert f"quick.{t}.batched_speedup_x" in names
+        assert f"quick.hier.{t}.speedup_x" in names

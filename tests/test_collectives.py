@@ -12,12 +12,14 @@ import pytest
 _SCRIPT = os.path.join(os.path.dirname(__file__), "multidevice_checks.py")
 
 
-def _run_group(group: str):
+def _run_group(group: str, mesh_shape: str | None = None):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(os.path.dirname(__file__), "..", "src"),
          env.get("PYTHONPATH", "")])
+    if mesh_shape is not None:
+        env["REPRO_MESH_SHAPE"] = mesh_shape
     r = subprocess.run([sys.executable, _SCRIPT, group],
                        capture_output=True, text=True, timeout=900, env=env)
     assert r.returncode == 0, f"{group} failed:\n{r.stdout}\n{r.stderr}"
@@ -29,4 +31,11 @@ def _run_group(group: str):
                                    "fsdp_engine", "trainer", "repro"])
 def test_multidevice(group):
     out = _run_group(group)
+    assert "OK" in out
+
+
+def test_multidevice_hierarchy(mesh_shape):
+    """Shape-parametric: flat (8) and two-level (2x4) topologies, both in
+    one tier-1 run (conftest ``--mesh-shape``)."""
+    out = _run_group("hierarchy", mesh_shape=mesh_shape)
     assert "OK" in out

@@ -44,6 +44,79 @@ def test_rebuild_excluding():
         topology.rebuild_excluding(t, list(range(16)))
 
 
+# ---------------------------------------------------------------------------
+# Failure / rebuild paths (§4): exclude-switch recompute + host fallback.
+# Previously exercised only implicitly through ft/coordinator.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(3, 300), st.integers(2, 16))
+@settings(max_examples=40, deadline=None)
+def test_rebuild_excluding_non_power_of_radix(hosts, radix):
+    """Survivor trees stay well-formed for *any* host count, including
+    counts that are not powers of the radix (ragged last groups)."""
+    t = topology.build_tree(hosts, radix)
+    failed = list(range(0, hosts, 3))[:hosts - 1]     # keep >= 1 survivor
+    t2 = topology.rebuild_excluding(t, failed)
+    assert t2.num_hosts == hosts - len(failed)
+    assert t2.radix == radix
+    assert len(t2.levels[-1]) == 1                    # single root again
+    # every surviving host reachable from the new root
+    seen, stack = set(), [t2.root.node_id]
+    while stack:
+        nid = stack.pop()
+        seen.add(nid)
+        stack.extend(t2.nodes[nid].children)
+    assert set(range(t2.num_hosts)) <= seen
+
+
+def test_exclude_switch_recompute():
+    """§4: "recompute a different reduction tree excluding that switch" —
+    the failed switch's level makes do with one switch fewer (fan-in
+    grows), the tree still spans every host."""
+    t = topology.build_tree(16, 4)                    # level 1: 4 switches
+    failed_switch = t.levels[1][0]
+    t2 = topology.rebuild_excluding_switch(t, failed_switch)
+    assert t2 is not None
+    assert t2.num_hosts == 16                         # no hosts lost
+    assert len(t2.levels[1]) <= len(t.levels[1]) - 1  # one switch fewer
+    assert t2.radix > t.radix                         # fan-in grew
+    # excluding a host id through this API is a caller error
+    with pytest.raises(ValueError):
+        topology.rebuild_excluding_switch(t, 0)
+
+
+def test_exclude_switch_non_power_of_radix():
+    t = topology.build_tree(13, 4)                    # leaf level: 4 switches
+    t2 = topology.rebuild_excluding_switch(t, t.levels[1][1])
+    assert t2 is not None and t2.num_hosts == 13
+    assert len(t2.levels[1]) <= 3
+
+
+def test_exclude_switch_host_fallback():
+    """A switch with no sibling cannot be re-routed around: the manager
+    must fall back to host-based allreduce (None)."""
+    t = topology.build_tree(4, 4)                     # single switch = root
+    assert topology.rebuild_excluding_switch(t, t.root.node_id) is None
+    t = topology.build_tree(16, 4)
+    assert topology.rebuild_excluding_switch(t, t.root.node_id) is None
+
+
+def test_network_manager_switch_failure_paths():
+    nm = topology.NetworkManager(max_concurrent=2)
+    lease = nm.request(64, radix=4)                   # multi-level tree
+    assert lease is not None
+    failed = lease.tree.levels[1][0]
+    new_lease = nm.handle_switch_failure(lease, failed)
+    assert new_lease is not None
+    assert new_lease.allreduce_id == lease.allreduce_id
+    assert new_lease.tree.num_hosts == 64
+    assert len(nm.active()) == 1                      # replaced, not added
+    # root failure → host fallback: the lease is released
+    gone = nm.handle_switch_failure(new_lease, new_lease.tree.root.node_id)
+    assert gone is None
+    assert len(nm.active()) == 0
+
+
 def test_network_manager_admission():
     nm = topology.NetworkManager(max_concurrent=2)
     a = nm.request(64)

@@ -165,6 +165,32 @@ def test_construction_without_mesh_defers_validation():
     assert r.needs_state
 
 
+def test_hierarchical_config_threading():
+    """FlareConfig.hierarchical reaches every transport class; the wire
+    schedules themselves are exercised in multidevice group `hierarchy`."""
+    for kw in [dict(), dict(sparse_k_frac=0.01), dict(compression="int8")]:
+        cfg = FlareConfig(axes=("pod", "data"), hierarchical=True, **kw)
+        assert transports.from_config(cfg, jnp.float32).hierarchical is True
+        cfg = FlareConfig(axes=("pod", "data"), **kw)
+        assert transports.from_config(cfg, jnp.float32).hierarchical is None
+    # a single-axis mesh has a one-level tree: forcing hierarchical is a
+    # config error, and a 1-axis transport never picks it on its own
+    with pytest.raises(ValueError):
+        FlareConfig(axes=("data",), hierarchical=True)
+    t = transports.DenseTransport(("data",), hierarchical=True)
+    assert t._use_hierarchy() is False
+    # the force flag and an explicit dense algorithm must agree
+    with pytest.raises(ValueError):
+        FlareConfig(axes=("pod", "data"), algorithm="ring",
+                    hierarchical=True)
+    with pytest.raises(ValueError):
+        FlareConfig(axes=("pod", "data"), algorithm="hierarchical",
+                    hierarchical=False)
+    FlareConfig(axes=("pod", "data"), algorithm="hierarchical")   # fine
+    FlareConfig(axes=("pod", "data"), algorithm="ring",
+                hierarchical=False)                               # fine
+
+
 def test_engine_pad_multiple_covers_quant_blocks():
     """With int8 transport the plan pad multiple makes every bucket chunk
     a whole number of quantization blocks (no runtime pad on the wire)."""
