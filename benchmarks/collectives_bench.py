@@ -166,6 +166,37 @@ with compat.set_mesh(mesh24):
                   f"{ts[mode]*1e6:.0f},2x4dev_cpu_B{b}xS{s}")
         print(f"transports.{name}.hier_speedup_x,"
               f"{ts['flat']/ts['hier']:.2f},flat/hier_2x4mesh")
+
+# --- emulated switch data plane vs flat wire transport (PR 4) --------------
+# FlareConfig(transport="innetwork") reduces the arena through the
+# packetized sPIN-handler emulation (repro/switch) instead of the wire
+# collectives.  The emulator is a *fidelity* artifact — it pays host-side
+# packet framing plus SPMD-masked aggregation on every rank — so the
+# tracked number is its overhead factor over the flat wire schedule per
+# handler type, not a speedup claim.
+B, S = 4, 1 << 14
+arena = jnp.asarray(rng.normal(size=(B, S)).astype(np.float32))
+exts = (S,) * B
+with compat.set_mesh(mesh8):
+    ad = jax.device_put(arena, NamedSharding(mesh8, P()))
+    for name, kw in [("dense", dict()),
+                     ("sparse", dict(sparse_k_frac=0.01)),
+                     ("int8", dict(compression="int8"))]:
+        ts = {}
+        for mode, extra in [("flat", dict()),
+                            ("innetwork", dict(transport="innetwork"))]:
+            cfg = FlareConfig(axes=("data",), **kw, **extra)
+            t = transports.from_config(cfg, jnp.float32, batched=True)
+            fn = jax.jit(compat.shard_map(
+                lambda a, t=t: t(a, jnp.zeros_like(a),
+                                 jnp.zeros((B,), jnp.int32), exts)[0],
+                in_specs=(P(),), out_specs=P(), axis_names={"data"},
+                check_vma=False))
+            ts[mode] = timeit(fn, ad, iters=3)
+            print(f"transports.switch.{name}_{mode}.us_per_call,"
+                  f"{ts[mode]*1e6:.0f},8dev_cpu_B{B}xS{S}")
+        print(f"transports.switch.{name}.overhead_x,"
+              f"{ts['innetwork']/ts['flat']:.2f},innetwork/flat")
 """
 
 # tiny-shape variant for `run.py --quick` / the tier-1 smoke test: all
@@ -241,6 +272,30 @@ with compat.set_mesh(mesh24):
                   f"2x4dev_cpu_B{B}xS{S}")
         print(f"quick.hier.{name}.speedup_x,"
               f"{ts['flat']/ts['hier']:.2f},flat/hier_2x4mesh")
+
+# emulated switch data plane vs flat wire transport (PR 4), tiny shapes —
+# keeps FlareConfig(transport="innetwork") + the repro/switch packet/
+# handler plumbing under the tier-1 smoke gate for every handler type
+with compat.set_mesh(mesh8):
+    ad = jax.device_put(arena, NamedSharding(mesh8, P()))
+    for name, kw in [("dense", dict()),
+                     ("sparse", dict(sparse_k_frac=0.01)),
+                     ("int8", dict(compression="int8"))]:
+        ts = {}
+        for mode, extra in [("flat", dict()),
+                            ("innetwork", dict(transport="innetwork"))]:
+            cfg = FlareConfig(axes=("data",), **kw, **extra)
+            t = transports.from_config(cfg, jnp.float32, batched=True)
+            fn = jax.jit(compat.shard_map(
+                lambda a, t=t: t(a, jnp.zeros_like(a),
+                                 jnp.zeros((B,), jnp.int32), exts)[0],
+                in_specs=(P(),), out_specs=P(), axis_names={"data"},
+                check_vma=False))
+            ts[mode] = timeit(fn, ad)
+            print(f"quick.switch.{name}.{mode}.us_per_call,"
+                  f"{ts[mode]*1e6:.0f},8dev_cpu_B{B}xS{S}")
+        print(f"quick.switch.{name}.overhead_x,"
+              f"{ts['innetwork']/ts['flat']:.2f},innetwork/flat")
 """
 
 
@@ -286,7 +341,10 @@ QUICK_EXPECTED_ROWS = frozenset(
     + [f"quick.{t}.batched_speedup_x" for t in ("dense", "sparse", "int8")]
     + [f"quick.hier.{t}.{m}.us_per_call"
        for t in ("dense", "sparse", "int8") for m in ("flat", "hier")]
-    + [f"quick.hier.{t}.speedup_x" for t in ("dense", "sparse", "int8")])
+    + [f"quick.hier.{t}.speedup_x" for t in ("dense", "sparse", "int8")]
+    + [f"quick.switch.{t}.{m}.us_per_call"
+       for t in ("dense", "sparse", "int8") for m in ("flat", "innetwork")]
+    + [f"quick.switch.{t}.overhead_x" for t in ("dense", "sparse", "int8")])
 
 
 def run_quick():

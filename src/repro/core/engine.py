@@ -68,8 +68,26 @@ class FlareConfig:
     #: meshes.  None → the reduction tree decides from the mesh shape
     #: (``topology.transport_schedule``); True/False force it.
     hierarchical: bool | None = None
+    #: ``"auto"`` — the wire transports (host-side collectives);
+    #: ``"innetwork"`` — the emulated sPIN switch data plane
+    #: (``repro.switch``): arenas reduce leaf → switch → leaf on the
+    #: mesh tree with packet handlers (dense / int8 / sparse picked by
+    #: the same compression/sparse_k_frac fields).
+    transport: str = "auto"
 
     def __post_init__(self):
+        if self.transport not in ("auto", "innetwork"):
+            raise ValueError(f"unknown transport {self.transport!r}")
+        if self.transport == "innetwork":
+            if self.algorithm != "auto":
+                raise ValueError(
+                    f"transport='innetwork' conflicts with algorithm="
+                    f"{self.algorithm!r}: the switch data plane picks its "
+                    "aggregation design by the §6.4 size switchover")
+            if self.hierarchical is False:
+                raise ValueError(
+                    "transport='innetwork' is tree-driven by construction; "
+                    "hierarchical=False cannot apply")
         if self.reproducible and self.compression != "none":
             raise ValueError("reproducible mode is incompatible with lossy "
                              "compression")
@@ -98,11 +116,13 @@ class GradReducer:
 
     def __init__(self, config: FlareConfig):
         self.config = config
-        if config.sparse_k_frac > 0:
+        if config.sparse_k_frac > 0 and config.transport != "innetwork":
             # fail fast: sparse_allreduce's recursive doubling needs a
             # power-of-two inner axis, and a bad mesh shape should raise
-            # here, not deep inside the traced schedule.  When no ambient
-            # mesh is installed yet the check defers to trace time.
+            # here, not deep inside the traced schedule (the innetwork
+            # data plane's coordinate merge is an iterated per-level fold
+            # and has no such constraint).  When no ambient mesh is
+            # installed yet the check defers to trace time.
             inner = config.axes[-1]
             p = compat.ambient_axis_size(inner)
             if p is not None and p & (p - 1):

@@ -323,11 +323,16 @@ class MeshLevel:
     toward the root; ``fanin`` is the number of children each switch at
     this level aggregates — read off the :class:`ReductionTree`, not the
     mesh, so the tree stays the source of truth for the schedule.
+    ``switch_rank`` designates which rank of each axis group *plays the
+    switch* in the emulated data plane (``repro.switch.dataplane``):
+    that rank's aggregation buffer is the one that survives the up-pass
+    mask and seeds the multicast back down.
     """
 
     level: int
     axis: str
     fanin: int
+    switch_rank: int = 0
 
 
 def mesh_axes_as_tree(axis_sizes: Sequence[int]) -> ReductionTree:

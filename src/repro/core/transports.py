@@ -298,20 +298,102 @@ class SparseTransport(Transport):
         return red, ef_out
 
 
+@dataclasses.dataclass(frozen=True)
+class SwitchTransport(Transport):
+    """The fourth transport: the emulated sPIN switch data plane.
+
+    ``FlareConfig(transport="innetwork")`` routes each arena group
+    leaf → switch → leaf on the mesh's reduction tree
+    (``repro.switch.dataplane``): hosts frame the ``(B, S)`` arena into
+    MTU packets, a designated switch rank per tree level aggregates them
+    with the installed handler (dense fp32 sum, bitwise fixed-tree,
+    int8 dequant-accumulate, or §7 sparse coordinate-merge) under one of
+    the §6.1–§6.3 buffer designs, and the root multicasts the result
+    back down.  ``mode`` picks the handler family; ``design="auto"``
+    follows the §6.4 size switchover (``perfmodel.select_design``), and
+    ``reproducible`` pins the fixed-tree handler (always tree
+    aggregation, §6.4).
+
+    The schedule is inherently tree-driven — the ``hierarchical`` and
+    ``batched`` knobs of the wire transports don't apply (packets carry
+    their block id, so B buckets always share the wire).
+    """
+
+    mode: str = "dense"             # dense | int8 | sparse
+    reproducible: bool = False
+    design: str = "auto"            # §6.1-§6.3 buffer design, auto = §6.4
+    block: int = QUANT_BLOCK
+    k_frac: float = 0.01
+    density_threshold: float = 0.25
+
+    @property
+    def needs_state(self) -> bool:
+        return self.mode in ("int8", "sparse")
+
+    def __call__(self, buf, ef, staggers, extents):
+        from repro.switch import dataplane
+
+        if self.mode == "dense":
+            red = dataplane.switch_allreduce_dense(
+                buf, self.axes, reproducible=self.reproducible,
+                design=self.design)
+            if self.mean:
+                red = red / self._world()
+            return red, (jnp.zeros_like(ef) if ef is not None else None)
+
+        if ef is None:
+            ef = jnp.zeros_like(buf)
+        if self.mode == "int8":
+            def transmit(v):
+                red = dataplane.switch_allreduce_int8(
+                    v, self.axes, block=self.block, design=self.design)
+                return red, compression.quantize_roundtrip(v, self.block)
+        elif self.mode == "sparse":
+            ks = tuple(sparse.sparse_k(self.k_frac, e) for e in extents)
+
+            def transmit(v):
+                return dataplane.switch_allreduce_sparse(
+                    v, self.axes, ks,
+                    density_threshold=self.density_threshold)
+        else:
+            raise ValueError(f"unknown switch transport mode {self.mode!r}")
+        red, ef_out = compression.error_feedback_step(buf, ef, transmit)
+        if self.mean:
+            red = red / self._world()
+        return red, ef_out
+
+
+def _switch_from_config(config, dtype, is_float: bool) -> SwitchTransport:
+    axes = tuple(config.axes)
+    if config.sparse_k_frac > 0 and is_float:
+        return SwitchTransport(axes, mean=config.mean, mode="sparse",
+                               k_frac=config.sparse_k_frac,
+                               density_threshold=config.density_threshold)
+    if config.compression == "int8" and is_float:
+        return SwitchTransport(axes, mean=config.mean, mode="int8")
+    return SwitchTransport(axes, mean=config.mean, mode="dense",
+                           reproducible=config.reproducible)
+
+
 def from_config(config, dtype, *, batched: bool = True) -> Transport:
-    """The three-way dispatch, in one place.
+    """The transport dispatch, in one place.
 
     ``config`` is any object with the ``FlareConfig`` transport fields
     (axes, algorithm, reproducible, compression, sparse_k_frac,
-    density_threshold, mean, hierarchical).  Lossy transports apply to
-    floating dtypes only; everything else rides the dense path.  The
-    flat-vs-hierarchical choice threads through to every transport:
+    density_threshold, mean, hierarchical, transport).  Lossy transports
+    apply to floating dtypes only; everything else rides the dense path.
+    ``transport="innetwork"`` swaps the wire schedules for the emulated
+    switch data plane (``SwitchTransport``) while keeping the same
+    dense/int8/sparse handler selection.  The flat-vs-hierarchical
+    choice threads through to every wire transport:
     ``hierarchical=None`` lets the mesh's reduction tree decide at trace
     time (``topology.transport_schedule``).
     """
     axes = tuple(config.axes)
     hierarchical = getattr(config, "hierarchical", None)
     is_float = jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
+    if getattr(config, "transport", "auto") == "innetwork":
+        return _switch_from_config(config, dtype, is_float)
     if config.sparse_k_frac > 0 and is_float:
         return SparseTransport(axes, mean=config.mean, batched=batched,
                                hierarchical=hierarchical,

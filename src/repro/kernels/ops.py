@@ -25,17 +25,26 @@ def _pad_axis0(x, m):
     return x
 
 
-@functools.partial(jax.jit, static_argnames=("tile_n",))
-def tree_reduce(x: jax.Array, tile_n: int = 2048) -> jax.Array:
-    """Fixed-tree reduce of a (P, N) stack over axis 0 (pads P to pow2)."""
+@functools.partial(jax.jit, static_argnames=("tile_n", "accum_dtype"))
+def tree_reduce(x: jax.Array, tile_n: int = 2048,
+                accum_dtype=None) -> jax.Array:
+    """Fixed-tree reduce of a (P, N) stack over axis 0 (pads P to pow2).
+
+    ``accum_dtype`` defaults to fp32 for floating inputs (the F3
+    reproducible accumulator) and to the input dtype for integers —
+    integer sums must stay exact, never round through fp32.
+    """
     p, n = x.shape
+    if accum_dtype is None:
+        accum_dtype = (jnp.float32 if jnp.issubdtype(x.dtype, jnp.floating)
+                       else x.dtype)
     pp = 1 << max(0, (p - 1).bit_length())
     if pp != p:
         x = jnp.concatenate([x, jnp.zeros((pp - p, n), x.dtype)])
     tile = min(tile_n, n)
     if n % tile:
-        return _ref.tree_reduce(x)
-    return _tr.tree_reduce(x, tile_n=tile)
+        return _ref.tree_reduce(x, accum_dtype=accum_dtype)
+    return _tr.tree_reduce(x, tile_n=tile, accum_dtype=accum_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("qblock",))
@@ -55,6 +64,25 @@ def dequantize(q: jax.Array, scales: jax.Array, qblock: int = 256,
     tile_b = 64 if nb % 64 == 0 else (8 if nb % 8 == 0 else 1)
     return _quant.dequantize(q, scales, qblock=qblock, tile_b=tile_b,
                              out_dtype=out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("qblock",))
+def dequant_accum(q: jax.Array, scales: jax.Array,
+                  qblock: int = 256) -> jax.Array:
+    """Fused dequantize + fold of a (P, n) int8 child stack → (n,) fp32.
+
+    The emulated switch's int8 payload handler (single-buffer design):
+    P children's packets dequant-accumulate into one fp32 buffer in
+    stack (arrival) order.
+    """
+    p, n = q.shape
+    if n % qblock:
+        # no ragged fallback: the caller already owns (P, n/qblock)
+        # scales, so a ragged n means the scales shape is wrong too
+        raise ValueError(f"dequant_accum: n={n} % qblock={qblock} != 0")
+    nb = n // qblock
+    tile_b = 64 if nb % 64 == 0 else (8 if nb % 8 == 0 else 1)
+    return _quant.dequant_accum(q, scales, qblock=qblock, tile_b=tile_b)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block"))

@@ -62,6 +62,52 @@ def quantize(x: jax.Array, *, qblock: int = 256, tile_b: int = 64,
     return q.reshape(n), s
 
 
+def _dequant_accum_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...]                                        # (P, TILE_B, QBLOCK)
+    s = s_ref[...]                                        # (P, TILE_B)
+    p = q.shape[0]
+    # static unroll: the §6.1 single-buffer handler folds each arriving
+    # packet into the aggregation buffer in sequence — the fold order is
+    # the stack order the caller delivers (arrival order), and dequantize
+    # + accumulate fuse into one VMEM pass per child.
+    acc = q[0].astype(jnp.float32) * s[0][:, None]
+    for i in range(1, p):
+        acc = acc + q[i].astype(jnp.float32) * s[i][:, None]
+    o_ref[...] = acc
+
+
+def dequant_accum(q: jax.Array, scales: jax.Array, *, qblock: int = 256,
+                  tile_b: int = 64,
+                  interpret: bool | None = None) -> jax.Array:
+    """Fused dequantize + accumulate of a (P, n) int8 child stack.
+
+    The sPIN payload-handler analogue for the int8 transport: P
+    children's int8 packets (with per-``qblock`` fp32 scales of shape
+    ``(P, n // qblock)``) fold into one fp32 aggregation buffer in stack
+    order — the switch's "FPU in every HPU" doing dequant-accumulate
+    per packet, without materializing P dequantized copies.
+    """
+    p, n = q.shape
+    if n % qblock:
+        raise ValueError(f"dequant_accum: n={n} % qblock={qblock} != 0")
+    nb = n // qblock
+    tile_b = min(tile_b, nb)
+    if nb % tile_b:
+        raise ValueError(f"dequant_accum: blocks={nb} % tile_b={tile_b} != 0")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out = pl.pallas_call(
+        _dequant_accum_kernel,
+        grid=(nb // tile_b,),
+        in_specs=[pl.BlockSpec((p, tile_b, qblock), lambda i: (0, i, 0)),
+                  pl.BlockSpec((p, tile_b), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((tile_b, qblock), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, qblock), jnp.float32),
+        interpret=interpret,
+    )(q.reshape(p, nb, qblock), scales)
+    return out.reshape(n)
+
+
 def dequantize(q: jax.Array, scales: jax.Array, *, qblock: int = 256,
                tile_b: int = 64, out_dtype=jnp.float32,
                interpret: bool | None = None) -> jax.Array:

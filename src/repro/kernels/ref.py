@@ -35,6 +35,16 @@ def dequantize(q: jax.Array, scales: jax.Array, qblock: int = 256,
     return (qb * scales[:, None]).reshape(n).astype(out_dtype)
 
 
+def dequant_accum(q: jax.Array, scales: jax.Array,
+                  qblock: int = 256) -> jax.Array:
+    """Sequential dequantize-and-fold of a (P, n) int8 child stack."""
+    p = q.shape[0]
+    acc = dequantize(q[0], scales[0], qblock)
+    for i in range(1, p):
+        acc = acc + dequantize(q[i], scales[i], qblock)
+    return acc
+
+
 def topk_compact(x: jax.Array, k: int, block: int = 512, n_iter: int = 24):
     """Same bisection + prefix-compaction algorithm, in plain jnp."""
     n = x.shape[0]

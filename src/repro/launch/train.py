@@ -30,6 +30,10 @@ def _parse():
     ap.add_argument("--reproducible", action="store_true")
     ap.add_argument("--compression", type=str, default="none")
     ap.add_argument("--sparse-k", type=float, default=0.0)
+    ap.add_argument("--transport", type=str, default="auto",
+                    choices=("auto", "innetwork"),
+                    help="auto = wire collectives; innetwork = the "
+                         "emulated sPIN switch data plane (repro/switch)")
     return ap.parse_args()
 
 
@@ -81,7 +85,8 @@ def main():
         flare=FlareConfig(axes=mcfg.reduce_axes, algorithm=args.algorithm,
                           reproducible=args.reproducible,
                           compression=args.compression,
-                          sparse_k_frac=args.sparse_k))
+                          sparse_k_frac=args.sparse_k,
+                          transport=args.transport))
 
     with compat.set_mesh(mesh):
         fn, param_sh, opt_sh, batch_sh, init_opt = trainer.jit_train_step(

@@ -1,17 +1,22 @@
 """Paper §4–§7 performance models and simulators.
 
-This package validates the paper's *quantitative* claims 1:1 (the switch
-microarchitecture has no TPU analogue, so it is reproduced as a model +
-discrete-event simulator rather than as device code — see DESIGN.md §2):
+This package validates the paper's *quantitative* claims 1:1:
 
   * ``switch_model``  — analytic τ / bandwidth / queue (Eq. 1) / working
-    memory models of §4–§6 (Figures 7, 10, 13).
+    memory models of §4–§6 (Figures 7, 10, 13) and the §7 hash-spill
+    expectation.
   * ``switch_sim``    — discrete-event PsPIN switch simulator: clusters,
     HPU cores, hierarchical FCFS scheduling, critical sections, the three
     aggregation designs, dense and sparse handlers (Figures 11, 14).
   * ``network_sim``   — flow-level fat-tree simulator comparing host-ring,
     in-network dense, SparCML host-sparse and Flare in-network sparse
     allreduce (Figure 15).
+
+The switch microarchitecture itself has no TPU analogue, so its *timing*
+lives here as models; its *function* — packet handlers actually reducing
+tensors — is executed by the emulated data plane (``repro.switch``,
+DESIGN.md §12), whose packet/combine counters are cross-checked against
+these models in ``tests/test_switch.py`` so the two layers cannot drift.
 """
 from repro.perfmodel import network_sim, switch_model, switch_sim
 

@@ -238,3 +238,25 @@ def sparse_bandwidth_tbps(storage: str, density: float,
                           params: SwitchParams = SwitchParams()) -> float:
     tau = tau_sparse(storage, params, density)
     return bandwidth_tbps(params, tau)
+
+
+def expected_hash_collisions(n_inserts: float, table_slots: float) -> float:
+    """Expected colliding inserts for n random keys into m slots (§7).
+
+    The birthday-style bound behind the hash-storage spill traffic of
+    Fig. 14: ``n − m·(1 − (1 − 1/m)^n)`` (inserts minus expected
+    occupied slots).  Shared by the discrete-event simulator
+    (``switch_sim``) and the functional emulator's cross-check
+    (``tests/test_switch.py``) — the emulator counts *actual*
+    collisions in its coordinate merges and validates this expectation
+    on real tensors.
+    """
+    m = max(float(table_slots), 1e-9)
+    n = float(n_inserts)
+    return max(0.0, n - m * (1.0 - (1.0 - 1.0 / m) ** n))
+
+
+def expected_hash_spill_bytes(n_inserts: float, table_slots: float,
+                              elem_bytes: int = 4) -> float:
+    """Spill traffic of the expected collisions: one (idx, val) pair each."""
+    return expected_hash_collisions(n_inserts, table_slots) * 2 * elem_bytes

@@ -123,15 +123,14 @@ def simulate(design: str,
     extra_traffic = 0
     done_blocks = 0
 
-    # sparse spill model (§7): hash storage spills colliding elements.
-    # Expected collisions for n inserts into m slots: n − m(1−(1−1/m)^n).
+    # sparse spill model (§7): hash storage spills colliding elements
+    # (expectation formula shared with the functional emulator's
+    # cross-check — see switch_model.expected_hash_spill_bytes).
     if sparse and sparse_storage == "hash":
         elems = payload // params.elem_bytes
         span = elems / max(sparse_density, 1e-9)
-        n_ins = P * elems
-        m = span
-        exp_coll = n_ins - m * (1.0 - (1.0 - 1.0 / m) ** n_ins)
-        spill_per_block = max(0.0, exp_coll) * 2 * params.elem_bytes
+        spill_per_block = sm.expected_hash_spill_bytes(P * elems, span,
+                                                      params.elem_bytes)
     else:
         spill_per_block = 0.0
 

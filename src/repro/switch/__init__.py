@@ -1,0 +1,23 @@
+"""Emulated sPIN switch data plane (paper §3–§7) — the fourth transport.
+
+``perfmodel/`` validates the paper's *quantitative* switch claims as an
+analytic model + discrete-event simulator; this package is the missing
+*functional* half: a data plane that actually reduces tensors the way
+the PsPIN switch does — hosts frame their reduction blocks into
+MTU-sized packets (``packets``), a designated switch rank per tree
+level runs sPIN-style header/payload/completion handlers over the
+ingress packet streams with the paper's three aggregation-buffer
+designs (``handlers``), and the ingress → aggregate → multicast loop
+walks the mesh's reduction tree (``dataplane``).  The
+``core/transports.SwitchTransport`` wrapper makes it selectable as
+``FlareConfig(transport="innetwork")``.
+
+The emulator's packet/combine counters (``dataplane.plan_counters``)
+are the same quantities the analytic model consumes (``P``, ``N``,
+per-design combine and buffer counts) — cross-checked in
+``tests/test_switch.py`` so the functional and performance layers can
+never drift apart.
+"""
+from repro.switch import dataplane, handlers, packets
+
+__all__ = ["dataplane", "handlers", "packets"]

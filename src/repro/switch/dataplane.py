@@ -1,0 +1,508 @@
+"""The emulated switch data plane: ingress → aggregate → multicast (§4).
+
+Runs the Flare switch loop *functionally* on mesh wires, inside a
+``shard_map`` manual region.  Per level of the mesh's reduction tree
+(``topology.mesh_levels``):
+
+  1. **ingress** — every child frames its ``(B, S)`` arena into MTU
+     packets (``packets.packetize``) and streams them to the level's
+     designated switch rank (``MeshLevel.switch_rank``, rank 0 of the
+     axis group — the paper's leaf/root switch).  The wire realization
+     is the existing ring ``ppermute`` math (``collectives.
+     ring_all_gather``); SPMD obliges every rank to materialize the
+     child stack, but only the switch rank's aggregate survives the
+     mask, so the data the hosts end with really did flow
+     host → switch → host.
+  2. **aggregate** — the installed sPIN handler triple runs over the
+     child-stacked packets (``handlers``): header steering (arrival vs
+     child order), the payload combine under one of the §6.1–§6.3
+     buffer designs, completion.  An optional per-level *arrival
+     permutation* reorders the ingress streams first — the adversarial
+     schedule the reproducibility tests drive.
+  3. the aggregated block is forwarded up the next tree level (child
+     rank = this rank's index on that axis), and after the root, the
+     result **multicasts** back down every level — a binomial (XOR)
+     broadcast tree from the switch rank, ``log2 P`` ``ppermute`` hops
+     (ring broadcast on non-power-of-two fan-ins).
+
+``plan_counters`` precomputes the packet/combine/buffer counts this
+plane will execute — the same quantities (``P``, ``N``, per-design
+combine and buffer counts) the analytic model ``perfmodel.switch_model``
+consumes, cross-checked in ``tests/test_switch.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro import compat
+from repro.core import collectives as coll
+from repro.core import compression, sparse, topology
+from repro.kernels import ops
+from repro.perfmodel import switch_model as sm
+from repro.switch import handlers as hd
+from repro.switch import packets as pk
+
+DEFAULT_FORMAT = pk.PacketFormat()
+
+
+def resolve_design(data_bytes: int, design: str = "auto",
+                   reproducible: bool = False) -> tuple[str, int]:
+    """The §6.4 design switchover for one reduction block.
+
+    ``auto`` follows ``perfmodel.switch_model.select_design`` on the
+    block size; reproducible mode always takes tree aggregation (§6.4).
+    Returns ``(design, n_bufs)``.
+    """
+    if reproducible:
+        return "tree", 1
+    if design == "auto":
+        return sm.select_design(data_bytes)
+    if design not in hd.DESIGNS:
+        raise ValueError(f"unknown aggregation design {design!r}")
+    return design, (4 if design == "multi" else 1)
+
+
+def _levels(axes: Sequence[str]) -> tuple[topology.MeshLevel, ...]:
+    sizes = tuple(compat.axis_size(a) for a in axes)
+    return topology.mesh_levels(tuple(axes), sizes)
+
+
+# ---------------------------------------------------------------------------
+# Wire primitives: ingress gather and root multicast.
+# ---------------------------------------------------------------------------
+
+def _gather_children(tree: Any, axis: str) -> Any:
+    """Stack every child's leaves along a new leading axis: leaf
+    ``(n, ...)`` → ``(P, n, ...)`` with slot ``c`` = child ``c``'s copy.
+
+    The wire is the existing ring all-gather (P−1 ``ppermute`` hops);
+    ``stagger=-1`` pins slot order to child rank so the stack arrives in
+    canonical order before any arrival permutation is applied.
+    """
+    p = compat.axis_size(axis)
+
+    def g(leaf):
+        flat = coll.ring_all_gather(leaf, axis, stagger=-1)
+        return flat.reshape((p,) + leaf.shape)
+
+    return jax.tree.map(g, tree)
+
+
+def _multicast(tree: Any, axis: str, switch_rank: int = 0) -> Any:
+    """Broadcast the switch rank's leaves to every child of the level.
+
+    Power-of-two fan-in: binomial XOR tree rooted at ``switch_rank``
+    (log2 P ``ppermute`` hops — the root multicast down the reduction
+    tree).  Otherwise a ring broadcast (P−1 hops).  Non-switch ranks'
+    payloads are masked zeros and are simply overwritten.
+    """
+    p = compat.axis_size(axis)
+    if p == 1:
+        return tree
+    r = lax.axis_index(axis)
+    root = switch_rank % p
+    r_rel = (r - root) % p
+    if p & (p - 1) == 0:
+        for k in range(p.bit_length() - 1):
+            d = 1 << k
+            perm = [((root + i) % p, (root + (i ^ d)) % p) for i in range(p)]
+            recv = jax.tree.map(
+                lambda l: lax.ppermute(l, axis, perm), tree)
+            keep = (r_rel >= d) & (r_rel < 2 * d)
+            tree = jax.tree.map(lambda a, b: jnp.where(keep, b, a),
+                                tree, recv)
+    else:
+        perm = [((root + i) % p, (root + i + 1) % p) for i in range(p)]
+        for s in range(p - 1):
+            recv = jax.tree.map(lambda l: lax.ppermute(l, axis, perm), tree)
+            tree = jax.tree.map(lambda a, b: jnp.where(r_rel == s + 1, b, a),
+                                tree, recv)
+    return tree
+
+
+def _mask_to_switch(tree: Any, axis: str, switch_rank: int) -> Any:
+    """Zero every rank's leaves except the level's designated switch."""
+    r = lax.axis_index(axis)
+    return jax.tree.map(
+        lambda l: jnp.where(r == switch_rank, l, jnp.zeros_like(l)), tree)
+
+
+def _apply_arrival(stack: Any, headers: jax.Array,
+                   perm: np.ndarray | Sequence[int] | None,
+                   ) -> tuple[Any, jax.Array]:
+    """Reorder the child streams by a static arrival permutation.
+
+    ``perm`` is ``(P,)`` (whole streams arrive out of order) or
+    ``(P, n)`` (each packet slot sees its own interleaving — the fully
+    adversarial schedule).  Headers ride along so child-order handlers
+    can undo it.
+    """
+    if perm is None:
+        return stack, headers
+    order = jnp.asarray(np.asarray(perm), jnp.int32)
+    if order.ndim == 1:
+        order = jnp.broadcast_to(order[:, None],
+                                 (order.shape[0], headers.shape[1]))
+    stack = jax.tree.map(lambda l: hd.apply_order(l, order), stack)
+    return stack, hd.apply_order(headers, order)
+
+
+# ---------------------------------------------------------------------------
+# Dense / fixed-tree data plane.
+# ---------------------------------------------------------------------------
+
+def _dense_level(arena: jax.Array, lvl: topology.MeshLevel,
+                 handler: hd.Handler, design: str, n_bufs: int,
+                 fmt: pk.PacketFormat, arrival) -> jax.Array:
+    """One up-hop: frame, stream to the switch, aggregate, mask."""
+    b, s = arena.shape
+    r = lax.axis_index(lvl.axis)
+    stream = pk.packetize(arena, fmt, child_rank=r)
+    stacked = _gather_children(stream, lvl.axis)
+    payload, headers = _apply_arrival(stacked.payload, stacked.headers,
+                                      arrival)
+    egress, _ = hd.run(handler, payload, headers, design=design,
+                       n_bufs=n_bufs, ctx={"dtype": arena.dtype})
+    e = fmt.payload_elems(arena.dtype)
+    npkt = fmt.packets_per_block(s, arena.dtype)
+    out = egress.reshape(b, npkt * e)[:, :s]
+    return _mask_to_switch(out, lvl.axis, lvl.switch_rank)
+
+
+def _multicast_arena(arena: jax.Array, lvl: topology.MeshLevel,
+                     fmt: pk.PacketFormat) -> jax.Array:
+    """One down-hop: the switch multicasts its framed result."""
+    b, s = arena.shape
+    stream = pk.packetize(arena, fmt, child_rank=lvl.switch_rank)
+    stream = _multicast(stream, lvl.axis, lvl.switch_rank)
+    return pk.depacketize(stream, fmt, b, s)
+
+
+def switch_allreduce_dense(arena: jax.Array, axes: Sequence[str], *,
+                           reproducible: bool = False,
+                           design: str = "auto",
+                           fmt: pk.PacketFormat = DEFAULT_FORMAT,
+                           arrival_perms: Sequence | None = None,
+                           mean: bool = False) -> jax.Array:
+    """Allreduce a ``(B, S)`` arena through the emulated switch tree.
+
+    ``reproducible=True`` installs the ``fixed_tree`` handler: combines
+    follow the aligned binary tree over child ranks at every level, so
+    the result is bitwise-invariant to packet arrival order *and*
+    bitwise-equal to the wire ``fixed_tree`` collective
+    (``collectives.allreduce`` with ``algorithm="fixed_tree"``) — the
+    same combine tree, executed in-switch instead of rank-to-rank.
+    """
+    b, s = arena.shape
+    handler = hd.get_handler("fixed_tree" if reproducible else "dense_sum")
+    design, n_bufs = resolve_design(s * arena.dtype.itemsize, design,
+                                    reproducible)
+    levels = _levels(axes)
+    if len(levels) == 1 and levels[0].fanin == 1:
+        return arena
+    cur = arena
+    for i, lvl in enumerate(levels):
+        arrival = arrival_perms[i] if arrival_perms is not None else None
+        cur = _dense_level(cur, lvl, handler, design, n_bufs, fmt, arrival)
+    for lvl in reversed(levels):
+        cur = _multicast_arena(cur, lvl, fmt)
+    if mean:
+        cur = cur / compat.world_size(axes)
+    return cur
+
+
+# ---------------------------------------------------------------------------
+# int8 dequant-accumulate data plane (F1).
+# ---------------------------------------------------------------------------
+
+def _scales_format(fmt: pk.PacketFormat, block: int) -> pk.PacketFormat:
+    """The fp32 scales sideband: one packet per payload packet.
+
+    Requires the payload MTU to hold whole quantization blocks — that
+    is what keeps the sideband's packet count aligned with the
+    payload's (``E_s = E / block``) through any tail padding.
+    """
+    e = fmt.payload_elems(jnp.int8)
+    if e % block:
+        raise ValueError(
+            f"int8 switch transport needs the packet MTU ({fmt.mtu_bytes} B) "
+            f"to hold whole quantization blocks of {block}")
+    return pk.PacketFormat(mtu_bytes=e // block * 4)
+
+
+def switch_allreduce_int8(arena: jax.Array, axes: Sequence[str], *,
+                          block: int = 256,
+                          design: str = "auto",
+                          fmt: pk.PacketFormat = DEFAULT_FORMAT,
+                          arrival_perms: Sequence | None = None,
+                          mean: bool = False) -> jax.Array:
+    """int8-transport allreduce through the emulated switch.
+
+    Packets carry int8 payloads with a per-``block`` fp32 scale
+    sideband; every switch runs the ``int8_dequant`` handler (fused
+    dequantize-accumulate into an fp32 buffer — the "FPU in every HPU")
+    and requantizes the aggregate for the next wire hop; the root
+    requantizes once for the multicast down.  Quantization error is one
+    round per tree level up plus one down, the in-network analogue of
+    ``compression.quantized_allreduce``'s transport-precision trade.
+    """
+    b, s0 = arena.shape
+    handler = hd.get_handler("int8_dequant")
+    sfmt = _scales_format(fmt, block)
+    levels = _levels(axes)
+    if len(levels) == 1 and levels[0].fanin == 1:
+        return arena
+    # quantization needs whole blocks; packet alignment needs nothing
+    # extra — the scales sideband's packet count matches the payload's
+    # by construction (E_s = E/block), padding included
+    pad = (-s0) % block
+    xp = jnp.concatenate(
+        [arena, jnp.zeros((b, pad), arena.dtype)], axis=1) if pad else arena
+    s = xp.shape[1]
+    design, n_bufs = resolve_design(s, design)     # int8: S bytes per block
+
+    acc = xp.astype(jnp.float32)
+    e = fmt.payload_elems(jnp.int8)
+    npkt = fmt.packets_per_block(s, jnp.int8)
+    for i, lvl in enumerate(levels):
+        q, scales = compression.quantize_int8(acc, block)
+        r = lax.axis_index(lvl.axis)
+        streams = {"q": pk.packetize(q, fmt, child_rank=r),
+                   "scale": pk.packetize(scales, sfmt, child_rank=r)}
+        stacked = _gather_children(streams, lvl.axis)
+        payload = {"q": stacked["q"].payload, "scale": stacked["scale"].payload}
+        headers = stacked["q"].headers
+        arrival = arrival_perms[i] if arrival_perms is not None else None
+        payload, headers = _apply_arrival(payload, headers, arrival)
+        agg, _ = hd.run(handler, payload, headers, design=design,
+                        n_bufs=n_bufs, ctx={"qblock": block})
+        acc = agg.reshape(b, npkt * e)[:, :s]              # (n, E) fp32
+        acc = _mask_to_switch(acc, lvl.axis, lvl.switch_rank)
+
+    # root multicast: requantize once, stream int8 + scales back down
+    q, scales = compression.quantize_int8(acc, block)
+    streams = {"q": pk.packetize(q, fmt), "scale": pk.packetize(scales, sfmt)}
+    for lvl in reversed(levels):
+        streams = _multicast(streams, lvl.axis, lvl.switch_rank)
+    q = pk.depacketize(streams["q"], fmt, b, s)
+    scales = pk.depacketize(streams["scale"], sfmt, b, s // block)
+    out = compression.dequantize_int8(q, scales, block, dtype=arena.dtype)
+    out = out[:, :s0]
+    if mean:
+        out = out / compat.world_size(axes)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sparse coordinate-merge data plane (§7).
+# ---------------------------------------------------------------------------
+
+def _pack_lists(idx: jax.Array, val32: jax.Array) -> jax.Array:
+    """(B, cap) idx + fp32 val → (B, 2·cap) int32 wire image (bit-exact)."""
+    return jnp.concatenate(
+        [idx, lax.bitcast_convert_type(val32, jnp.int32)], axis=1)
+
+
+def _unpack_lists(packed: jax.Array, cap: int) -> tuple[jax.Array, jax.Array]:
+    return (packed[..., :cap],
+            lax.bitcast_convert_type(packed[..., cap:], jnp.float32))
+
+
+def _densify(idx: jax.Array, val32: jax.Array, b: int, s: int) -> jax.Array:
+    """§7 array storage: scatter-add ``(B, cap)`` lists into a dense
+    ``(B, S)`` fp32 buffer — the ``kernels/sparse_accum`` Pallas kernel,
+    bucket offsets folding B into one dense span (sentinels → -1)."""
+    gidx = jnp.where(idx != sparse.SENTINEL,
+                     idx + jnp.arange(b, dtype=jnp.int32)[:, None] * s,
+                     -1)
+    return ops.sparse_accum(gidx.reshape(-1), val32.reshape(-1),
+                            b * s).reshape(b, s)
+
+
+def switch_allreduce_sparse(arena: jax.Array, axes: Sequence[str],
+                            ks: Sequence[int] | int, *,
+                            density_threshold: float = 0.25,
+                            fmt: pk.PacketFormat = DEFAULT_FORMAT,
+                            arrival_perms: Sequence | None = None,
+                            mean: bool = False,
+                            with_stats: bool = False):
+    """Top-k sparse allreduce through the emulated switch (§7).
+
+    Hosts send their top-k coordinate lists as (idx, val) packets; each
+    switch runs the ``sparse_merge`` handler (sorted-list
+    insert-or-accumulate, collisions counted), forwarding the merged
+    list — capacity ``k · fanin`` — up the tree while it fits under
+    ``density_threshold · S``, densifying at whichever level it stops
+    fitting (the paper's hash-at-the-leaves / array-at-the-root split).
+    The final dense accumulate is the ``kernels/sparse_accum`` Pallas
+    kernel — literally the paper's array storage — and the root
+    multicasts the dense result down.
+
+    Returns ``(reduced, mine)`` like ``sparse.sparse_allreduce`` (and
+    ``stats`` — traced collision/spill counters on this rank's
+    root-path switches — when ``with_stats``).
+    """
+    b, s = arena.shape
+    handler = hd.get_handler("sparse_merge")
+    ks = tuple(int(k) for k in (ks if hasattr(ks, "__len__") else [ks] * b))
+    if len(ks) != b:
+        raise ValueError(f"got {len(ks)} ks for {b} buckets")
+    k_max = max(ks)
+    ks_arr = jnp.asarray(ks, jnp.int32)
+    levels = _levels(axes)
+
+    val, idx = jax.vmap(
+        lambda v, ke: sparse.topk_sparsify(v, k_max, ke))(arena, ks_arr)
+    mine = jax.vmap(
+        lambda v, i: sparse.scatter_dense(v, i, s, dtype=arena.dtype))(val,
+                                                                       idx)
+    if len(levels) == 1 and levels[0].fanin == 1:
+        out = mine.astype(jnp.float32)
+        if mean:
+            out = out / compat.world_size(axes)
+        return ((out.astype(arena.dtype), mine,
+                 {"collisions": jnp.zeros((), jnp.int32),
+                  "spill_bytes": jnp.zeros((), jnp.int32)})
+                if with_stats else (out.astype(arena.dtype), mine))
+    val32 = val.astype(jnp.float32)
+    cap = k_max
+    dense_acc: jax.Array | None = None
+    collisions = jnp.zeros((), jnp.int32)
+
+    for i, lvl in enumerate(levels):
+        arrival = arrival_perms[i] if arrival_perms is not None else None
+        if dense_acc is None and sparse.densify_step(
+                cap * lvl.fanin, s, density_threshold):
+            # array storage from here on: this level would overflow the
+            # list capacity, so densify before the hop (§7 densification
+            # toward the root)
+            dense_acc = _densify(idx, val32, b, s)
+        if dense_acc is not None:
+            dense_acc = _dense_level(dense_acc, lvl,
+                                     hd.get_handler("dense_sum"), "single", 1,
+                                     fmt, arrival)
+            continue
+        packed = _pack_lists(idx, val32)                   # (B, 2·cap) int32
+        r = lax.axis_index(lvl.axis)
+        stream = pk.packetize(packed, fmt, child_rank=r)
+        stacked = _gather_children(stream, lvl.axis)
+        payload, headers = _apply_arrival(stacked.payload, stacked.headers,
+                                          arrival)
+        # a coordinate list spans several packets, so the reassembly of
+        # each child's wire image must group packets by the CHILD header,
+        # not by arrival position — under a per-slot arrival interleave
+        # the stack rows mix children, and pairing child A's indices
+        # with child B's values would silently corrupt the sum
+        order = hd.child_order(headers)
+        payload = hd.apply_order(payload, order)
+        headers = hd.apply_order(headers, order)
+        # reassemble each child's wire image from its packets, then merge
+        child_packed = jax.vmap(
+            lambda pl, hdrs: pk.depacketize(pk.PacketStream(hdrs, pl),
+                                            fmt, b, 2 * cap)
+        )(payload, headers)
+        cidx, cval = _unpack_lists(child_packed, cap)      # (P, B, cap)
+        merged, stats = hd.run(handler, {"idx": cidx, "val": cval}, headers,
+                               design="single")
+        collisions = collisions + stats["collisions"]
+        cap *= lvl.fanin
+        idx, val32 = merged["idx"], merged["val"]
+        r_sw = lax.axis_index(lvl.axis)
+        idx = jnp.where(r_sw == lvl.switch_rank, idx,
+                        jnp.full_like(idx, sparse.SENTINEL))
+        val32 = jnp.where(r_sw == lvl.switch_rank, val32,
+                          jnp.zeros_like(val32))
+
+    if dense_acc is None:
+        # root array storage (§7)
+        dense_acc = _densify(idx, val32, b, s)
+        dense_acc = _mask_to_switch(dense_acc, levels[-1].axis,
+                                    levels[-1].switch_rank)
+
+    for lvl in reversed(levels):
+        dense_acc = _multicast_arena(dense_acc, lvl, fmt)
+    if mean:
+        dense_acc = dense_acc / compat.world_size(axes)
+    red = dense_acc.astype(arena.dtype)
+    if with_stats:
+        stats = {"collisions": collisions,
+                 "spill_bytes": collisions * 2 * 4}   # (idx, val) per spill
+        return red, mine, stats
+    return red, mine
+
+
+# ---------------------------------------------------------------------------
+# Static packet/combine counters — the perfmodel cross-check surface.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LevelCounters:
+    """Per-switch traffic and work at one tree level, per allreduce."""
+
+    axis: str
+    fanin: int                  # P: packets per block arriving at a switch
+    ingress_packets: int        # blocks · fanin received per switch
+    egress_packets: int         # blocks forwarded up (1 per block)
+    combines: int               # blocks · (fanin − 1) combine ops
+    buffers_per_block: float    # M — the working-memory multiplier
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchCounters:
+    """What the data plane will execute for one ``(B, S)`` arena.
+
+    These are exactly the analytic model's inputs: ``payload_elems`` is
+    the paper's ``N``, each level's ``fanin`` its ``P``, ``combines``
+    the ``P−1``-per-block count every §6 service time amortizes, and
+    ``buffers_per_block`` the ``M`` of the working-memory equation
+    (Little's law, §4.3).  ``tests/test_switch.py`` feeds them back
+    into ``perfmodel.switch_model`` to pin the two layers together.
+    """
+
+    levels: tuple[LevelCounters, ...]
+    blocks: int                 # B · ceil(S/N) reduction blocks framed
+    payload_elems: int          # N
+    packet_bytes: int           # MTU
+    design: str
+    n_bufs: int
+
+    @property
+    def total_combines(self) -> int:
+        return sum(l.combines for l in self.levels)
+
+    def model_point(self, data_bytes: int) -> "sm.DesignPoint":
+        """Evaluate the analytic model at this plane's operating point."""
+        params = sm.SwitchParams(packet_bytes=self.packet_bytes)
+        return sm.model_design(self.design, data_bytes, params,
+                               B=self.n_bufs, P=self.levels[0].fanin)
+
+
+def plan_counters(axis_names: Sequence[str], axis_sizes: Sequence[int],
+                  num_buckets: int, bucket_elems: int, dtype, *,
+                  fmt: pk.PacketFormat = DEFAULT_FORMAT,
+                  design: str = "auto",
+                  reproducible: bool = False) -> SwitchCounters:
+    """Static counters for the plane's schedule on a mesh (no tracing)."""
+    n = fmt.payload_elems(dtype)
+    npkt = fmt.packets_per_block(bucket_elems, dtype)
+    blocks = num_buckets * npkt
+    nbytes = bucket_elems * jnp.dtype(dtype).itemsize
+    design, n_bufs = resolve_design(nbytes, design, reproducible)
+    levels = []
+    for lvl in topology.mesh_levels(tuple(axis_names), tuple(axis_sizes)):
+        p = lvl.fanin
+        levels.append(LevelCounters(
+            axis=lvl.axis, fanin=p,
+            ingress_packets=blocks * p,
+            egress_packets=blocks,
+            combines=blocks * hd.combines_per_packet_slot(p, design),
+            buffers_per_block=sm.buffers_per_block(design, p, n_bufs)))
+    return SwitchCounters(levels=tuple(levels), blocks=blocks,
+                          payload_elems=n, packet_bytes=fmt.mtu_bytes,
+                          design=design, n_bufs=n_bufs)

@@ -1,0 +1,297 @@
+"""sPIN-style packet handlers for the emulated switch (paper §3, §6–§7).
+
+The paper programs the switch by installing three small functions per
+allreduce — a *header handler* (steering: which buffer/order a packet
+takes), a *payload handler* (the combine executed as the payload
+streams through an HPU), and a *completion handler* (finalization when
+a block's last packet lands).  This module is the registry of those
+handler triples, vectorized over the packet batch axis: instead of one
+HPU invocation per packet, each stage consumes the whole ``(P, n, ...)``
+child-stacked ingress at once and the per-packet work runs as
+vmapped/Pallas kernels.
+
+Aggregation-buffer designs (§6.1–§6.3) are fold strategies shared by
+every handler:
+
+=========  ================================================================
+``single``  one contended aggregation buffer — packets fold sequentially
+            in *arrival* order (§6.1); cheapest memory, order-dependent
+            bits.
+``multi``   ``n_bufs`` per-port partial buffers filled round-robin by
+            arrival position, then the §6.2 final ``(B-1)·L`` merge.
+``tree``    the §6.3 binary-counter tree: combines follow the aligned
+            binary tree over *child rank* (``kernels/tree_reduce``
+            Pallas kernel, fp32 accumulation) — a pure function of rank
+            ids, never of arrival order, which is the paper's F3
+            bitwise-reproducibility mechanism.
+=========  ================================================================
+
+Handlers: ``dense_sum`` (elementwise accumulate — fp32 FPU for floats,
+exact native arithmetic for integer dtypes), ``fixed_tree``
+(dense, reorders by the child header then always combines in the fixed
+tree), ``int8_dequant`` (F1: fused dequantize-accumulate through
+``kernels/quant.dequant_accum``), and ``sparse_merge`` (§7: coordinate
+lists merged by sort + adjacent-duplicate fold, collisions counted —
+the hash-table insert-or-accumulate analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression, sparse
+from repro.kernels import ops
+from repro.switch import packets as pk
+
+DESIGNS = ("single", "multi", "tree")
+
+
+# ---------------------------------------------------------------------------
+# Aggregation-buffer designs (§6.1–§6.3): folds over the child-stack axis.
+# ---------------------------------------------------------------------------
+
+def fold_single(stack: jax.Array) -> jax.Array:
+    """§6.1 contended single buffer: sequential fold in stack order."""
+    acc = stack[0]
+    for i in range(1, stack.shape[0]):
+        acc = acc + stack[i]
+    return acc
+
+
+def fold_multi(stack: jax.Array, n_bufs: int) -> jax.Array:
+    """§6.2 multi-buffer: round-robin partials + the final (B-1)·L merge."""
+    p = stack.shape[0]
+    n_bufs = max(1, min(int(n_bufs), p))
+    partials = [fold_single(stack[j::n_bufs]) for j in range(n_bufs)]
+    acc = partials[0]
+    for part in partials[1:]:
+        acc = acc + part
+    return acc
+
+
+def fold_tree(stack: jax.Array) -> jax.Array:
+    """§6.3 binary-counter tree: the aligned fixed tree over the stack
+    index (``kernels/tree_reduce``; fp32 accumulation for floats, exact
+    native accumulation for integers; P padded to a power of two with
+    zero streams)."""
+    p = stack.shape[0]
+    flat = stack.reshape(p, -1)
+    return ops.tree_reduce(flat).reshape(stack.shape[1:])
+
+
+def fold(stack: jax.Array, design: str, n_bufs: int = 1) -> jax.Array:
+    if design == "single":
+        return fold_single(stack)
+    if design == "multi":
+        return fold_multi(stack, n_bufs)
+    if design == "tree":
+        return fold_tree(stack)
+    raise ValueError(f"unknown aggregation design {design!r}")
+
+
+def combines_per_packet_slot(p: int, design: str) -> int:
+    """Combine operations one packet slot costs across P children.
+
+    Every design performs exactly ``P - 1`` combines per reduction-block
+    packet slot — the quantity the analytic model's service times
+    amortize (``tau_tree = (P-1)·L/P + DMA``, the single-buffer fold,
+    the multi-buffer partials + ``(B-1)`` merge) — they differ in
+    contention and working memory, not in arithmetic count.
+    """
+    if design not in DESIGNS:
+        raise ValueError(f"unknown aggregation design {design!r}")
+    return p - 1
+
+
+# ---------------------------------------------------------------------------
+# Header-handler steering: arrival order vs child-rank order.
+# ---------------------------------------------------------------------------
+
+def child_order(headers: jax.Array) -> jax.Array:
+    """Per-packet-slot child order: ``(P, n)`` argsort of HDR_CHILD.
+
+    The fixed-tree header handler's steering rule — each packet's
+    position in the combine tree comes from the header's child rank, so
+    any arrival permutation (even per-slot) lands every payload in the
+    same tree leaf.
+    """
+    return jnp.argsort(headers[:, :, pk.HDR_CHILD], axis=0)
+
+
+def apply_order(leaf: jax.Array, order: jax.Array) -> jax.Array:
+    """Reorder a ``(P, n, ...)`` payload leaf by a ``(P, n)`` order."""
+    o = order.reshape(order.shape + (1,) * (leaf.ndim - order.ndim))
+    return jnp.take_along_axis(leaf, jnp.broadcast_to(o, leaf.shape), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# The handler registry.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Handler:
+    """One sPIN handler triple, vectorized over the packet batch axis.
+
+    ``header_handler(headers) -> (P, n) order | None`` — steering: the
+    stack permutation applied before combining (None = arrival order).
+    ``payload_handler(stack, headers, design, n_bufs, ctx) -> (agg,
+    stats)`` — the combine over the (already steered) child stack;
+    ``stats`` holds traced counters (e.g. sparse collisions).
+    ``completion_handler(agg, ctx) -> egress`` — block finalization
+    (dtype cast for the forwarded packet payloads).
+    """
+
+    name: str
+    kind: str                       # dense | int8 | sparse
+    header_handler: Callable
+    payload_handler: Callable
+    completion_handler: Callable
+    #: designs this handler supports; fixed_tree pins "tree" (§6.3).
+    designs: tuple[str, ...] = DESIGNS
+
+
+def run(handler: "Handler", payload, headers: jax.Array, *,
+        design: str, n_bufs: int = 1, ctx: dict | None = None):
+    """Execute one handler triple over a child-stacked ingress.
+
+    ``payload`` is a pytree of ``(P, n, ...)`` leaves, ``headers`` the
+    matching ``(P, n, F)`` stack.  Applies the header handler's
+    steering, the payload combine, and the completion finalization;
+    returns ``(egress, stats)``.
+    """
+    ctx = {} if ctx is None else ctx
+    order = handler.header_handler(headers)
+    if order is not None:
+        payload = jax.tree.map(lambda l: apply_order(l, order), payload)
+        headers = apply_order(headers, order)
+    agg, stats = handler.payload_handler(payload, headers, design, n_bufs,
+                                         ctx)
+    return handler.completion_handler(agg, ctx), stats
+
+
+_REGISTRY: dict[str, Handler] = {}
+
+
+def register(handler: Handler) -> Handler:
+    _REGISTRY[handler.name] = handler
+    return handler
+
+
+def get_handler(name: str) -> Handler:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown switch handler {name!r}; have "
+                         f"{sorted(_REGISTRY)}") from None
+
+
+# -- dense sum ---------------------------------------------------------------
+
+def _acc_dtype(dtype):
+    """The aggregation-buffer dtype: fp32 FPU for floats (the switch's
+    "FPU in every HPU"), the native dtype for integers — integer sums
+    must stay exact, never round through fp32."""
+    return (jnp.float32 if jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
+            else jnp.dtype(dtype))
+
+
+def _dense_payload(stack, headers, design, n_bufs, ctx):
+    return fold(stack.astype(_acc_dtype(stack.dtype)), design, n_bufs), {}
+
+
+def _dense_completion(agg, ctx):
+    return agg.astype(ctx["dtype"])
+
+
+register(Handler(
+    name="dense_sum", kind="dense",
+    header_handler=lambda headers: None,
+    payload_handler=_dense_payload,
+    completion_handler=_dense_completion))
+
+
+# -- fixed tree (F3 reproducible) --------------------------------------------
+
+def _fixed_tree_payload(stack, headers, design, n_bufs, ctx):
+    # design is pinned to "tree": §6.4 — "when reproducibility ... is
+    # required, Flare always uses tree aggregation."
+    return fold_tree(stack.astype(_acc_dtype(stack.dtype))), {}
+
+
+register(Handler(
+    name="fixed_tree", kind="dense",
+    header_handler=child_order,
+    payload_handler=_fixed_tree_payload,
+    completion_handler=_dense_completion,
+    designs=("tree",)))
+
+
+# -- int8 dequantize-accumulate (F1) -----------------------------------------
+
+def _int8_payload(stack, headers, design, n_bufs, ctx):
+    """stack = {"q": (P, n, E) int8, "scale": (P, n, E/qblock) fp32}."""
+    q, s = stack["q"], stack["scale"]
+    p, n = q.shape[:2]
+    qblock = ctx["qblock"]
+    qf = q.reshape(p, -1)
+    sf = s.reshape(p, -1)
+    if design == "single":
+        acc = ops.dequant_accum(qf, sf, qblock=qblock)
+    elif design == "multi":
+        n_bufs = max(1, min(int(n_bufs), p))
+        acc = ops.dequant_accum(qf[0::n_bufs], sf[0::n_bufs], qblock=qblock)
+        for j in range(1, n_bufs):
+            acc = acc + ops.dequant_accum(qf[j::n_bufs], sf[j::n_bufs],
+                                          qblock=qblock)
+    elif design == "tree":
+        deq = compression.dequantize_int8(qf, sf, qblock)
+        acc = fold_tree(deq)
+    else:
+        raise ValueError(f"unknown aggregation design {design!r}")
+    return acc.reshape(q.shape[1:]), {}
+
+
+register(Handler(
+    name="int8_dequant", kind="int8",
+    header_handler=lambda headers: None,
+    payload_handler=_int8_payload,
+    completion_handler=lambda agg, ctx: agg))   # stays fp32; the data
+#                                 plane requantizes for the next wire hop
+
+
+# -- sparse coordinate merge (§7) --------------------------------------------
+
+def _list_nnz(idx: jax.Array) -> jax.Array:
+    return jnp.sum((idx != sparse.SENTINEL).astype(jnp.int32))
+
+
+def _sparse_payload(stack, headers, design, n_bufs, ctx):
+    """stack = {"idx": (P, B, cap) int32, "val": (P, B, cap)}.
+
+    Sequential insert-or-accumulate of each child's coordinate list into
+    the aggregation storage (sorted-list analogue of the paper's hash
+    table), counting index *collisions* — entries that accumulated into
+    an existing slot.  Collisions are what the paper's fixed-size hash
+    spills to the host (§7, Fig. 14); the emulator counts the real ones
+    so the analytic spill model can be cross-checked on actual tensors.
+    """
+    idx, val = stack["idx"], stack["val"]
+    p = idx.shape[0]
+    merged_i, merged_v = idx[0], val[0]
+    collisions = jnp.zeros((), jnp.int32)
+    for c in range(1, p):
+        before = _list_nnz(merged_i) + _list_nnz(idx[c])
+        merged_i, merged_v = sparse.merge_coordinate_lists(
+            merged_i, merged_v, idx[c], val[c])
+        collisions = collisions + (before - _list_nnz(merged_i))
+    return {"idx": merged_i, "val": merged_v}, {"collisions": collisions}
+
+
+register(Handler(
+    name="sparse_merge", kind="sparse",
+    header_handler=lambda headers: None,
+    payload_handler=_sparse_payload,
+    completion_handler=lambda agg, ctx: agg))

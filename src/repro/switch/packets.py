@@ -1,0 +1,119 @@
+"""Packet framing for the emulated switch data plane (paper §3, §4).
+
+Hosts carve each ``(B, S)`` dtype arena into MTU-sized packets before it
+hits the wire: packet payloads are ``mtu_bytes`` of consecutive arena
+elements, and every packet carries the header the sPIN handlers key on —
+the reduction-block id, the packet's sequence offset within the block,
+the sending child's rank, the count of valid (non-pad) elements, and
+the last-packet flag the paper's completion handler uses to detect a
+finished block.  Framing is *bitwise*: payload bytes are never
+reinterpreted, so ``depacketize(packetize(x)) == x`` bit for bit, for
+any dtype, NaNs and ragged tails included.
+
+Depacketization reassembles from the headers, not from array position —
+packets may arrive in any order (the adversarial-arrival property the
+reproducibility tests exercise) and the arena still round-trips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+#: Header field indices (one int32 each, HEADER_BYTES on the wire).
+HDR_BLOCK = 0       # reduction-block (arena bucket) id
+HDR_SEQ = 1         # packet sequence number within the block
+HDR_CHILD = 2       # sending child's rank on the reduced axis
+HDR_VALID = 3       # valid payload elements (< payload_elems on tails)
+HDR_LAST = 4        # 1 on the block's final packet (completion marker)
+HEADER_FIELDS = 5
+HEADER_BYTES = HEADER_FIELDS * 4
+
+
+@dataclasses.dataclass(frozen=True)
+class PacketFormat:
+    """The wire format: payload MTU in bytes (headers ride separately)."""
+
+    mtu_bytes: int = 1024
+
+    def payload_elems(self, dtype) -> int:
+        """N: elements of ``dtype`` per packet payload."""
+        itemsize = jnp.dtype(dtype).itemsize
+        if self.mtu_bytes % itemsize:
+            raise ValueError(f"mtu_bytes={self.mtu_bytes} not a multiple of "
+                             f"{dtype} itemsize {itemsize}")
+        return self.mtu_bytes // itemsize
+
+    def packets_per_block(self, bucket_elems: int, dtype) -> int:
+        """Packets needed to frame one S-element reduction block."""
+        return max(1, math.ceil(bucket_elems / self.payload_elems(dtype)))
+
+
+@dataclasses.dataclass(frozen=True)
+class PacketStream:
+    """A batch of framed packets: ``headers (n, 5) int32``, ``payload
+    (n, E) dtype``.  Registered as a pytree so streams flow through
+    ``ppermute``/``jnp.where`` wire ops leaf by leaf."""
+
+    headers: jax.Array
+    payload: jax.Array
+
+    @property
+    def num_packets(self) -> int:
+        return self.payload.shape[0]
+
+
+jax.tree_util.register_pytree_node(
+    PacketStream,
+    lambda s: ((s.headers, s.payload), None),
+    lambda _, ch: PacketStream(*ch))
+
+
+def packetize(arena: jax.Array, fmt: PacketFormat,
+              child_rank: jax.Array | int = 0) -> PacketStream:
+    """Frame a ``(B, S)`` arena into ``B * ceil(S/N)`` MTU packets.
+
+    The tail packet of each block zero-pads to a whole payload and
+    records the true element count in ``HDR_VALID``; ``child_rank`` (may
+    be a traced rank scalar) stamps every header's ``HDR_CHILD``.
+    """
+    if arena.ndim != 2:
+        raise ValueError(f"packetize wants a (B, S) arena, got {arena.shape}")
+    b, s = arena.shape
+    e = fmt.payload_elems(arena.dtype)
+    npkt = fmt.packets_per_block(s, arena.dtype)
+    pad = npkt * e - s
+    if pad:
+        arena = jnp.concatenate(
+            [arena, jnp.zeros((b, pad), arena.dtype)], axis=1)
+    payload = arena.reshape(b * npkt, e)
+
+    block = jnp.repeat(jnp.arange(b, dtype=jnp.int32), npkt)
+    seq = jnp.tile(jnp.arange(npkt, dtype=jnp.int32), b)
+    valid = jnp.minimum(e, s - seq * e).astype(jnp.int32)
+    last = (seq == npkt - 1).astype(jnp.int32)
+    child = jnp.full((b * npkt,), child_rank, jnp.int32)
+    headers = jnp.stack([block, seq, child, valid, last], axis=1)
+    return PacketStream(headers=headers, payload=payload)
+
+
+def depacketize(stream: PacketStream, fmt: PacketFormat,
+                num_buckets: int, bucket_elems: int) -> jax.Array:
+    """Reassemble the ``(B, S)`` arena from a packet stream, bitwise.
+
+    Packets are placed by their ``(HDR_BLOCK, HDR_SEQ)`` header, never
+    by array position, so any permutation of the stream reassembles
+    identically; tail padding is sliced off via the static ``S``.
+    """
+    e = fmt.payload_elems(stream.payload.dtype)
+    npkt = fmt.packets_per_block(bucket_elems, stream.payload.dtype)
+    n = num_buckets * npkt
+    if stream.num_packets != n:
+        raise ValueError(f"stream has {stream.num_packets} packets, plan "
+                         f"wants {n} ({num_buckets} blocks x {npkt})")
+    slot = stream.headers[:, HDR_BLOCK] * npkt + stream.headers[:, HDR_SEQ]
+    flat = jnp.zeros((n, e), stream.payload.dtype).at[slot].set(
+        stream.payload, mode="drop")
+    return flat.reshape(num_buckets, npkt * e)[:, :bucket_elems]

@@ -6,10 +6,11 @@ Invoked by tests/test_collectives.py as::
         python tests/multidevice_checks.py <group>
 
 Groups: collectives | arena_pipeline | sparse_quant | fsdp_engine |
-        trainer | repro | transports | hierarchy
+        trainer | repro | transports | hierarchy | switch
 Exits non-zero on any failure (assertion output on stderr).
 
-The ``hierarchy`` group is mesh-shape-parametric: ``REPRO_MESH_SHAPE``
+The ``hierarchy`` and ``switch`` groups are mesh-shape-parametric:
+``REPRO_MESH_SHAPE``
 (e.g. ``8`` or ``2x4``, the ``(pod, data)`` reduction axes) selects the
 topology, and the pytest wrapper runs it under both the flat and the
 two-level shape via the ``--mesh-shape`` conftest option.
@@ -522,6 +523,170 @@ def check_hierarchy():
     print(f"hierarchy OK ({pod}x{data})")
 
 
+def check_switch():
+    """PR 4: the emulated sPIN switch data plane as a fourth transport.
+
+    Mesh-shape-parametric (``REPRO_MESH_SHAPE``): flat ``(1, 8)`` and
+    two-level ``(2, 4)`` topologies per tier-1 run.  Verified here:
+      * engine end-to-end: ``transport="innetwork"`` == flat == tree-
+        driven hierarchical == fp oracle for dense, sparse and int8
+        handler types (within dtype/quantization tolerance);
+      * the switch fixed-tree handler is **bitwise-equal** to the wire
+        ``fixed_tree`` collective (same aligned combine tree, executed
+        in-switch) and **bitwise-invariant** under adversarial per-slot
+        packet arrival permutations (§6.3 / F3);
+      * reproducible innetwork: arena ≡ legacy packing bitwise;
+      * sparse data plane emits collision/spill counters consistent
+        with the §7 hash-spill model (the perfmodel cross-check's
+        multidevice half).
+    """
+    from repro.perfmodel import switch_model as sm
+    from repro.switch import dataplane
+
+    pod, data = _mesh_shape()
+    mesh = launch_mesh.make_fake_mesh((pod, data))
+    world = pod * data
+    rng = np.random.default_rng(41)
+    Z = 192
+    xs = jnp.asarray(rng.normal(size=(world, Z)).astype(np.float32))
+    expect = np.asarray(xs).sum(0)
+
+    def run(fn, xs=xs):
+        g = jax.jit(compat.shard_map(
+            fn, in_specs=(P(("pod", "data"), None),), out_specs=P(None),
+            axis_names={"pod", "data"}, check_vma=False))
+        with compat.set_mesh(mesh):
+            x = jax.device_put(xs, NamedSharding(mesh,
+                                                 P(("pod", "data"), None)))
+            return np.asarray(g(x))
+
+    def eng(x, kw):
+        g = {"a": x[0][:100], "b": x[0][100:164].reshape(8, 8),
+             "c": x[0][164:]}
+        r = GradReducer(FlareConfig(axes=("pod", "data"), bucket_bytes=256,
+                                    **kw))
+        red, _ = r(g, r.init_state(g))
+        return jnp.concatenate([red["a"], red["b"].reshape(-1), red["c"]])
+
+    # innetwork == flat == hierarchical == oracle, all three handler types
+    for kw, tol, name in [(dict(), 1e-4, "dense"),
+                          (dict(sparse_k_frac=1.0), 1e-4, "sparse"),
+                          (dict(compression="int8"), 0.6, "int8")]:
+        outs = {}
+        for label, extra in [("innetwork", dict(transport="innetwork")),
+                             ("flat", dict(hierarchical=False)),
+                             ("hier", dict(hierarchical=True)),
+                             ("legacy_innet", dict(transport="innetwork",
+                                                   arena=False))]:
+            outs[label] = run(lambda x, kw={**kw, **extra}: eng(x, kw))
+        for label, got in outs.items():
+            assert np.allclose(got, expect, atol=tol), \
+                f"{name}/{label}: {np.abs(got - expect).max()}"
+
+    # reproducible innetwork: arena ≡ legacy packing, bitwise (F3)
+    a = run(lambda x: eng(x, dict(transport="innetwork", reproducible=True,
+                                  arena=True)))
+    b = run(lambda x: eng(x, dict(transport="innetwork", reproducible=True,
+                                  arena=False)))
+    assert a.tobytes() == b.tobytes(), "innetwork repro arena vs legacy"
+    assert np.allclose(a, expect, atol=1e-4), "innetwork repro accuracy"
+
+    # transport level: switch fixed tree ≡ wire fixed tree, bitwise, and
+    # bitwise-invariant under adversarial per-slot arrival permutations
+    B, S = 3, 64
+    xs_t = jnp.asarray((rng.normal(size=(world, B * S)) * 1e3)
+                       .astype(np.float32))
+    sw = run(lambda x: dataplane.switch_allreduce_dense(
+        x[0].reshape(B, S), ("pod", "data"), reproducible=True), xs=xs_t)
+    wire = run(lambda x: jax.vmap(lambda v: coll.allreduce(
+        v, ("pod", "data"), algorithm="fixed_tree",
+        reproducible=True))(x[0].reshape(B, S)), xs=xs_t)
+    assert sw.tobytes() == wire.tobytes(), "switch vs wire fixed tree"
+    fanins = [data, pod] if pod > 1 else [data]
+    for trial in range(2):
+        perms = [np.stack([rng.permutation(p) for _ in range(B)], axis=1)
+                 for p in fanins]
+        got = run(lambda x, pp=perms: dataplane.switch_allreduce_dense(
+            x[0].reshape(B, S), ("pod", "data"), reproducible=True,
+            arrival_perms=pp), xs=xs_t)
+        assert got.tobytes() == sw.tobytes(), \
+            f"arrival permutation changed bits (trial {trial})"
+
+    # integer arenas must reduce EXACTLY through the switch — the dense
+    # handler's aggregation buffer is fp32 only for floats, native for
+    # ints (2^24 + 1 would round through an fp32 accumulator)
+    def int_exact(x):
+        t = transports.from_config(
+            FlareConfig(axes=("pod", "data"), transport="innetwork"),
+            jnp.int32)
+        arena = jnp.full((1, 8), (1 << 24) + 1, jnp.int32)
+        red, _ = t(arena, None, jnp.zeros((1,), jnp.int32), (8,))
+        return red
+    got = run(int_exact)
+    assert (got == world * ((1 << 24) + 1)).all(), \
+        f"int32 switch reduce not exact: {got[0, 0]}"
+
+    # the multicast roots at the *designated* switch rank — a non-zero
+    # root must deliver that rank's buffer, not rank 0's masked zeros
+    def bcast(x):
+        r = jax.lax.axis_index("data")
+        v = jnp.where(r == data - 1, x[0][:16], jnp.zeros((16,), jnp.float32))
+        return dataplane._multicast(v, "data", data - 1)
+
+    got = run(bcast)
+    want = np.asarray(xs)[data - 1][:16]     # rank (pod 0, data P-1)'s row
+    assert np.array_equal(got, want), "multicast must root at switch_rank"
+
+    # sparse data plane: measured collision/spill counters on this
+    # rank's root path match the §7 hash-spill expectation, level by
+    # level (lists densify toward the root, so each level's insert
+    # count is fanin × the previous level's expected unique entries)
+    B2, S2, k = 2, 512, 32
+    xs_s = jnp.asarray(rng.normal(size=(world, B2 * S2)).astype(np.float32))
+
+    def sparse_stats(x):
+        _, _, st = dataplane.switch_allreduce_sparse(
+            x[0].reshape(B2, S2), ("pod", "data"), ks=k,
+            density_threshold=1.1, with_stats=True)
+        # counters are per-rank (each rank's root-path switches); pick
+        # rank (0, 0)'s deterministically — P(None) output alone would
+        # leave WHICH rank's shard materializes unspecified
+        on_root = ((jax.lax.axis_index("pod") == 0)
+                   & (jax.lax.axis_index("data") == 0))
+        return jax.lax.psum(jnp.where(
+            on_root,
+            jnp.stack([st["collisions"].astype(jnp.float32),
+                       st["spill_bytes"].astype(jnp.float32)]),
+            jnp.zeros((2,), jnp.float32)), ("pod", "data"))
+
+    stats_out = run(sparse_stats, xs=xs_s)
+    collisions, spill = int(stats_out[0]), int(stats_out[1])
+    assert collisions > 0, "sparse merge saw no collisions"
+    assert spill == collisions * 2 * 4, "spill bytes != (idx, val) pairs"
+    expected, nnz = 0.0, float(k)
+    for f in fanins:
+        c_lvl = sm.expected_hash_collisions(f * nnz, S2)
+        expected += c_lvl * B2
+        nnz = f * nnz - c_lvl
+    assert 0.4 * expected < collisions < 2.2 * expected, \
+        f"collisions {collisions} vs model {expected:.1f}"
+
+    # per-slot packet interleaving must not corrupt the sparse merge —
+    # a child's list spans several packets and reassembly regroups them
+    # by the CHILD header, so an adversarial arrival is bitwise-harmless
+    sp_base = run(lambda x: dataplane.switch_allreduce_sparse(
+        x[0].reshape(B2, S2), ("pod", "data"), ks=k,
+        density_threshold=1.1)[0], xs=xs_s)
+    sp_perms = [np.stack([rng.permutation(f) for _ in range(B2)], axis=1)
+                for f in fanins]
+    sp_got = run(lambda x, pp=sp_perms: dataplane.switch_allreduce_sparse(
+        x[0].reshape(B2, S2), ("pod", "data"), ks=k,
+        density_threshold=1.1, arrival_perms=pp)[0], xs=xs_s)
+    assert sp_got.tobytes() == sp_base.tobytes(), \
+        "per-slot arrival interleave corrupted the sparse merge"
+    print(f"switch OK ({pod}x{data})")
+
+
 GROUPS = {
     "collectives": check_collectives,
     "arena_pipeline": check_arena_pipeline,
@@ -531,6 +696,7 @@ GROUPS = {
     "trainer": check_trainer,
     "repro": check_repro,
     "hierarchy": check_hierarchy,
+    "switch": check_switch,
 }
 
 if __name__ == "__main__":

@@ -35,6 +35,11 @@ def test_run_quick_smoke():
             assert f"quick.hier.{transport}.{mode}.us_per_call" in names, \
                 names
         assert f"quick.hier.{transport}.speedup_x" in names, names
+        # PR 4: the emulated switch data plane vs the flat wire schedule
+        for mode in ("flat", "innetwork"):
+            assert f"quick.switch.{transport}.{mode}.us_per_call" in names, \
+                names
+        assert f"quick.switch.{transport}.overhead_x" in names, names
     # wall-clock values are positive microseconds
     for l in rows:
         assert float(l.split(",")[1]) > 0, l
@@ -79,3 +84,4 @@ def test_quick_expected_rows_cover_all_transports():
     for t in ("dense", "sparse", "int8"):
         assert f"quick.{t}.batched_speedup_x" in names
         assert f"quick.hier.{t}.speedup_x" in names
+        assert f"quick.switch.{t}.overhead_x" in names

@@ -39,3 +39,11 @@ def test_multidevice_hierarchy(mesh_shape):
     one tier-1 run (conftest ``--mesh-shape``)."""
     out = _run_group("hierarchy", mesh_shape=mesh_shape)
     assert "OK" in out
+
+
+def test_multidevice_switch(mesh_shape):
+    """The emulated switch data plane (PR 4): innetwork == flat ==
+    hierarchical per handler type, fixed-tree bitwise claims, sparse
+    counter cross-check — under both mesh shapes."""
+    out = _run_group("switch", mesh_shape=mesh_shape)
+    assert "OK" in out

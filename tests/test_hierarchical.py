@@ -236,6 +236,35 @@ def check_sparse_nonpow2_outer_fallback():
         raise AssertionError("forced hierarchical sparse on a non-pow2 "
                              "pod axis must raise")
 
+    # the emulated switch data plane has no power-of-two constraint at
+    # all: per-level merges are iterated folds and the non-pow2 levels
+    # take the ring multicast — dense AND sparse innetwork reduce the
+    # (3, 4) mesh correctly (the wire sparse transport cannot)
+    for kw in (dict(), dict(sparse_k_frac=1.0)):
+        got = _run_on_mesh(mesh, tfn(FlareConfig(axes=("pod", "data"),
+                                                 transport="innetwork",
+                                                 **kw)), xs)
+        assert np.allclose(got, expect, atol=1e-4), \
+            f"innetwork on (3,4) {kw}: {np.abs(got - expect).max()}"
+    # small k + high threshold keeps coordinate lists sparse across BOTH
+    # levels, so the merge itself crosses the non-pow2 pod axis
+    kk = 4
+    got = _run_on_mesh(mesh, tfn(FlareConfig(axes=("pod", "data"),
+                                             transport="innetwork",
+                                             sparse_k_frac=kk / s,
+                                             density_threshold=0.9)), xs)
+
+    def topk_np(v, n):
+        i = np.argsort(-np.abs(v))[:n]
+        o = np.zeros_like(v)
+        o[i] = v[i]
+        return o
+
+    want = sum(np.stack([topk_np(np.asarray(xs[r]).reshape(b, s)[bi], kk)
+                         for bi in range(b)]) for r in range(12))
+    assert np.allclose(got, want, atol=1e-4), \
+        f"innetwork sparse merge on (3,4): {np.abs(got - want).max()}"
+
 
 CHILD_CHECKS = {
     "hier_vs_flat": (check_hier_matches_flat_psum, 8),
