@@ -3,7 +3,8 @@
 The container has no network access and no ``hypothesis`` wheel; without
 it five tier-1 test modules fail at *collection*.  This stub implements
 the tiny slice of the API those modules use — ``given``, ``settings``
-and the ``integers`` / ``floats`` / ``lists`` / ``sets`` strategies —
+and the ``integers`` / ``floats`` / ``lists`` / ``sets`` /
+``dictionaries`` / ``data`` strategies —
 drawing a small, deterministic set of examples per test (seeded PRNG, so
 failures reproduce).  It is only installed when the real package is
 missing; with ``hypothesis`` available nothing here is imported.
@@ -67,6 +68,33 @@ def sets(elements: _Strategy, *, min_size: int = 0,
     return _Strategy(draw)
 
 
+def dictionaries(keys: _Strategy, values: _Strategy, *, min_size: int = 0,
+                 max_size: int = 10, **_kw) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        out = {}
+        for _ in range(8 * max(n, 1)):
+            if len(out) >= n:
+                break
+            out[keys.example(rng)] = values.example(rng)
+        return out
+    return _Strategy(draw)
+
+
+class _DataObject:
+    """Interactive draws inside a test body (``st.data()``)."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label: str | None = None):
+        return strategy.example(self._rng)
+
+
+def data() -> _Strategy:
+    return _Strategy(lambda rng: _DataObject(rng))
+
+
 def given(*arg_strats, **kw_strats):
     def deco(fn):
         @functools.wraps(fn)
@@ -113,7 +141,7 @@ def install() -> None:
     mod = types.ModuleType("hypothesis")
     strategies = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "booleans", "sampled_from",
-                 "lists", "sets"):
+                 "lists", "sets", "dictionaries", "data"):
         setattr(strategies, name, globals()[name])
     mod.given = given
     mod.settings = settings

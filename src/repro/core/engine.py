@@ -112,10 +112,29 @@ class FlareConfig:
 
 
 class GradReducer:
-    """Reduces a gradient pytree with the configured Flare algorithm."""
+    """Reduces a gradient pytree with the configured Flare algorithm.
 
-    def __init__(self, config: FlareConfig):
+    ``manager``/``tenant`` attach this reducer to a shared multi-tenant
+    switch runtime (``runtime.SessionManager``, ``transport="innetwork"``
+    only): each dtype arena group opens its own session — named
+    ``{tenant}/{dtype}`` since tenants are per wire image — admitted
+    against switch capacity, and reduces under the runtime's
+    contention-derived packet arrival schedule (DESIGN.md §13).
+    """
+
+    def __init__(self, config: FlareConfig, *, manager=None,
+                 tenant: str | None = None):
         self.config = config
+        if manager is not None and config.transport != "innetwork":
+            raise ValueError(
+                "a runtime.SessionManager needs transport='innetwork'; "
+                f"config has transport={config.transport!r}")
+        self.manager = manager
+        if manager is not None and tenant is None:
+            # a stable auto-name per reducer: two reducers sharing a
+            # manager must be distinct tenants even with equal shapes
+            tenant = manager.new_tenant()
+        self.tenant = tenant
         if config.sparse_k_frac > 0 and config.transport != "innetwork":
             # fail fast: sparse_allreduce's recursive doubling needs a
             # power-of-two inner axis, and a bad mesh shape should raise
@@ -161,6 +180,15 @@ class GradReducer:
     def _world(self) -> int:
         return compat.world_size(self.config.axes)
 
+    def _transport(self, dtype, *, batched: bool):
+        """Group transport; dtype-suffixed tenant names under a manager
+        (each dtype arena is its own wire image, hence its own session)."""
+        tenant = self.tenant
+        if self.manager is not None and tenant is not None:
+            tenant = f"{tenant}/{jnp.dtype(dtype).name}"
+        return transports.from_config(self.config, dtype, batched=batched,
+                                      manager=self.manager, tenant=tenant)
+
     def _pad_multiple(self, world: int) -> int:
         """Chunk-divisibility folded into the arena plan.
 
@@ -189,7 +217,7 @@ class GradReducer:
         for g in plan.groups:
             buf = g.pack(leaves)
             ef_buf = g.pack(ef_leaves) if ef_leaves is not None else None
-            transport = transports.from_config(c, g.dtype, batched=True)
+            transport = self._transport(g.dtype, batched=True)
             red, ef_red = transport(buf, ef_buf, g.staggers(c.stagger),
                                     g.valid_extents)
             red_groups.append(red)
@@ -219,7 +247,7 @@ class GradReducer:
             flat = bucketing.pack_bucket(leaves, b)
             ef_flat = (bucketing.pack_bucket(ef_leaves, b)
                        if self.needs_state else None)
-            transport = transports.from_config(c, flat.dtype, batched=False)
+            transport = self._transport(flat.dtype, batched=False)
             stagger = b.stagger if c.stagger else 0
             red, ef_out = transport(
                 flat[None], ef_flat[None] if ef_flat is not None else None,

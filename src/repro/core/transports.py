@@ -49,7 +49,7 @@ lists, not dense vectors.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -325,10 +325,32 @@ class SwitchTransport(Transport):
     block: int = QUANT_BLOCK
     k_frac: float = 0.01
     density_threshold: float = 0.25
+    #: multi-tenant attachment (DESIGN.md §13): a ``runtime.
+    #: SessionManager`` shared by several reducers in one process.  At
+    #: trace time the transport opens/attaches its session (admission
+    #: control against switch capacity — ``runtime.AdmissionError``
+    #: propagates to the caller as the host-fallback signal) and the
+    #: data plane runs under the manager's contention-derived arrival
+    #: permutations for this ``tenant``.  ``None`` → the single-job
+    #: plane of PR 4, unchanged.
+    manager: Any = dataclasses.field(default=None, compare=False)
+    tenant: str | None = None
 
     @property
     def needs_state(self) -> bool:
         return self.mode in ("int8", "sparse")
+
+    def _session_perms(self, buf, k: int | None = None):
+        """Attach to the shared switch; returns this tenant's per-level
+        arrival permutations (``None`` when alone on an idle switch)."""
+        if self.manager is None:
+            return None
+        sess = self.manager.attach(
+            self.tenant, mode=self.mode, num_buckets=buf.shape[0],
+            bucket_elems=buf.shape[1], dtype=buf.dtype,
+            reproducible=self.reproducible, design=self.design, k=k,
+            axes=self.axes)
+        return self.manager.arrival_perms(sess.tenant)
 
     def __call__(self, buf, ef, staggers, extents):
         from repro.switch import dataplane
@@ -336,7 +358,8 @@ class SwitchTransport(Transport):
         if self.mode == "dense":
             red = dataplane.switch_allreduce_dense(
                 buf, self.axes, reproducible=self.reproducible,
-                design=self.design)
+                design=self.design,
+                arrival_perms=self._session_perms(buf))
             if self.mean:
                 red = red / self._world()
             return red, (jnp.zeros_like(ef) if ef is not None else None)
@@ -344,17 +367,22 @@ class SwitchTransport(Transport):
         if ef is None:
             ef = jnp.zeros_like(buf)
         if self.mode == "int8":
+            perms = self._session_perms(buf)
+
             def transmit(v):
                 red = dataplane.switch_allreduce_int8(
-                    v, self.axes, block=self.block, design=self.design)
+                    v, self.axes, block=self.block, design=self.design,
+                    arrival_perms=perms)
                 return red, compression.quantize_roundtrip(v, self.block)
         elif self.mode == "sparse":
             ks = tuple(sparse.sparse_k(self.k_frac, e) for e in extents)
+            perms = self._session_perms(buf, k=max(ks))
 
             def transmit(v):
                 return dataplane.switch_allreduce_sparse(
                     v, self.axes, ks,
-                    density_threshold=self.density_threshold)
+                    density_threshold=self.density_threshold,
+                    arrival_perms=perms)
         else:
             raise ValueError(f"unknown switch transport mode {self.mode!r}")
         red, ef_out = compression.error_feedback_step(buf, ef, transmit)
@@ -363,19 +391,24 @@ class SwitchTransport(Transport):
         return red, ef_out
 
 
-def _switch_from_config(config, dtype, is_float: bool) -> SwitchTransport:
+def _switch_from_config(config, dtype, is_float: bool, *,
+                        manager=None, tenant=None) -> SwitchTransport:
     axes = tuple(config.axes)
     if config.sparse_k_frac > 0 and is_float:
         return SwitchTransport(axes, mean=config.mean, mode="sparse",
                                k_frac=config.sparse_k_frac,
-                               density_threshold=config.density_threshold)
+                               density_threshold=config.density_threshold,
+                               manager=manager, tenant=tenant)
     if config.compression == "int8" and is_float:
-        return SwitchTransport(axes, mean=config.mean, mode="int8")
+        return SwitchTransport(axes, mean=config.mean, mode="int8",
+                               manager=manager, tenant=tenant)
     return SwitchTransport(axes, mean=config.mean, mode="dense",
-                           reproducible=config.reproducible)
+                           reproducible=config.reproducible,
+                           manager=manager, tenant=tenant)
 
 
-def from_config(config, dtype, *, batched: bool = True) -> Transport:
+def from_config(config, dtype, *, batched: bool = True,
+                manager=None, tenant: str | None = None) -> Transport:
     """The transport dispatch, in one place.
 
     ``config`` is any object with the ``FlareConfig`` transport fields
@@ -384,16 +417,25 @@ def from_config(config, dtype, *, batched: bool = True) -> Transport:
     apply to floating dtypes only; everything else rides the dense path.
     ``transport="innetwork"`` swaps the wire schedules for the emulated
     switch data plane (``SwitchTransport``) while keeping the same
-    dense/int8/sparse handler selection.  The flat-vs-hierarchical
-    choice threads through to every wire transport:
-    ``hierarchical=None`` lets the mesh's reduction tree decide at trace
-    time (``topology.transport_schedule``).
+    dense/int8/sparse handler selection; a shared ``manager``
+    (``runtime.SessionManager``) additionally attaches the transport as
+    tenant ``tenant`` of the multi-tenant switch runtime — admission
+    control plus contention-derived packet arrival schedules (DESIGN.md
+    §13).  The flat-vs-hierarchical choice threads through to every wire
+    transport: ``hierarchical=None`` lets the mesh's reduction tree
+    decide at trace time (``topology.transport_schedule``).
     """
     axes = tuple(config.axes)
     hierarchical = getattr(config, "hierarchical", None)
     is_float = jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
     if getattr(config, "transport", "auto") == "innetwork":
-        return _switch_from_config(config, dtype, is_float)
+        return _switch_from_config(config, dtype, is_float,
+                                   manager=manager, tenant=tenant)
+    if manager is not None:
+        raise ValueError(
+            "a runtime.SessionManager applies to transport='innetwork' "
+            f"only; config has "
+            f"transport={getattr(config, 'transport', 'auto')!r}")
     if config.sparse_k_frac > 0 and is_float:
         return SparseTransport(axes, mean=config.mean, batched=batched,
                                hierarchical=hierarchical,

@@ -1,5 +1,7 @@
 """Fault tolerance: sharded checkpoints, failure detection, elastic re-mesh."""
 from repro.ft.checkpoint import CheckpointManager
-from repro.ft.coordinator import Coordinator, RemeshPlan
+from repro.ft.coordinator import (Coordinator, RemeshPlan,
+                                  recover_switch_failure)
 
-__all__ = ["CheckpointManager", "Coordinator", "RemeshPlan"]
+__all__ = ["CheckpointManager", "Coordinator", "RemeshPlan",
+           "recover_switch_failure"]

@@ -69,17 +69,65 @@ def plan_remesh(total_hosts: int, failed: set[int], *, model: int,
                       dropped_hosts=dropped, tree=tree)
 
 
+def recover_switch_failure(network: topology.NetworkManager,
+                           lease: topology.AllreduceLease,
+                           switch_id: int, *, runtime=None):
+    """Route a failed *switch* rank through the §4 network-manager path.
+
+    Host failures re-mesh (``plan_remesh``); a failed switch keeps every
+    host and instead recomputes the lease's reduction tree around the
+    dead switch (``topology.rebuild_excluding_switch`` via
+    ``NetworkManager.handle_switch_failure`` — fan-ins grow on the
+    survivors).  When a multi-tenant switch runtime
+    (``runtime.SessionManager``) rides the lease's tree, its sessions
+    are **drained and re-admitted** on the rebuilt tree: counters and
+    memory demands are recomputed against the grown fan-ins, and
+    sessions that no longer fit are evicted to host-based collectives.
+    Returns the new lease, or ``None`` — no sibling switch to reroute
+    through, the lease is released and *every* session drains to the
+    host-based fallback (the paper's admission-failure path).
+    """
+    new_lease = network.handle_switch_failure(lease, switch_id)
+    if runtime is not None:
+        if new_lease is None:
+            runtime.drain()
+        else:
+            runtime.rebind(new_lease.tree)
+    return new_lease
+
+
 class Coordinator:
-    """Heartbeat failure detector (pluggable clock for tests)."""
+    """Heartbeat failure detector (pluggable clock for tests).
+
+    Detects *host* failures via heartbeats; *switch* failures are
+    reported explicitly (there is no switch heartbeat — the paper's
+    manager learns of them from the fabric) and routed through
+    :func:`recover_switch_failure` when a ``network`` manager is
+    attached.
+    """
 
     def __init__(self, hosts: int, *, timeout_s: float = 10.0,
-                 clock=time.monotonic):
+                 clock=time.monotonic,
+                 network: topology.NetworkManager | None = None):
         self.hosts = hosts
         self.timeout = timeout_s
         self.clock = clock
+        self.network = network
         t = clock()
         self.last_seen = {h: t for h in range(hosts)}
         self.failed: set[int] = set()
+        self.failed_switches: set[int] = set()
+
+    def switch_failure(self, lease: topology.AllreduceLease,
+                       switch_id: int, *, runtime=None):
+        """Record and recover from a failed switch rank (see
+        :func:`recover_switch_failure`)."""
+        if self.network is None:
+            raise RuntimeError("no NetworkManager attached; construct the "
+                               "Coordinator with network=...")
+        self.failed_switches.add(switch_id)
+        return recover_switch_failure(self.network, lease, switch_id,
+                                      runtime=runtime)
 
     def heartbeat(self, host: int) -> None:
         if host in self.failed:

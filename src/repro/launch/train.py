@@ -34,7 +34,99 @@ def _parse():
                     choices=("auto", "innetwork"),
                     help="auto = wire collectives; innetwork = the "
                          "emulated sPIN switch data plane (repro/switch)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="run K concurrent training jobs as tenants of ONE "
+                         "shared emulated switch (multi-tenant runtime, "
+                         "DESIGN.md §13; implies --transport innetwork). "
+                         "Tenant k cycles through dense / int8 / sparse "
+                         "gradient transports")
+    ap.add_argument("--partition-policy", type=str, default="weighted_fair",
+                    choices=("static", "weighted_fair", "greedy"),
+                    help="HPU-cluster partition policy for --tenants > 1")
+    ap.add_argument("--schedule-order", type=str, default="round_robin",
+                    choices=("round_robin", "priority"),
+                    help="ingress interleave order for --tenants > 1")
     return ap.parse_args()
+
+
+def _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes):
+    """K concurrent training jobs as tenants of ONE emulated switch.
+
+    Every job owns its own params/optimizer/data stream but all K
+    ``GradReducer``s attach to a shared ``runtime.SessionManager`` — the
+    multi-tenant switch runtime (DESIGN.md §13).  Tenant ``k`` cycles
+    dense(f32, reproducible) / int8 / sparse transports, the
+    heterogeneous mix of the acceptance scenario; after training the
+    manager prints the partition/schedule/prediction report.
+    """
+    import time
+
+    import jax
+
+    from repro import compat
+    from repro.core.engine import FlareConfig
+    from repro.data import pipeline
+    from repro.runtime import SessionManager
+    from repro.train import trainer
+
+    reduce_sizes = tuple(s for a, s in zip(mcfg.axes, mcfg.shape)
+                         if a in mcfg.reduce_axes)
+    manager = SessionManager(mcfg.reduce_axes, reduce_sizes,
+                             policy=args.partition_policy,
+                             order=args.schedule_order,
+                             max_sessions=max(8, 2 * args.tenants))
+    variants = [dict(reproducible=True),
+                dict(compression="int8"),
+                dict(sparse_k_frac=max(args.sparse_k, 0.01))]
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    def build(k):
+        kw = variants[k % len(variants)]
+        tcfg = trainer.TrainConfig(
+            lr=args.lr, gather_algorithm=args.gather_algorithm,
+            flare=FlareConfig(axes=mcfg.reduce_axes,
+                              transport="innetwork", **kw))
+        return kw, trainer.jit_train_step(
+            model, mesh, mcfg, tcfg, params_shapes, batch_shapes,
+            donate=False, reduce_manager=manager, tenant=f"job{k}")
+
+    jobs = []
+    with compat.set_mesh(mesh):
+        # phase 1 — registration traces: sessions open at *trace* time,
+        # and jit is lazy, so without this pass tenant 0 would compile
+        # seeing an empty switch (no contention) and earlier tenants
+        # would bake stale tenant mixes into their arrival schedules.
+        # An abstract eval_shape per job registers every session
+        # without compiling anything.
+        for k in range(args.tenants):
+            _, (fn, _p, _o, _b, init_opt) = build(k)
+            opt_shapes = jax.eval_shape(init_opt, params_shapes)
+            jax.eval_shape(fn, params_shapes, opt_shapes, batch_shapes)
+        # phase 2 — the real builds: fresh traces now see the full mix
+        for k in range(args.tenants):
+            kw, (fn, param_sh, opt_sh, batch_sh, init_opt) = build(k)
+            params = jax.device_put(model.init(jax.random.PRNGKey(k)),
+                                    param_sh)
+            opt = jax.device_put(init_opt(params), opt_sh)
+            stream = pipeline.synthetic_batches(cfg, args.batch, args.seq,
+                                                shardings=batch_sh,
+                                                seed=100 + k)
+            jobs.append({"name": f"job{k}",
+                         "kind": sorted(kw)[0],
+                         "fn": fn, "params": params, "opt": opt,
+                         "stream": stream})
+        for step in range(args.steps):
+            t0 = time.time()
+            line = []
+            for j in jobs:
+                batch = next(j["stream"])
+                j["params"], j["opt"], metrics = j["fn"](j["params"],
+                                                         j["opt"], batch)
+                line.append(f"{j['name']}({j['kind']}) "
+                            f"{float(metrics['loss']):8.4f}")
+            print(f"step {step:5d} | " + " | ".join(line) +
+                  f" | dt {time.time() - t0:6.3f}s", flush=True)
+    print(manager.report(), flush=True)
 
 
 def main():
@@ -87,6 +179,9 @@ def main():
                           compression=args.compression,
                           sparse_k_frac=args.sparse_k,
                           transport=args.transport))
+
+    if args.tenants > 1:
+        return _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes)
 
     with compat.set_mesh(mesh):
         fn, param_sh, opt_sh, batch_sh, init_opt = trainer.jit_train_step(

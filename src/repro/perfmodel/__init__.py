@@ -17,6 +17,12 @@ lives here as models; its *function* — packet handlers actually reducing
 tensors — is executed by the emulated data plane (``repro.switch``,
 DESIGN.md §12), whose packet/combine counters are cross-checked against
 these models in ``tests/test_switch.py`` so the two layers cannot drift.
+The same split governs the multi-tenant runtime (``repro.runtime``,
+DESIGN.md §13): ``switch_model.model_shared`` *predicts* per-tenant
+throughput from a cluster partition, while the runtime's scheduler
+*measures* it from the interleaved ingress it actually executes — pinned
+to each other in ``tests/test_runtime.py`` and multidevice group
+``runtime``.
 """
 from repro.perfmodel import network_sim, switch_model, switch_sim
 

@@ -195,6 +195,64 @@ def model_design(design: str, data_bytes: int,
     )
 
 
+# ---------------------------------------------------------------------------
+# Shared-switch mode: per-tenant throughput under a cluster partition (§4).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TenantPoint:
+    """Predicted operating point of one tenant on a shared switch.
+
+    The multi-tenant runtime (``repro.runtime``) partitions the K HPU
+    clusters across concurrent allreduce sessions; each tenant then runs
+    the single-job model on its slice: its aggregation bandwidth is
+    ``min(K_i/τ_i, share_i/δ)`` — compute-bound on the clusters it owns,
+    or line-bound on its share of the ingress ports (the fraction of
+    arriving packets that belong to it under the scheduler's interleave).
+    ``bottleneck`` records which term won.
+    """
+
+    tenant: str
+    clusters: int
+    cores: int                  # K_i = clusters · C
+    tau: float                  # τ_i — the tenant's own design/service time
+    ingress_share: float        # its fraction of line-rate packet arrivals
+    bandwidth_pkts: float       # min(K_i/τ_i, share_i/δ)  [packets/cycle]
+    bandwidth_tbps: float
+    bottleneck: str             # "compute" | "line"
+
+
+def model_shared(allocs, params: SwitchParams = SwitchParams(),
+                 ) -> tuple[TenantPoint, ...]:
+    """Per-tenant throughput of a partitioned switch.
+
+    ``allocs`` is a sequence of ``(tenant, clusters, tau, ingress_share)``
+    tuples — the partition policy's cluster counts plus each tenant's
+    single-job service time τ (from :func:`model_design` at its own
+    design point) and its ingress share.  Clusters are shared-nothing
+    (§3), so the single-job bandwidth law ``B = min(K/τ, 1/δ)`` applies
+    per slice with the line term scaled by the tenant's packet share.
+    The emulator's scheduler (``repro.runtime.scheduler.simulate_shared``)
+    measures the same quantity from the interleaved ingress schedule;
+    ``tests/multidevice_checks.py`` group ``runtime`` pins the two
+    together the way ``tests/test_switch.py`` pins the single-job model.
+    """
+    out = []
+    for tenant, clusters, tau, share in allocs:
+        k = int(clusters) * params.cores_per_cluster
+        compute = k / float(tau)      # 0 clusters → 0 (a reclaimed tenant)
+        line = float(share) / params.delta
+        bw = min(compute, line)
+        out.append(TenantPoint(
+            tenant=str(tenant), clusters=int(clusters), cores=k,
+            tau=float(tau), ingress_share=float(share),
+            bandwidth_pkts=bw,
+            bandwidth_tbps=bw * params.packet_bytes * 8
+            * params.clock_hz / 1e12,
+            bottleneck="compute" if compute <= line else "line"))
+    return tuple(out)
+
+
 def select_design(data_bytes: int) -> tuple[str, int]:
     """§6.4 switchover: (design, B). Reproducible mode always uses tree."""
     if data_bytes > 512 << 10:

@@ -1,0 +1,42 @@
+"""Multi-tenant switch runtime (DESIGN.md §13).
+
+Multiplexes N concurrent allreduce **sessions** — distinct tenants with
+different shapes/dtypes/transport configs — over the shared emulated
+switch (``repro.switch``):
+
+* ``sessions``  — :class:`Session` handles and the :class:`SessionManager`
+  with the paper's §4 admission control (HPU clusters, static
+  aggregation-buffer memory shares).
+* ``partition`` — HPU-cluster partition policies (``static``,
+  ``weighted_fair``, work-conserving ``greedy``) mapping sessions to
+  disjoint cluster slices.
+* ``scheduler`` — the per-level ingress interleave (round-robin /
+  priority), the shared-service simulation, and per-tenant
+  packet/combine/occupancy counters that cross-check
+  ``perfmodel.switch_model.model_shared``.
+
+Tenants attach through the transport layer:
+``transports.from_config(cfg, dtype, manager=mgr, tenant=...)`` (or
+``GradReducer(cfg, manager=mgr)``) opens a session at trace time and
+runs the data plane under the manager's contention-derived arrival
+permutations.  Isolation anchor: every session's fixed-tree result is
+bitwise identical to its solo run on an idle switch (multidevice group
+``runtime``).
+"""
+from repro.runtime.partition import (ClusterSlice, Partition, POLICIES,
+                                     greedy_partition, make_partition,
+                                     static_partition,
+                                     weighted_fair_partition)
+from repro.runtime.scheduler import (ORDERS, SharedSchedule, TenantCounters,
+                                     TenantLoad, ingress_shares, interleave,
+                                     service_tau, simulate_shared)
+from repro.runtime.sessions import (AdmissionError, Session, SessionManager,
+                                    session_demand_bytes)
+
+__all__ = [
+    "AdmissionError", "ClusterSlice", "ORDERS", "POLICIES", "Partition",
+    "Session", "SessionManager", "SharedSchedule", "TenantCounters",
+    "TenantLoad", "greedy_partition", "ingress_shares", "interleave",
+    "make_partition", "service_tau", "session_demand_bytes",
+    "simulate_shared", "static_partition", "weighted_fair_partition",
+]

@@ -1,0 +1,427 @@
+"""Sessions and admission control for the multi-tenant switch runtime.
+
+The paper's network manager (§4) statically partitions switch memory
+across a predefined maximum number of concurrent allreduces and rejects
+anything beyond it (→ host-based fallback).  ``SessionManager`` is that
+control plane grown to a full runtime over the *emulated* switch
+(``repro.switch``): N concurrent allreduce **sessions** — distinct
+tenants with their own shapes/dtypes/transport configs — multiplex one
+switch, each admitted against
+
+* **HPU clusters** — every active session needs at least one cluster of
+  the ``SwitchParams`` capacity (the partition policy decides how many,
+  ``runtime.partition``), and
+* **aggregation-buffer memory** — the session's working set
+  (``M`` buffers per in-flight block, ``switch_model.buffers_per_block``)
+  must fit the §4 static memory share ``L1_total / max_sessions``.
+
+Admitted sessions contend on the wire: the scheduler interleaves their
+packet streams into one ingress sequence per tree level
+(``runtime.scheduler``) and that contention reaches the *functional*
+data plane as per-level arrival permutations (``arrival_perms`` →
+``dataplane._apply_arrival``).  The correctness anchor: those
+permutations are exactly the adversarial schedules the fixed-tree /
+child-steered handlers are invariant to, so **every session's result is
+bitwise identical to the same session run alone on an idle switch** —
+multidevice group ``runtime`` proves it on real tensors.
+
+The SPMD emulation cannot change wire topology mid-process, so after a
+switch failure the *rebuilt* reduction tree
+(``topology.rebuild_excluding_switch``) governs the control plane only:
+``rebind`` drains every session and re-admits it with counters recomputed
+on the new tree (fan-ins grow, demands grow, some sessions may no longer
+fit → evicted to host-based fallback), mirroring the paper's recompute
+path.  ``ft.coordinator.recover_switch_failure`` drives this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology
+from repro.perfmodel import switch_model as sm
+from repro.runtime import partition as pt
+from repro.runtime import scheduler as sc
+from repro.switch import dataplane
+
+
+class AdmissionError(RuntimeError):
+    """The switch cannot admit this session — fall back to host wires."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Session:
+    """One tenant's live allreduce session on the shared switch."""
+
+    tenant: str
+    mode: str                    # dense | int8 | sparse (handler family)
+    num_buckets: int             # B of the tenant's (B, S) arena
+    bucket_elems: int            # S
+    dtype: str                   # arena dtype name
+    weight: float = 1.0
+    priority: int = 0
+    reproducible: bool = False
+    design: str = "auto"
+    k: int | None = None         # sparse list capacity (top-k)
+    counters: dataplane.SwitchCounters | None = None
+    demand_bytes: int = 0
+
+    @property
+    def spec(self) -> tuple:
+        """The attach-matching key: everything the wire image and the
+        admission decision depend on — ``k`` sizes the sparse lists,
+        ``reproducible``/``design`` pick the aggregation design and
+        hence the memory multiplier M, so a change in any of them is a
+        *different* session that must re-run admission."""
+        return (self.mode, self.num_buckets, self.bucket_elems, self.dtype,
+                self.reproducible, self.design, self.k)
+
+
+def session_demand_bytes(counters: dataplane.SwitchCounters) -> int:
+    """Aggregation-buffer working memory one session pins on the switch.
+
+    Every in-flight reduction block holds ``M`` aggregation buffers of
+    one packet each (``switch_model.buffers_per_block`` — the working-
+    memory multiplier of the §4.3 Little's-law equation); the busiest
+    level bounds the session.
+    """
+    m = max(l.buffers_per_block for l in counters.levels)
+    return int(math.ceil(m * counters.blocks)) * counters.packet_bytes
+
+
+class SessionManager:
+    """Admission, partitioning and scheduling for one shared switch.
+
+    ``axis_names``/``axis_sizes`` are the mesh reduction axes
+    (outermost-first) the emulated data plane runs on; the manager's
+    reduction tree starts as their nested tree and is replaced wholesale
+    by ``rebind`` after a switch failure.  ``policy`` picks the cluster
+    partition (``runtime.partition.POLICIES``), ``order`` the ingress
+    interleave (``runtime.scheduler.ORDERS``).
+    """
+
+    def __init__(self, axis_names: Sequence[str],
+                 axis_sizes: Sequence[int], *,
+                 params: sm.SwitchParams = sm.SwitchParams(),
+                 policy: str = "weighted_fair",
+                 order: str = "round_robin",
+                 max_sessions: int = 8,
+                 fmt=dataplane.DEFAULT_FORMAT,
+                 seed: int = 0):
+        if policy not in pt.POLICIES:
+            raise ValueError(f"unknown partition policy {policy!r}")
+        if order not in sc.ORDERS:
+            raise ValueError(f"unknown schedule order {order!r}")
+        if policy == "static" and params.clusters < max_sessions:
+            # fail fast: otherwise admission would accept sessions whose
+            # static share is 0 clusters and every later partition()/
+            # report() would raise instead
+            raise ValueError(
+                f"static policy cannot split {params.clusters} clusters "
+                f"into {max_sessions} shares; lower max_sessions")
+        self.axis_names = tuple(axis_names)
+        self.axis_sizes = tuple(int(s) for s in axis_sizes)
+        if len(self.axis_names) != len(self.axis_sizes):
+            raise ValueError(f"{len(self.axis_names)} axis names for "
+                             f"{len(self.axis_sizes)} sizes")
+        self.params = params
+        self.policy = policy
+        self.order = order
+        self.max_sessions = int(max_sessions)
+        self.fmt = fmt
+        self.seed = int(seed)
+        self.tree = topology.build_mesh_tree(self.axis_sizes)
+        self._mesh_levels = topology.mesh_levels(self.axis_names,
+                                                 self.axis_sizes)
+        self._sessions: dict[str, Session] = {}
+        self._epoch = 0           # bumped by rebind → fresh arrival perms
+        self._next_tenant = 0
+
+    def new_tenant(self) -> str:
+        """A fresh unique tenant name (``tenant0``, ``tenant1``, ...)
+        for callers that don't name their own (e.g. ``GradReducer``
+        without an explicit ``tenant=``)."""
+        name = f"tenant{self._next_tenant}"
+        self._next_tenant += 1
+        return name
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def num_levels(self) -> int:
+        """Levels the data plane walks (mesh levels, not tree levels —
+        the wire topology is fixed even after a control-plane rebind)."""
+        return len(self._mesh_levels)
+
+    @property
+    def memory_budget_bytes(self) -> int:
+        return self.params.l1_bytes_per_cluster * self.params.clusters
+
+    @property
+    def bytes_per_session(self) -> int:
+        """§4: switch memory statically split across the predefined max."""
+        return self.memory_budget_bytes // self.max_sessions
+
+    # -- session lifecycle -------------------------------------------------
+    def active(self) -> tuple[Session, ...]:
+        return tuple(self._sessions.values())
+
+    def session(self, tenant: str) -> Session:
+        return self._sessions[tenant]
+
+    def weights(self) -> dict[str, float]:
+        return {s.tenant: s.weight for s in self._sessions.values()}
+
+    def _counters(self, mode: str, num_buckets: int, bucket_elems: int,
+                  dtype, design: str, reproducible: bool,
+                  k: int | None) -> dataplane.SwitchCounters:
+        """Static ingress counters on the *current* tree, per wire image.
+
+        The wire carries what the transport actually frames: the arena
+        dtype for dense, int8 payloads (quant-block-padded) for the F1
+        transport, and ``2k`` int32 words (idx + bitcast value) per
+        bucket for the §7 coordinate lists at the leaf level.
+        """
+        if mode == "dense":
+            wire_dtype, elems = jnp.dtype(dtype), bucket_elems
+        elif mode == "int8":
+            from repro.core.transports import QUANT_BLOCK
+            pad = (-bucket_elems) % QUANT_BLOCK
+            wire_dtype, elems = jnp.dtype(jnp.int8), bucket_elems + pad
+        elif mode == "sparse":
+            k = max(1, bucket_elems // 100) if k is None else int(k)
+            wire_dtype, elems = jnp.dtype(jnp.int32), 2 * k
+        else:
+            raise ValueError(f"unknown session mode {mode!r}")
+        return dataplane.tree_counters(self.tree, num_buckets, elems,
+                                       wire_dtype, fmt=self.fmt,
+                                       design=design,
+                                       reproducible=reproducible)
+
+    def open(self, tenant: str, *, mode: str, num_buckets: int,
+             bucket_elems: int, dtype, weight: float = 1.0,
+             priority: int = 0, reproducible: bool = False,
+             design: str = "auto", k: int | None = None) -> Session:
+        """Admit a session, or raise :class:`AdmissionError`.
+
+        Admission is the paper's: a bounded session count (each active
+        session needs ≥ 1 HPU cluster of the partition) and a static
+        memory share the session's aggregation-buffer working set must
+        fit.  The caller owning the rejected reduction falls back to
+        host-based collectives — exactly the §4 path.
+        """
+        tenant = str(tenant)
+        if tenant in self._sessions:
+            raise ValueError(f"session {tenant!r} already open")
+        if len(self._sessions) >= self.max_sessions:
+            raise AdmissionError(
+                f"switch at its predefined maximum of {self.max_sessions} "
+                f"concurrent sessions; {tenant!r} must use host wires")
+        if len(self._sessions) + 1 > self.params.clusters:
+            raise AdmissionError(
+                f"{self.params.clusters} HPU clusters cannot give "
+                f"{len(self._sessions) + 1} sessions one each")
+        dtype_name = jnp.dtype(dtype).name
+        counters = self._counters(mode, int(num_buckets), int(bucket_elems),
+                                  dtype, design, reproducible, k)
+        demand = session_demand_bytes(counters)
+        if demand > self.bytes_per_session:
+            raise AdmissionError(
+                f"session {tenant!r} needs {demand} B of aggregation "
+                f"buffers; the static share is {self.bytes_per_session} B "
+                f"({self.memory_budget_bytes} B / {self.max_sessions})")
+        sess = Session(tenant=tenant, mode=mode, num_buckets=int(num_buckets),
+                       bucket_elems=int(bucket_elems), dtype=dtype_name,
+                       weight=float(weight), priority=int(priority),
+                       reproducible=bool(reproducible), design=design,
+                       k=k, counters=counters, demand_bytes=demand)
+        self._sessions[tenant] = sess
+        return sess
+
+    def attach(self, tenant: str | None, *, mode: str, num_buckets: int,
+               bucket_elems: int, dtype, reproducible: bool = False,
+               design: str = "auto", k: int | None = None,
+               weight: float = 1.0, priority: int = 0,
+               axes: Sequence[str] | None = None) -> Session:
+        """Open-or-reuse: the transports' trace-time entry point.
+
+        A session whose spec (wire image + admission-relevant knobs)
+        matches an open one is the same tenant re-tracing — return it.
+        A changed spec is a re-admission: close and re-open (the new
+        shape/design may no longer fit the static share).
+        """
+        if axes is not None and tuple(axes) != self.axis_names:
+            raise ValueError(
+                f"transport axes {tuple(axes)!r} do not match this "
+                f"manager's switch ({self.axis_names!r})")
+        if tenant is None:
+            # anonymous sessions would silently collapse distinct jobs
+            # with the same wire image into one tenant — the manager
+            # would then model NO contention between them
+            raise ValueError(
+                "attaching to a shared switch needs a tenant name; pass "
+                "tenant=... (GradReducer auto-names via new_tenant())")
+        dtype_name = jnp.dtype(dtype).name
+        tenant = str(tenant)
+        existing = self._sessions.get(tenant)
+        spec = (mode, int(num_buckets), int(bucket_elems), dtype_name,
+                bool(reproducible), design, k)
+        if existing is not None:
+            if existing.spec == spec:
+                return existing
+            self.close(tenant)
+        return self.open(tenant, mode=mode, num_buckets=num_buckets,
+                         bucket_elems=bucket_elems, dtype=dtype,
+                         weight=weight, priority=priority,
+                         reproducible=reproducible, design=design, k=k)
+
+    def close(self, tenant: str) -> None:
+        self._sessions.pop(str(tenant), None)
+
+    def drain(self) -> tuple[str, ...]:
+        """Close every session (host-based fallback for all of them)."""
+        tenants = tuple(self._sessions)
+        self._sessions.clear()
+        return tenants
+
+    # -- partition / schedule / prediction ---------------------------------
+    def partition(self, queued: dict[str, int] | None = None,
+                  ) -> pt.Partition:
+        """The current cluster partition under the configured policy.
+
+        ``queued`` (tenant → backlog) feeds the greedy policy's
+        reclamation; ``None`` treats every session's full leaf ingress
+        as queued — the steady-state view.
+        """
+        if queued is None:
+            queued = {s.tenant: s.counters.levels[0].ingress_packets
+                      for s in self._sessions.values()}
+        return pt.make_partition(self.policy, self.weights(),
+                                 self.params.clusters,
+                                 max_sessions=self.max_sessions,
+                                 queued=queued)
+
+    def _loads(self, part: pt.Partition,
+               queued: dict[str, int] | None = None) -> list[sc.TenantLoad]:
+        return [sc.TenantLoad(tenant=s.tenant, counters=s.counters,
+                              clusters=part.clusters(s.tenant),
+                              priority=s.priority,
+                              queued=(None if queued is None
+                                      else queued.get(s.tenant, 0)))
+                for s in self._sessions.values()]
+
+    def schedule(self, queued: dict[str, int] | None = None,
+                 ) -> sc.SharedSchedule:
+        """Interleave + simulate the active sessions' leaf ingress.
+
+        With a ``queued`` backlog snapshot, both the partition (greedy
+        reclamation) and the simulated packet counts follow it — an
+        idle tenant gets 0 clusters *and* 0 scheduled packets, which is
+        exactly the work-conserving pairing.
+        """
+        return sc.simulate_shared(self._loads(self.partition(queued),
+                                              queued),
+                                  order=self.order, params=self.params)
+
+    def predicted(self) -> tuple[sm.TenantPoint, ...]:
+        """The analytic shared-switch mode at the current partition."""
+        part = self.partition()
+        packets = {s.tenant: s.counters.levels[0].ingress_packets
+                   for s in self._sessions.values()}
+        shares = sc.ingress_shares(packets, self.order)
+        allocs = [(s.tenant, part.clusters(s.tenant),
+                   sc.service_tau(s.counters, self.params),
+                   shares[s.tenant])
+                  for s in self._sessions.values()]
+        return sm.model_shared(allocs, self.params)
+
+    # -- contention → the functional data plane ----------------------------
+    def arrival_perms(self, tenant: str):
+        """Per-level arrival permutations for one tenant, or ``None``.
+
+        Alone on an idle switch there is nothing to contend with: packets
+        arrive in canonical child order (``None`` — the data plane's
+        unperturbed path), which is what makes the solo run the bitwise
+        reference.  Under contention every level gets a deterministic
+        per-packet-slot child permutation — seeded by (manager seed,
+        rebind epoch, the set of contending sessions, tenant, level), so
+        re-traces are stable but any change in the tenant mix re-rolls
+        the adversarial schedule.  Returned as ``(P, n) -> ndarray``
+        callables because the sparse plane's per-level packet counts are
+        only known level by level (``dataplane._apply_arrival``).
+        """
+        tenant = str(tenant)
+        if tenant not in self._sessions:
+            raise KeyError(f"no session {tenant!r}")
+        if len(self._sessions) < 2:
+            return None
+        mix = ",".join(
+            f"{s.tenant}:{s.counters.levels[0].ingress_packets}"
+            for s in sorted(self._sessions.values(), key=lambda s: s.tenant))
+        base = (self.seed, self._epoch, zlib.crc32(mix.encode()),
+                zlib.crc32(tenant.encode()))
+
+        def perm_for(level):
+            def f(p, n):
+                rng = np.random.default_rng(base + (level,))
+                return np.stack([rng.permutation(p) for _ in range(n)],
+                                axis=1)
+            return f
+
+        return [perm_for(lvl) for lvl in range(self.num_levels)]
+
+    # -- failure path ------------------------------------------------------
+    def rebind(self, tree: topology.ReductionTree,
+               ) -> tuple[tuple[str, ...], tuple[str, ...]]:
+        """Drain and re-admit every session on a rebuilt reduction tree.
+
+        The §4 failure path's runtime half: after
+        ``rebuild_excluding_switch`` the surviving switches carry larger
+        fan-ins, so every session's counters and memory demand are
+        recomputed and re-admitted in open order.  Returns
+        ``(readmitted, evicted)`` — evicted tenants no longer fit the
+        rebuilt switch and fall back to host-based collectives.
+        """
+        self.tree = tree
+        self._epoch += 1
+        old = list(self._sessions.values())
+        self._sessions.clear()
+        readmitted, evicted = [], []
+        for s in old:
+            try:
+                self.open(s.tenant, mode=s.mode, num_buckets=s.num_buckets,
+                          bucket_elems=s.bucket_elems, dtype=s.dtype,
+                          weight=s.weight, priority=s.priority,
+                          reproducible=s.reproducible, design=s.design,
+                          k=s.k)
+                readmitted.append(s.tenant)
+            except AdmissionError:
+                evicted.append(s.tenant)
+        return tuple(readmitted), tuple(evicted)
+
+    # -- reporting ---------------------------------------------------------
+    def report(self) -> str:
+        """Human-readable partition/schedule/prediction summary."""
+        if not self._sessions:
+            return "switch idle: no sessions"
+        part = self.partition()
+        sched = self.schedule()
+        pred = {p.tenant: p for p in self.predicted()}
+        lines = [f"switch: {self.params.clusters} clusters, "
+                 f"{len(self._sessions)}/{self.max_sessions} sessions, "
+                 f"policy={self.policy}, order={self.order}"]
+        for s in self._sessions.values():
+            c = sched.tenant(s.tenant)
+            p = pred[s.tenant]
+            lines.append(
+                f"  {s.tenant}: {s.mode} {s.num_buckets}x{s.bucket_elems} "
+                f"{s.dtype} | clusters={part.clusters(s.tenant)} "
+                f"demand={s.demand_bytes}B | pkts={c.packets} "
+                f"combines={c.combines} | measured={c.throughput_pkts:.4f} "
+                f"predicted={p.bandwidth_pkts:.4f} pkt/cy "
+                f"({p.bottleneck}-bound)")
+        return "\n".join(lines)

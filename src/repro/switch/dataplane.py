@@ -140,11 +140,18 @@ def _apply_arrival(stack: Any, headers: jax.Array,
 
     ``perm`` is ``(P,)`` (whole streams arrive out of order) or
     ``(P, n)`` (each packet slot sees its own interleaving — the fully
-    adversarial schedule).  Headers ride along so child-order handlers
-    can undo it.
+    adversarial schedule), or a **callable** ``(P, n) -> perm`` resolved
+    at trace time — how the multi-tenant runtime supplies contention-
+    derived permutations without knowing each level's packet count up
+    front (the sparse plane's list capacity, and hence ``n``, grows per
+    level).  Headers ride along so child-order handlers can undo it.
     """
     if perm is None:
         return stack, headers
+    if callable(perm):
+        perm = perm(int(headers.shape[0]), int(headers.shape[1]))
+        if perm is None:
+            return stack, headers
     order = jnp.asarray(np.asarray(perm), jnp.int32)
     if order.ndim == 1:
         order = jnp.broadcast_to(order[:, None],
@@ -384,9 +391,12 @@ def switch_allreduce_sparse(arena: jax.Array, axes: Sequence[str],
             # toward the root)
             dense_acc = _densify(idx, val32, b, s)
         if dense_acc is not None:
+            # child-steered dense sum: the fold order stays a pure
+            # function of child rank, so the sparse plane is bitwise
+            # arrival-invariant even after it densifies mid-tree
             dense_acc = _dense_level(dense_acc, lvl,
-                                     hd.get_handler("dense_sum"), "single", 1,
-                                     fmt, arrival)
+                                     hd.get_handler("dense_sum_steered"),
+                                     "single", 1, fmt, arrival)
             continue
         packed = _pack_lists(idx, val32)                   # (B, 2·cap) int32
         r = lax.axis_index(lvl.axis)
@@ -483,22 +493,19 @@ class SwitchCounters:
                                B=self.n_bufs, P=self.levels[0].fanin)
 
 
-def plan_counters(axis_names: Sequence[str], axis_sizes: Sequence[int],
-                  num_buckets: int, bucket_elems: int, dtype, *,
-                  fmt: pk.PacketFormat = DEFAULT_FORMAT,
-                  design: str = "auto",
-                  reproducible: bool = False) -> SwitchCounters:
-    """Static counters for the plane's schedule on a mesh (no tracing)."""
+def _counters(level_fanins: Sequence[tuple[str, int]], num_buckets: int,
+              bucket_elems: int, dtype, fmt: pk.PacketFormat,
+              design: str, reproducible: bool) -> SwitchCounters:
+    """Shared counter math for a sequence of (axis label, fan-in) levels."""
     n = fmt.payload_elems(dtype)
     npkt = fmt.packets_per_block(bucket_elems, dtype)
     blocks = num_buckets * npkt
     nbytes = bucket_elems * jnp.dtype(dtype).itemsize
     design, n_bufs = resolve_design(nbytes, design, reproducible)
     levels = []
-    for lvl in topology.mesh_levels(tuple(axis_names), tuple(axis_sizes)):
-        p = lvl.fanin
+    for axis, p in level_fanins:
         levels.append(LevelCounters(
-            axis=lvl.axis, fanin=p,
+            axis=axis, fanin=p,
             ingress_packets=blocks * p,
             egress_packets=blocks,
             combines=blocks * hd.combines_per_packet_slot(p, design),
@@ -506,3 +513,40 @@ def plan_counters(axis_names: Sequence[str], axis_sizes: Sequence[int],
     return SwitchCounters(levels=tuple(levels), blocks=blocks,
                           payload_elems=n, packet_bytes=fmt.mtu_bytes,
                           design=design, n_bufs=n_bufs)
+
+
+def plan_counters(axis_names: Sequence[str], axis_sizes: Sequence[int],
+                  num_buckets: int, bucket_elems: int, dtype, *,
+                  fmt: pk.PacketFormat = DEFAULT_FORMAT,
+                  design: str = "auto",
+                  reproducible: bool = False) -> SwitchCounters:
+    """Static counters for the plane's schedule on a mesh (no tracing)."""
+    fanins = [(lvl.axis, lvl.fanin) for lvl in
+              topology.mesh_levels(tuple(axis_names), tuple(axis_sizes))]
+    return _counters(fanins, num_buckets, bucket_elems, dtype, fmt,
+                     design, reproducible)
+
+
+def tree_counters(tree: topology.ReductionTree, num_buckets: int,
+                  bucket_elems: int, dtype, *,
+                  fmt: pk.PacketFormat = DEFAULT_FORMAT,
+                  design: str = "auto",
+                  reproducible: bool = False) -> SwitchCounters:
+    """Static counters for an arbitrary :class:`topology.ReductionTree`.
+
+    ``plan_counters`` reads fan-ins off the mesh axes; this variant reads
+    them off the tree itself — the multi-tenant runtime's path after a
+    switch failure, where ``rebuild_excluding_switch`` grows fan-ins past
+    the axis sizes and the rebuilt tree (not the mesh) is the source of
+    truth for admission and scheduling.  Per level the fan-in is the
+    *largest* child count at that level (the busiest switch bounds the
+    schedule); a single-host tree degenerates to one fan-in-1 level,
+    matching ``topology.mesh_levels``.
+    """
+    fanins = [(f"level{lvl}",
+               max(len(tree.nodes[i].children) for i in tree.levels[lvl]))
+              for lvl in range(1, len(tree.levels))]
+    if not fanins:
+        fanins = [("level1", 1)]
+    return _counters(fanins, num_buckets, bucket_elems, dtype, fmt,
+                     design, reproducible)

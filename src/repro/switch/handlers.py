@@ -127,6 +127,16 @@ def apply_order(leaf: jax.Array, order: jax.Array) -> jax.Array:
     return jnp.take_along_axis(leaf, jnp.broadcast_to(o, leaf.shape), axis=0)
 
 
+def child_order_opt(headers):
+    """Child-rank steering when headers ride along (``None`` in direct
+    handler-level tests, where the stack is already in child order).
+    With canonical (unpermuted) ingress the order is the identity, so
+    steering never changes single-job bits; under a multi-tenant
+    arrival interleave it lands every child's payload in the same fold
+    position — the fixed-tree property without the tree fold."""
+    return None if headers is None else child_order(headers)
+
+
 # ---------------------------------------------------------------------------
 # The handler registry.
 # ---------------------------------------------------------------------------
@@ -212,6 +222,18 @@ register(Handler(
     payload_handler=_dense_payload,
     completion_handler=_dense_completion))
 
+# child-steered variant: same §6.1–§6.3 folds, but the fold order is a
+# pure function of child rank instead of arrival order.  The sparse
+# plane's densified levels use it so the §7 path stays bitwise
+# arrival-invariant end to end even after densify-on-overflow (the
+# multi-tenant runtime's isolation anchor); plain ``dense_sum`` keeps
+# the paper's arrival-order single-buffer semantics.
+register(Handler(
+    name="dense_sum_steered", kind="dense",
+    header_handler=child_order_opt,
+    payload_handler=_dense_payload,
+    completion_handler=_dense_completion))
+
 
 # -- fixed tree (F3 reproducible) --------------------------------------------
 
@@ -254,9 +276,13 @@ def _int8_payload(stack, headers, design, n_bufs, ctx):
     return acc.reshape(q.shape[1:]), {}
 
 
+# child-rank steering makes the int8 plane's bits a pure function of
+# child rank — the fixed-tree property extended to the F1 transport,
+# which is what lets a multi-tenant interleave scramble packet arrivals
+# without perturbing any tenant's result.
 register(Handler(
     name="int8_dequant", kind="int8",
-    header_handler=lambda headers: None,
+    header_handler=child_order_opt,
     payload_handler=_int8_payload,
     completion_handler=lambda agg, ctx: agg))   # stays fp32; the data
 #                                 plane requantizes for the next wire hop

@@ -52,16 +52,21 @@ def _split_by_fsdp(tree: Any, dims: Any):
 
 
 def make_train_step(model, mesh_cfg: rules.MeshCfg, tcfg: TrainConfig,
-                    params_tree: Any):
+                    params_tree: Any, *, reduce_manager=None,
+                    tenant: str | None = None):
     """Build the (un-jitted) SPMD train-step body + its shard_map wrapper.
 
     ``params_tree`` may be arrays or ShapeDtypeStructs — only the tree
     structure and shapes are read (to derive the sharding rules).
+    ``reduce_manager``/``tenant`` attach this job's GradReducer to a
+    shared multi-tenant switch runtime (``runtime.SessionManager``,
+    ``transport="innetwork"``) so several training jobs in one process
+    aggregate concurrently on one emulated switch.
     """
     full_specs, manual_specs, dims = rules.param_specs(params_tree, mesh_cfg)
     gather = rules.make_gather(mesh_cfg, tcfg.gather_algorithm, params_tree,
                                compute_dtype=model.cfg.dtype)
-    reducer = GradReducer(tcfg.flare)
+    reducer = GradReducer(tcfg.flare, manager=reduce_manager, tenant=tenant)
     reduce_axes = mesh_cfg.reduce_axes
     data_world = mesh_cfg.data_world
 
@@ -134,11 +139,13 @@ def make_train_step(model, mesh_cfg: rules.MeshCfg, tcfg: TrainConfig,
 
 
 def jit_train_step(model, mesh, mesh_cfg: rules.MeshCfg, tcfg: TrainConfig,
-                   params_tree: Any, batch_tree: Any, donate: bool = True):
+                   params_tree: Any, batch_tree: Any, donate: bool = True,
+                   *, reduce_manager=None, tenant: str | None = None):
     """Fully-jitted train step with NamedShardings attached (for running
     and for the dry-run lower/compile)."""
     step_body, wrap, full_specs, manual_specs, init_opt = make_train_step(
-        model, mesh_cfg, tcfg, params_tree)
+        model, mesh_cfg, tcfg, params_tree, reduce_manager=reduce_manager,
+        tenant=tenant)
     smapped = wrap(batch_tree)
 
     ns = lambda spec: NamedSharding(mesh, spec)

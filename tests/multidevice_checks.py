@@ -6,11 +6,12 @@ Invoked by tests/test_collectives.py as::
         python tests/multidevice_checks.py <group>
 
 Groups: collectives | arena_pipeline | sparse_quant | fsdp_engine |
-        trainer | repro | transports | hierarchy | switch
+        trainer | repro | transports | hierarchy | switch | runtime |
+        sparse_densify
 Exits non-zero on any failure (assertion output on stderr).
 
-The ``hierarchy`` and ``switch`` groups are mesh-shape-parametric:
-``REPRO_MESH_SHAPE``
+The ``hierarchy``, ``switch``, ``runtime`` and ``sparse_densify``
+groups are mesh-shape-parametric: ``REPRO_MESH_SHAPE``
 (e.g. ``8`` or ``2x4``, the ``(pod, data)`` reduction axes) selects the
 topology, and the pytest wrapper runs it under both the flat and the
 two-level shape via the ``--mesh-shape`` conftest option.
@@ -687,6 +688,221 @@ def check_switch():
     print(f"switch OK ({pod}x{data})")
 
 
+def check_runtime():
+    """PR 5: the multi-tenant switch runtime (DESIGN.md §13).
+
+    Mesh-shape-parametric (``REPRO_MESH_SHAPE``): flat ``(1, 8)`` and
+    two-level ``(2, 4)`` topologies.  The acceptance scenario, on real
+    tensors: THREE heterogeneous tenants — dense f32 (reproducible
+    fixed-tree), int8, sparse — share one emulated switch under
+    adversarially permuted packet interleavings (the SessionManager's
+    contention-derived arrival schedules).  Verified:
+      * **bitwise isolation**: every tenant's result equals its solo run
+        on an idle switch bit for bit, across two adversarial epochs
+        (and the solo run with a manager equals the PR-4 single-job
+        plane bit for bit);
+      * engine end-to-end: two ``GradReducer`` tenants sharing one
+        manager each match their solo reduction bitwise;
+      * the shared-switch perfmodel's per-tenant throughput predictions
+        agree with the scheduler's measured counters within the
+        ``tests/test_switch.py`` tolerance, and per-tenant combine
+        counters conserve the single-tenant totals.
+    """
+    from repro.runtime import SessionManager
+    from repro.runtime import scheduler as rt_sched
+
+    pod, data = _mesh_shape()
+    mesh = launch_mesh.make_fake_mesh((pod, data))
+    world = pod * data
+    rng = np.random.default_rng(51)
+
+    def run(fn, xs):
+        g = jax.jit(compat.shard_map(
+            fn, in_specs=(P(("pod", "data"), None),), out_specs=P(None),
+            axis_names={"pod", "data"}, check_vma=False))
+        with compat.set_mesh(mesh):
+            x = jax.device_put(xs, NamedSharding(mesh,
+                                                 P(("pod", "data"), None)))
+            return np.asarray(g(x))
+
+    shapes = {"dense": (2, 96), "int8": (1, 512), "sparse": (2, 192)}
+    cfgs = {
+        "dense": FlareConfig(axes=("pod", "data"), transport="innetwork",
+                             reproducible=True),
+        "int8": FlareConfig(axes=("pod", "data"), transport="innetwork",
+                            compression="int8"),
+        "sparse": FlareConfig(axes=("pod", "data"), transport="innetwork",
+                              sparse_k_frac=0.1),
+    }
+    xs = {n: jnp.asarray((rng.normal(size=(world, b * s)) * 1e2)
+                         .astype(np.float32))
+          for n, (b, s) in shapes.items()}
+
+    def tfn(name, mgr):
+        b, s = shapes[name]
+
+        def fn(x):
+            t = transports.from_config(cfgs[name], jnp.float32,
+                                       manager=mgr, tenant=name)
+            arena = x[0].reshape(b, s)
+            ef = jnp.zeros_like(arena) if t.needs_state else None
+            red, _ = t(arena, ef, jnp.zeros((b,), jnp.int32), (s,) * b)
+            return red
+        return fn
+
+    # solo runs: one session on an idle switch == the PR-4 plane, bitwise
+    solo = {}
+    for name in shapes:
+        solo_mgr = SessionManager(("pod", "data"), (pod, data), seed=7)
+        solo[name] = run(tfn(name, solo_mgr), xs[name])
+        plain = run(tfn(name, None), xs[name])
+        assert solo[name].tobytes() == plain.tobytes(), \
+            f"{name}: solo manager run != managerless plane"
+
+    # shared runs: all three tenants admitted, two adversarial epochs
+    for seed in (7, 8):
+        mgr = SessionManager(("pod", "data"), (pod, data), seed=seed)
+        for name, (b, s) in shapes.items():
+            mgr.open(name, mode=name, num_buckets=b, bucket_elems=s,
+                     dtype=jnp.float32, reproducible=(name == "dense"))
+        for name in shapes:
+            assert mgr.arrival_perms(name) is not None, "no contention?"
+            got = run(tfn(name, mgr), xs[name])
+            assert got.tobytes() == solo[name].tobytes(), \
+                f"{name}: shared switch changed bits (seed {seed})"
+
+    # engine end-to-end: two GradReducer tenants sharing one manager
+    Z = 192
+    xs_e = jnp.asarray(rng.normal(size=(world, Z)).astype(np.float32))
+    expect = np.asarray(xs_e).sum(0)
+
+    def eng(x, kw, mgr=None, tenant=None):
+        g = {"a": x[0][:100], "b": x[0][100:164].reshape(8, 8),
+             "c": x[0][164:]}
+        r = GradReducer(FlareConfig(axes=("pod", "data"), bucket_bytes=256,
+                                    transport="innetwork", **kw),
+                        manager=mgr, tenant=tenant)
+        red, _ = r(g, r.init_state(g))
+        return jnp.concatenate([red["a"], red["b"].reshape(-1), red["c"]])
+
+    solo_a = run(lambda x: eng(x, dict(reproducible=True)), xs_e)
+    solo_b = run(lambda x: eng(x, dict(sparse_k_frac=0.5)), xs_e)
+    mgr = SessionManager(("pod", "data"), (pod, data), seed=9,
+                         max_sessions=8)
+
+    def both(x):
+        a = eng(x, dict(reproducible=True), mgr=mgr, tenant="jobA")
+        b = eng(x, dict(sparse_k_frac=0.5), mgr=mgr, tenant="jobB")
+        return jnp.stack([a, b])
+
+    ab = run(both, xs_e)
+    assert len(mgr.active()) == 2, [s.tenant for s in mgr.active()]
+    assert ab[0].tobytes() == solo_a.tobytes(), "engine tenant A bits"
+    assert ab[1].tobytes() == solo_b.tobytes(), "engine tenant B bits"
+    assert np.allclose(ab[0], expect, atol=1e-4)
+
+    # shared-switch model ↔ scheduler cross-check at a saturated operating
+    # point (big sessions), same tolerance style as test_switch.py
+    big = SessionManager(("pod", "data"), (pod, data))
+    for name in shapes:
+        big.open(name, mode=name, num_buckets=8,
+                 bucket_elems=1 << 15, dtype=jnp.float32, k=2048,
+                 reproducible=(name == "dense"))
+    sched = big.schedule()
+    pred = {p.tenant: p for p in big.predicted()}
+    for c in sched.counters:
+        p = pred[c.tenant]
+        assert 0.5 * p.bandwidth_pkts < c.throughput_pkts \
+            < 1.8 * p.bandwidth_pkts, \
+            (c.tenant, c.throughput_pkts, p.bandwidth_pkts)
+    # conservation: shared combine counters == solo totals
+    for s in big.active():
+        solo_c = rt_sched.simulate_shared(
+            [rt_sched.TenantLoad(s.tenant, s.counters,
+                                 big.params.clusters)]).tenant(s.tenant)
+        assert sched.tenant(s.tenant).combines == solo_c.combines
+    print(f"runtime OK ({pod}x{data})")
+
+
+def check_sparse_densify():
+    """Direct test of the §7 densify-on-overflow path in the data plane.
+
+    PR 4 only exercised densification incidentally; here a tiny list
+    budget forces the overflow deliberately, at both crossover points,
+    and asserts **bitwise** equality against the dense handler on the
+    same lists — densification moves the accumulate into array storage,
+    it must never change the bits:
+      * densify-at-leaf (any shape): the threshold trips before level 0,
+        so the whole plane is the dense one on locally-scattered top-k
+        lists (``mine``);
+      * densify-mid-tree (two-level shape): the leaf level merges
+        coordinate lists, the *pod* level overflows — the plane must
+        equal leaf-sparse ∘ pod-dense composed by hand.
+    """
+    pod, data = _mesh_shape()
+    mesh = launch_mesh.make_fake_mesh((pod, data))
+    world = pod * data
+    rng = np.random.default_rng(61)
+    from repro.switch import dataplane
+
+    B, S, k = 2, 64, 8
+    xs = jnp.asarray((rng.normal(size=(world, B * S)) * 1e2)
+                     .astype(np.float32))
+
+    def run(fn):
+        g = jax.jit(compat.shard_map(
+            fn, in_specs=(P(("pod", "data"), None),), out_specs=P(None),
+            axis_names={"pod", "data"}, check_vma=False))
+        with compat.set_mesh(mesh):
+            x = jax.device_put(xs, NamedSharding(mesh,
+                                                 P(("pod", "data"), None)))
+            return np.asarray(g(x))
+
+    # (a) densify-at-leaf: threshold trips before the first hop, so the
+    # sparse plane must equal the dense plane run on each rank's locally
+    # scattered top-k list (the `mine` return), bit for bit
+    red = run(lambda x: dataplane.switch_allreduce_sparse(
+        x[0].reshape(B, S), ("pod", "data"), ks=k,
+        density_threshold=0.01)[0])
+
+    def dense_on_mine(x):
+        _, mine = dataplane.switch_allreduce_sparse(
+            x[0].reshape(B, S), ("pod", "data"), ks=k,
+            density_threshold=0.01)
+        return dataplane.switch_allreduce_dense(
+            mine.astype(jnp.float32), ("pod", "data"), design="single")
+
+    want = run(dense_on_mine)
+    assert red.tobytes() == want.tobytes(), \
+        "densify-at-leaf != dense plane on scattered lists"
+
+    # (b) densify-mid-tree (two-level shapes only): k·data stays under
+    # the list budget at the leaf, k·data·pod overflows at the pod level
+    if pod > 1:
+        thr = (k * data + 1) / S            # leaf fits, pod level doesn't
+        assert not sparse.densify_step(k * data, S, thr)
+        assert sparse.densify_step(k * data * pod, S, thr)
+
+        full = run(lambda x: dataplane.switch_allreduce_sparse(
+            x[0].reshape(B, S), ("pod", "data"), ks=k,
+            density_threshold=thr)[0])
+
+        def composed(x):
+            # leaf level sparse (never overflows over data alone), then
+            # the dense plane across pods — what mid-tree densification
+            # must be equivalent to, bit for bit
+            leaf, _ = dataplane.switch_allreduce_sparse(
+                x[0].reshape(B, S), ("data",), ks=k,
+                density_threshold=10.0)
+            return dataplane.switch_allreduce_dense(
+                leaf.astype(jnp.float32), ("pod",), design="single")
+
+        want = run(composed)
+        assert full.tobytes() == want.tobytes(), \
+            "mid-tree densify != leaf-sparse ∘ pod-dense composition"
+    print(f"sparse_densify OK ({pod}x{data})")
+
+
 GROUPS = {
     "collectives": check_collectives,
     "arena_pipeline": check_arena_pipeline,
@@ -697,6 +913,8 @@ GROUPS = {
     "repro": check_repro,
     "hierarchy": check_hierarchy,
     "switch": check_switch,
+    "runtime": check_runtime,
+    "sparse_densify": check_sparse_densify,
 }
 
 if __name__ == "__main__":

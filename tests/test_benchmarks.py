@@ -40,6 +40,10 @@ def test_run_quick_smoke():
             assert f"quick.switch.{transport}.{mode}.us_per_call" in names, \
                 names
         assert f"quick.switch.{transport}.overhead_x" in names, names
+    # PR 5: the multi-tenant runtime's contention rows
+    for n in (1, 2, 4):
+        assert f"quick.runtime.tenants{n}.us_per_call" in names, names
+    assert "quick.runtime.contention_x" in names, names
     # wall-clock values are positive microseconds
     for l in rows:
         assert float(l.split(",")[1]) > 0, l

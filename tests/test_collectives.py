@@ -47,3 +47,12 @@ def test_multidevice_switch(mesh_shape):
     counter cross-check — under both mesh shapes."""
     out = _run_group("switch", mesh_shape=mesh_shape)
     assert "OK" in out
+
+
+def test_multidevice_runtime(mesh_shape):
+    """The multi-tenant switch runtime (PR 5): three heterogeneous
+    tenants share one emulated switch under adversarial packet
+    interleavings, each bitwise-equal to its solo run; shared-switch
+    model ↔ scheduler cross-check — under both mesh shapes."""
+    out = _run_group("runtime", mesh_shape=mesh_shape)
+    assert "OK" in out

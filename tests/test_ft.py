@@ -108,3 +108,95 @@ def test_straggler_report():
     times[6] = 5.0
     assert straggler_report(times) == [6]
     assert straggler_report({}) == []
+
+
+# ---------------------------------------------------------------------------
+# Switch failure → network-manager reroute → runtime drain/re-admit (§4).
+# ---------------------------------------------------------------------------
+
+def _switch_runtime():
+    from repro.runtime import SessionManager
+    mgr = SessionManager(("pod", "data"), (2, 4), max_sessions=4)
+    mgr.open("a", mode="dense", num_buckets=2, bucket_elems=256,
+             dtype=jnp.float32, reproducible=True)
+    mgr.open("b", mode="int8", num_buckets=1, bucket_elems=512,
+             dtype=jnp.float32)
+    return mgr
+
+
+def test_switch_failure_rebuilds_tree_and_readmits_sessions():
+    """A failed leaf switch routes through handle_switch_failure /
+    rebuild_excluding_switch: same hosts, grown fan-in — and the runtime
+    re-admits every session with counters recomputed on the new tree."""
+    from repro.core import topology
+    from repro.ft.coordinator import Coordinator
+
+    nm = topology.NetworkManager()
+    lease = nm.request(8, radix=2)
+    mgr = _switch_runtime()
+    old_fanin = mgr.session("a").counters.levels[0].fanin
+    old_epoch = mgr._epoch
+
+    coord = Coordinator(8, network=nm)
+    failed = lease.tree.levels[1][0]          # a leaf switch
+    new = coord.switch_failure(lease, failed, runtime=mgr)
+
+    assert new is not None and new.allreduce_id == lease.allreduce_id
+    assert new.tree.num_hosts == lease.tree.num_hosts     # hosts survive
+    assert new.tree.radix > lease.tree.radix              # fan-in grew
+    assert coord.failed_switches == {failed}
+    assert nm.active() == [new]
+    # runtime drained and re-admitted on the rebuilt tree
+    assert {s.tenant for s in mgr.active()} == {"a", "b"}
+    assert mgr.tree is new.tree
+    assert mgr._epoch == old_epoch + 1        # fresh arrival schedules
+    assert mgr.session("a").counters.levels[0].fanin == new.tree.radix
+    assert mgr.session("a").counters.levels[0].fanin != old_fanin
+
+
+def test_switch_failure_without_sibling_drains_to_host_fallback():
+    """A root switch with no sibling cannot be rerouted: the lease is
+    released and every runtime session drains (host-based fallback)."""
+    from repro.core import topology
+    from repro.ft.coordinator import recover_switch_failure
+
+    nm = topology.NetworkManager()
+    lease = nm.request(4, radix=4)            # hosts + single root switch
+    mgr = _switch_runtime()
+    root = lease.tree.root.node_id
+    out = recover_switch_failure(nm, lease, root, runtime=mgr)
+    assert out is None
+    assert nm.active() == []                  # lease released
+    assert mgr.active() == ()                 # sessions drained
+
+
+def test_switch_failure_evicts_sessions_that_no_longer_fit():
+    """Re-admission on the rebuilt tree is real admission: a session
+    whose aggregation-buffer demand grows past the static share on the
+    fatter-fan-in tree is evicted, the others survive."""
+    from repro.core import topology
+    from repro.perfmodel import switch_model as sm
+    from repro.runtime import SessionManager
+
+    # tiny switch: the memory share is tight enough that the rebuilt
+    # tree's grown fan-in (radix 2 → 3, M = (P-1)/log2 P per block)
+    # pushes the big session just past its static share
+    params = sm.SwitchParams(clusters=4, l1_bytes_per_cluster=40 << 10)
+    nm = topology.NetworkManager(l1_bytes_per_cluster=40 << 10, clusters=4)
+    lease = nm.request(8, radix=2)
+
+    mgr = SessionManager(("data",), (8,), params=params, max_sessions=2)
+    mgr.rebind(lease.tree)                    # runtime rides the lease
+    mgr.open("small", mode="dense", num_buckets=1, bucket_elems=256,
+             dtype=jnp.float32, reproducible=True)
+    big = mgr.open("big", mode="dense", num_buckets=8, bucket_elems=2048,
+                   dtype=jnp.float32, reproducible=True)
+    assert big.demand_bytes <= mgr.bytes_per_session
+
+    failed = lease.tree.levels[1][0]
+    new = nm.handle_switch_failure(lease, failed)
+    assert new is not None
+    readmitted, evicted = mgr.rebind(new.tree)
+    assert readmitted == ("small",)
+    assert evicted == ("big",)
+    assert {s.tenant for s in mgr.active()} == {"small"}

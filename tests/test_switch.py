@@ -283,6 +283,33 @@ def test_des_simulator_uses_shared_spill_formula():
     assert r.extra_traffic_bytes == int(per_block) * r.blocks_completed
 
 
+def test_sparse_densify_on_overflow_bitwise(mesh_shape):
+    """Direct unit test of the §7 densify-on-overflow path in
+    ``switch/dataplane.py`` (PR 4 exercised it only incidentally): a
+    tiny list budget forces overflow at the leaf and — on the two-level
+    shape — mid-tree, and the result must be **bitwise equal** to the
+    dense handler run on the same (host- or leaf-merged) lists.  Runs
+    under 8 fake devices in a subprocess (same pattern as the
+    multidevice groups) for both ``--mesh-shape`` topologies."""
+    import os
+    import subprocess
+    import sys
+
+    script = os.path.join(os.path.dirname(__file__),
+                          "multidevice_checks.py")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    env["REPRO_MESH_SHAPE"] = mesh_shape
+    r = subprocess.run([sys.executable, script, "sparse_densify"],
+                       capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, \
+        f"sparse_densify failed:\n{r.stdout}\n{r.stderr}"
+    assert "OK" in r.stdout
+
+
 def test_single_buffer_fold_is_order_sensitive_but_tree_is_not():
     """Sanity for the reproducibility story: the contended single buffer
     (§6.1) folds in arrival order — permuting arrivals may change bits —
