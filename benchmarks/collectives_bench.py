@@ -48,7 +48,7 @@ Z = 1 << 22
 x = jnp.ones((8, Z), jnp.float32)
 with compat.set_mesh(mesh):
     xd = jax.device_put(x, NamedSharding(mesh, P(("pod", "data"), None)))
-    for alg in ["ring", "ring_pipelined", "rhd", "fixed_tree", "two_level",
+    for alg in ["ring", "rhd", "fixed_tree", "two_level",
                 "psum"]:
         fn = jax.jit(compat.shard_map(
             lambda v, a=alg: coll.allreduce(v[0], ("pod", "data"),
@@ -241,6 +241,42 @@ with compat.set_mesh(mesh8):
               f"{ts[nten]*1e6:.0f},8dev_cpu_B{B}xS{S}_dense_tenant")
     print(f"transports.runtime.contention_x,"
           f"{ts[4]/ts[1]:.2f},tenants4/tenants1")
+
+# --- lossy-fabric reliability layer (PR 6) ---------------------------------
+# dense in-network with no plan / armed-but-fault-free plan / surviving
+# 1% drop plan.  The tracked number is the fault-free overhead factor of
+# the checksum + seen-bitmap + NACK-retransmit machinery over the PR 5
+# switch baseline (acceptance: < 1.2x), plus the lossy run's wall clock
+# with deterministic in-switch retries and the plan's static retry rate.
+from repro.switch import dataplane as sw_dp
+from repro.switch.packets import FaultPlan
+B, S = 4, 1 << 14
+arena = jnp.asarray(rng.normal(size=(B, S)).astype(np.float32))
+exts = (S,) * B
+with compat.set_mesh(mesh8):
+    ad = jax.device_put(arena, NamedSharding(mesh8, P()))
+    ts = {}
+    for name, plan in [("baseline", None),
+                       ("reliable", FaultPlan()),
+                       ("lossy", FaultPlan(seed=1, drop=0.01))]:
+        cfg = FlareConfig(axes=("data",), transport="innetwork",
+                          fault_plan=plan)
+        t = transports.from_config(cfg, jnp.float32, batched=True)
+        fn = jax.jit(compat.shard_map(
+            lambda a, t=t: t(a, jnp.zeros_like(a),
+                             jnp.zeros((B,), jnp.int32), exts)[0],
+            in_specs=(P(),), out_specs=P(), axis_names={"data"},
+            check_vma=False))
+        ts[name] = timeit(fn, ad, iters=3)
+        print(f"transports.chaos.{name}.us_per_call,"
+              f"{ts[name]*1e6:.0f},8dev_cpu_B{B}xS{S}")
+    print(f"transports.chaos.overhead_x,"
+          f"{ts['reliable']/ts['baseline']:.2f},reliable/baseline_fault_free")
+    counts = sw_dp.level_packet_counts([8], B, S, jnp.float32, mode="dense")
+    sched = sw_dp.fault_schedules(FaultPlan(seed=1, drop=0.01), counts)[0]
+    print(f"transports.chaos.retry_rate,"
+          f"{sched.retransmits/counts[0][1]:.4f},"
+          f"retrans{sched.retransmits}_of_{counts[0][1]}pkts_drop1pct")
 """
 
 # tiny-shape variant for `run.py --quick` / the tier-1 smoke test: all
@@ -370,13 +406,47 @@ with compat.set_mesh(mesh8):
         print(f"quick.runtime.tenants{nten}.us_per_call,"
               f"{ts[nten]*1e6:.0f},8dev_cpu_B{B}xS{S}_dense_tenant")
     print(f"quick.runtime.contention_x,{ts[4]/ts[1]:.2f},tenants4/tenants1")
+
+# lossy-fabric reliability layer (PR 6, DESIGN.md §14): dense in-network
+# with (a) no fault plan — the PR 5 baseline; (b) an armed all-zero
+# FaultPlan — checksum verify + seen-bitmap admission + retransmit
+# machinery active but fault-free (the tracked overhead factor); (c) a
+# surviving 1% drop plan — NACK-driven retries resolve in-switch and the
+# result stays bitwise (multidevice group `chaos`).  retry_rate is read
+# off the plan's deterministic static schedule — the same counters the
+# traced plane accumulates (they are asserted equal in tests).
+from repro.switch import dataplane as sw_dp
+from repro.switch.packets import FaultPlan
+with compat.set_mesh(mesh8):
+    ad = jax.device_put(arena, NamedSharding(mesh8, P()))
+    ts = {}
+    for name, plan in [("baseline", None),
+                       ("reliable", FaultPlan()),
+                       ("lossy", FaultPlan(seed=1, drop=0.01))]:
+        cfg = FlareConfig(axes=("data",), transport="innetwork",
+                          fault_plan=plan)
+        t = transports.from_config(cfg, jnp.float32, batched=True)
+        fn = jax.jit(compat.shard_map(
+            lambda a, t=t: t(a, jnp.zeros_like(a),
+                             jnp.zeros((B,), jnp.int32), exts)[0],
+            in_specs=(P(),), out_specs=P(), axis_names={"data"},
+            check_vma=False))
+        ts[name] = timeit(fn, ad)
+        print(f"quick.chaos.{name}.us_per_call,{ts[name]*1e6:.0f},"
+              f"8dev_cpu_B{B}xS{S}")
+    print(f"quick.chaos.overhead_x,{ts['reliable']/ts['baseline']:.2f},"
+          f"reliable/baseline_fault_free")
+    counts = sw_dp.level_packet_counts([8], B, S, jnp.float32, mode="dense")
+    sched = sw_dp.fault_schedules(FaultPlan(seed=1, drop=0.01), counts)[0]
+    print(f"quick.chaos.retry_rate,{sched.retransmits/counts[0][1]:.4f},"
+          f"retrans{sched.retransmits}_of_{counts[0][1]}pkts_drop1pct")
 """
 
 
 def run(write_json: bool = True):
     rows = []
     z = 16 << 20
-    for alg in ["ring", "ring_pipelined", "rhd", "fixed_tree", "two_level",
+    for alg in ["ring", "rhd", "fixed_tree", "two_level",
                 "psum"]:
         wb = coll.wire_bytes_per_rank(z, 16, 2, algorithm=alg)
         rows.append((f"collectives.{alg}.wire_bytes_per_rank.Z16MiB",
@@ -420,7 +490,10 @@ QUICK_EXPECTED_ROWS = frozenset(
        for t in ("dense", "sparse", "int8") for m in ("flat", "innetwork")]
     + [f"quick.switch.{t}.overhead_x" for t in ("dense", "sparse", "int8")]
     + [f"quick.runtime.tenants{n}.us_per_call" for n in (1, 2, 4)]
-    + ["quick.runtime.contention_x"])
+    + ["quick.runtime.contention_x"]
+    + [f"quick.chaos.{n}.us_per_call"
+       for n in ("baseline", "reliable", "lossy")]
+    + ["quick.chaos.overhead_x", "quick.chaos.retry_rate"])
 
 
 def run_quick():

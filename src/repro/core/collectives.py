@@ -154,78 +154,21 @@ def allreduce_ring(x: jax.Array, axis: str, *, op: Op = jnp.add,
 
 
 # ---------------------------------------------------------------------------
-# Pipelined ring — fused reduce-scatter/all-gather waves (§6.2, §5).
+# Pipelined ring — B blocks in flight via the batched arena schedule (§6.2).
 # ---------------------------------------------------------------------------
 #
 # The paper's multi-buffer aggregation keeps B reduction blocks in flight:
 # while block b's reduced chunks travel back down (all-gather), block b+1's
-# chunks are still being combined on the way up (reduce-scatter).  Two
-# realizations here:
-#   * ``allreduce_ring_pipelined`` — the double-buffer (B=2) form for one
-#     vector: the middle wave carries one all-gather chunk and one
-#     reduce-scatter chunk per ppermute (the _fused_wave helper).  It is
-#     bitwise-equal to ``allreduce_ring`` because each element keeps its
-#     ring-chunk index (the two buffers are the front/back halves of
-#     every chunk).
-#   * ``ring_allreduce_bucketed`` — B arbitrary blocks at once via the
-#     vmapped ring: every round batches all B blocks' chunks into ONE
-#     ppermute, 2(P-1) collective rounds total instead of the 2B(P-1) a
-#     per-bucket loop costs.
-
-
-def _rs_wave(src: jax.Array, axis: str, perm, r, p: int, stagger, op: Op
-             ) -> jax.Array:
-    """Plain reduce-scatter of one (p, chunk) block: p-1 rounds."""
-    acc0 = jnp.take(src, (r + stagger) % p, axis=0)
-
-    def body(s, acc):
-        recv = lax.ppermute(acc, axis, perm)
-        mine = jnp.take(src, (r - s - 1 + stagger) % p, axis=0)
-        return op(mine, recv)
-
-    return lax.fori_loop(0, p - 1, body, acc0)
-
-
-def _ag_seed(acc: jax.Array, r, p: int, stagger) -> jax.Array:
-    out = jnp.zeros((p,) + acc.shape, acc.dtype)
-    return lax.dynamic_update_index_in_dim(out, acc, (r + 1 + stagger) % p, 0)
-
-
-def _ag_wave(acc: jax.Array, axis: str, perm, r, p: int, stagger
-             ) -> jax.Array:
-    """Plain all-gather of one reduced chunk: p-1 rounds, returns (p, chunk)."""
-    out0 = _ag_seed(acc, r, p, stagger)
-
-    def body(s, carry):
-        out, send = carry
-        recv = lax.ppermute(send, axis, perm)
-        out = lax.dynamic_update_index_in_dim(out, recv,
-                                              (r - s + stagger) % p, 0)
-        return out, recv
-
-    out, _ = lax.fori_loop(0, p - 1, body, (out0, acc))
-    return out
-
-
-def _fused_wave(prev_acc: jax.Array, prev_stagger, src: jax.Array,
-                axis: str, perm, r, p: int, stagger, op: Op
-                ) -> tuple[jax.Array, jax.Array]:
-    """All-gather of the previous block fused with reduce-scatter of the
-    next: each of the p-1 rounds moves both chunks in ONE ppermute."""
-    out_prev0 = _ag_seed(prev_acc, r, p, prev_stagger)
-    acc0 = jnp.take(src, (r + stagger) % p, axis=0)
-
-    def body(s, carry):
-        out_prev, send_prev, acc = carry
-        recv = lax.ppermute(jnp.stack([send_prev, acc]), axis, perm)
-        out_prev = lax.dynamic_update_index_in_dim(
-            out_prev, recv[0], (r - s + prev_stagger) % p, 0)
-        mine = jnp.take(src, (r - s - 1 + stagger) % p, axis=0)
-        return out_prev, recv[0], op(mine, recv[1])
-
-    out_prev, _, acc = lax.fori_loop(0, p - 1, body,
-                                     (out_prev0, prev_acc, acc0))
-    return out_prev, acc
+# chunks are still being combined on the way up (reduce-scatter).  Our
+# realization is ``ring_allreduce_bucketed`` — B arbitrary blocks at once
+# via the vmapped ring: every round batches all B blocks' chunks into ONE
+# ppermute, 2(P-1) collective rounds total instead of the 2B(P-1) a
+# per-bucket loop costs.  (A single-vector double-buffer form with fused
+# all-gather/reduce-scatter waves — ``allreduce_ring_pipelined`` — was
+# retired: its fused sends measured *slower* than the plain ring it
+# pipelined, 462ms vs 281ms at 16 MiB, because a fori_loop stacking two
+# chunks per ppermute serializes exactly like two rings on the emulated
+# fabric; the arena schedule is the form that actually overlaps.)
 
 
 def ring_allreduce_bucketed(arena: jax.Array, axis: str, *, op: Op = jnp.add,
@@ -254,35 +197,6 @@ def ring_allreduce_bucketed(arena: jax.Array, axis: str, *, op: Op = jnp.add,
     return jax.vmap(
         lambda v, s: allreduce_ring(v, axis, op=op, stagger=s)
     )(arena, staggers)
-
-
-def allreduce_ring_pipelined(x: jax.Array, axis: str, *, op: Op = jnp.add,
-                             stagger: int = 0) -> jax.Array:
-    """Double-buffered ring allreduce of one flat vector (§6.2).
-
-    The vector's P ring chunks are each split front/back into two
-    in-flight buffers; the middle wave interleaves the all-gather of
-    buffer 0 with the reduce-scatter of buffer 1 in fused sends.  Every
-    element keeps its ``allreduce_ring`` chunk index and combine chain, so
-    for sizes divisible by 2P the result is bitwise-identical to
-    ``allreduce_ring`` (and numerically equal otherwise).
-    """
-    p = _axis_size(axis)
-    if p == 1:
-        return x
-    xp, n = pad_to_multiple(x, 2 * p)
-    m = xp.shape[0] // (2 * p)
-    halves = xp.reshape(p, 2, m)
-    front, back = halves[:, 0, :], halves[:, 1, :]
-    r = lax.axis_index(axis)
-    perm = _ring_perm(p)
-
-    acc_f = _rs_wave(front, axis, perm, r, p, stagger, op)
-    out_f, acc_b = _fused_wave(acc_f, stagger, back, axis, perm, r, p,
-                               stagger, op)
-    out_b = _ag_wave(acc_b, axis, perm, r, p, stagger)
-    full = jnp.stack([out_f, out_b], axis=1).reshape(2 * p * m)
-    return full[:n]
 
 
 # ---------------------------------------------------------------------------
@@ -589,8 +503,6 @@ def allreduce(x: jax.Array, axes: tuple[str, ...], *, algorithm: str = "auto",
         inner = axes[0]
         if algorithm == "ring":
             return allreduce_ring(x, inner, op=op, stagger=stagger)
-        if algorithm == "ring_pipelined":
-            return allreduce_ring_pipelined(x, inner, op=op, stagger=stagger)
         if algorithm == "rhd":
             return allreduce_rhd(x, inner, op=op)
         if algorithm == "fixed_tree":
@@ -615,9 +527,6 @@ def allreduce(x: jax.Array, axes: tuple[str, ...], *, algorithm: str = "auto",
     if algorithm == "ring":
         x = allreduce_ring(x, inner, op=op, stagger=stagger)
         return allreduce_ring(x, outer, op=op, stagger=stagger)
-    if algorithm == "ring_pipelined":
-        x = allreduce_ring_pipelined(x, inner, op=op, stagger=stagger)
-        return allreduce_ring_pipelined(x, outer, op=op, stagger=stagger)
     if algorithm == "rhd":
         x = allreduce_rhd(x, inner, op=op)
         return allreduce_rhd(x, outer, op=op)
@@ -641,7 +550,7 @@ def reduce_scatter(x: jax.Array, axes: tuple[str, ...], *,
     p = _axis_size(inner)
     if x.shape[0] % p:
         raise ValueError(f"reduce_scatter: len {x.shape[0]} % {p} != 0")
-    if algorithm in ("ring", "ring_pipelined"):
+    if algorithm == "ring":
         seg = ring_reduce_scatter(x, inner, op=op,
                                   stagger=-1 if ordered else stagger)
     elif algorithm == "rhd" or algorithm == "fixed_tree":
@@ -663,7 +572,7 @@ def all_gather(seg: jax.Array, axes: tuple[str, ...], *,
                ordered: bool = False) -> jax.Array:
     """All-gather over the innermost axis (inverse of ``reduce_scatter``)."""
     *_, inner = axes
-    if algorithm in ("ring", "ring_pipelined"):
+    if algorithm == "ring":
         return ring_all_gather(seg, inner,
                                stagger=-1 if ordered else stagger)
     if algorithm in ("rhd", "fixed_tree"):
@@ -683,8 +592,7 @@ def wire_bytes_per_rank(nbytes: int, p_inner: int, p_outer: int = 1, *,
                         algorithm: str) -> float:
     """Bytes each rank puts on the wire for a Z-byte allreduce."""
     z = float(nbytes)
-    if algorithm in ("ring", "ring_pipelined"):
-        # the pipelined ring reorders rounds but moves identical bytes
+    if algorithm == "ring":
         return 2 * z * (p_inner - 1) / p_inner * (1 if p_outer == 1 else 2)
     if algorithm == "rhd":
         return 2 * z * (p_inner - 1) / p_inner

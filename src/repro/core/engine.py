@@ -53,9 +53,8 @@ class FlareConfig:
     """Configuration of the in-network-style gradient reduction."""
 
     axes: tuple[str, ...] = ("data",)   # (outer..., inner); inner = leaf level
-    algorithm: str = "auto"             # auto|ring|ring_pipelined|rhd|
-    #                                     fixed_tree|two_level|hierarchical|
-    #                                     psum
+    algorithm: str = "auto"             # auto|ring|rhd|fixed_tree|
+    #                                     two_level|hierarchical|psum
     reproducible: bool = False          # F3: bitwise-deterministic reduction
     compression: str = "none"           # none|int8  (F1 transport dtypes)
     sparse_k_frac: float = 0.0          # >0 → §7 sparse allreduce
@@ -74,10 +73,18 @@ class FlareConfig:
     #: mesh tree with packet handlers (dense / int8 / sparse picked by
     #: the same compression/sparse_k_frac fields).
     transport: str = "auto"
+    #: deterministic lossy-fabric injection for the in-network transport
+    #: (``switch.packets.FaultPlan``, DESIGN.md §14).  The reliability
+    #: layer recovers surviving plans bitwise; a plan the retry budget
+    #: cannot recover degrades the session to the wire transport.
+    fault_plan: Any = None
 
     def __post_init__(self):
         if self.transport not in ("auto", "innetwork"):
             raise ValueError(f"unknown transport {self.transport!r}")
+        if self.fault_plan is not None and self.transport != "innetwork":
+            raise ValueError("fault_plan models the lossy switch fabric; "
+                             "it needs transport='innetwork'")
         if self.transport == "innetwork":
             if self.algorithm != "auto":
                 raise ValueError(

@@ -36,13 +36,7 @@ def gather_params(shard: jax.Array, axes: tuple[str, ...],
 
 
 def _alg(algorithm: str) -> str:
-    """Map the engine-level algorithm names onto the gather/scatter pair.
-
-    ``ring_pipelined`` passes through: matched reduce-scatter/all-gather
-    halves are exactly the two phases the pipelined ring fuses, so the
-    FSDP path uses the same ring schedule (and stays bitwise-compatible
-    with the arena hot path's per-chunk combine chains).
-    """
+    """Map the engine-level algorithm names onto the gather/scatter pair."""
     return ("rhd" if algorithm in ("auto", "two_level", "hierarchical")
             else algorithm)
 

@@ -129,8 +129,6 @@ class DenseTransport(Transport):
             nbytes = buf.shape[1] * jnp.dtype(buf.dtype).itemsize
             alg = coll.select_algorithm(nbytes, reproducible=self.reproducible,
                                         multi_level=len(self.axes) > 1)
-        if alg == "ring_pipelined" and self.batched:
-            alg = "ring"        # batched rounds already overlap blocks
         return alg
 
     def __call__(self, buf, ef, staggers, extents):
@@ -335,6 +333,14 @@ class SwitchTransport(Transport):
     #: plane of PR 4, unchanged.
     manager: Any = dataclasses.field(default=None, compare=False)
     tenant: str | None = None
+    #: deterministic lossy-fabric injection (``switch.packets.FaultPlan``,
+    #: DESIGN.md §14).  A surviving plan runs in-network — the
+    #: reliability layer recovers every packet, bitwise.  A plan the
+    #: retry budget cannot recover is detected *statically* before
+    #: tracing (``dataplane.plan_survives``): this session alone degrades
+    #: to the matching wire transport, draining from the shared runtime
+    #: via ``ft.recover_session_failure``.
+    fault_plan: Any = None
 
     @property
     def needs_state(self) -> bool:
@@ -352,14 +358,51 @@ class SwitchTransport(Transport):
             axes=self.axes)
         return self.manager.arrival_perms(sess.tenant)
 
+    def _plan_survives(self, buf, ks) -> bool:
+        """Static retry-budget pre-check on this arena's level shapes."""
+        from repro.switch import dataplane
+
+        fanins = [l.fanin for l in dataplane._levels(self.axes)]
+        counts = dataplane.level_packet_counts(
+            fanins, int(buf.shape[0]), int(buf.shape[1]), buf.dtype,
+            mode=self.mode, block=self.block,
+            k_max=max(ks) if ks else None,
+            density_threshold=self.density_threshold)
+        return dataplane.plan_survives(self.fault_plan, counts)
+
+    def _degrade(self) -> Transport:
+        """Retry budget exhausted: drain this session from the shared
+        runtime and hand the arena to the matching wire transport (the
+        host-fallback leg of ``ft.recover_session_failure``).  Only this
+        session degrades — other tenants keep the switch."""
+        from repro.ft import coordinator as ft
+
+        if self.manager is not None:
+            ft.recover_session_failure(self.manager, self.tenant)
+        if self.mode == "sparse":
+            return SparseTransport(self.axes, mean=self.mean, batched=True,
+                                   k_frac=self.k_frac,
+                                   density_threshold=self.density_threshold)
+        if self.mode == "int8":
+            return Int8Transport(self.axes, mean=self.mean, batched=True,
+                                 block=self.block)
+        return DenseTransport(self.axes, mean=self.mean, batched=True,
+                              reproducible=self.reproducible)
+
     def __call__(self, buf, ef, staggers, extents):
         from repro.switch import dataplane
+
+        ks = (tuple(sparse.sparse_k(self.k_frac, e) for e in extents)
+              if self.mode == "sparse" else None)
+        if self.fault_plan is not None and not self._plan_survives(buf, ks):
+            return self._degrade()(buf, ef, staggers, extents)
 
         if self.mode == "dense":
             red = dataplane.switch_allreduce_dense(
                 buf, self.axes, reproducible=self.reproducible,
                 design=self.design,
-                arrival_perms=self._session_perms(buf))
+                arrival_perms=self._session_perms(buf),
+                fault_plan=self.fault_plan)
             if self.mean:
                 red = red / self._world()
             return red, (jnp.zeros_like(ef) if ef is not None else None)
@@ -372,17 +415,16 @@ class SwitchTransport(Transport):
             def transmit(v):
                 red = dataplane.switch_allreduce_int8(
                     v, self.axes, block=self.block, design=self.design,
-                    arrival_perms=perms)
+                    arrival_perms=perms, fault_plan=self.fault_plan)
                 return red, compression.quantize_roundtrip(v, self.block)
         elif self.mode == "sparse":
-            ks = tuple(sparse.sparse_k(self.k_frac, e) for e in extents)
             perms = self._session_perms(buf, k=max(ks))
 
             def transmit(v):
                 return dataplane.switch_allreduce_sparse(
                     v, self.axes, ks,
                     density_threshold=self.density_threshold,
-                    arrival_perms=perms)
+                    arrival_perms=perms, fault_plan=self.fault_plan)
         else:
             raise ValueError(f"unknown switch transport mode {self.mode!r}")
         red, ef_out = compression.error_feedback_step(buf, ef, transmit)
@@ -394,17 +436,21 @@ class SwitchTransport(Transport):
 def _switch_from_config(config, dtype, is_float: bool, *,
                         manager=None, tenant=None) -> SwitchTransport:
     axes = tuple(config.axes)
+    fault_plan = getattr(config, "fault_plan", None)
     if config.sparse_k_frac > 0 and is_float:
         return SwitchTransport(axes, mean=config.mean, mode="sparse",
                                k_frac=config.sparse_k_frac,
                                density_threshold=config.density_threshold,
-                               manager=manager, tenant=tenant)
+                               manager=manager, tenant=tenant,
+                               fault_plan=fault_plan)
     if config.compression == "int8" and is_float:
         return SwitchTransport(axes, mean=config.mean, mode="int8",
-                               manager=manager, tenant=tenant)
+                               manager=manager, tenant=tenant,
+                               fault_plan=fault_plan)
     return SwitchTransport(axes, mean=config.mean, mode="dense",
                            reproducible=config.reproducible,
-                           manager=manager, tenant=tenant)
+                           manager=manager, tenant=tenant,
+                           fault_plan=fault_plan)
 
 
 def from_config(config, dtype, *, batched: bool = True,

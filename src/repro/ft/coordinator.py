@@ -96,6 +96,24 @@ def recover_switch_failure(network: topology.NetworkManager,
     return new_lease
 
 
+def recover_session_failure(runtime, tenant: str | None, *,
+                            reason: str = "retry budget exhausted") -> bool:
+    """Degrade one *session* to the host-based wire fallback.
+
+    The session-scoped leg of :func:`recover_switch_failure` (DESIGN.md
+    §14): when the reliability layer's retry budget cannot recover a
+    tenant's packets — lossy fabric, not a dead switch — only that
+    tenant drains from the shared runtime (``SessionManager.evict``); the
+    switch, its tree, and every other session are untouched.  The caller
+    (``transports.SwitchTransport``) then reduces the affected arenas
+    over the wire transports.  Idempotent; returns whether a session was
+    actually drained.
+    """
+    if runtime is None or tenant is None:
+        return False
+    return runtime.evict(tenant, reason=reason)
+
+
 class Coordinator:
     """Heartbeat failure detector (pluggable clock for tests).
 
@@ -117,6 +135,7 @@ class Coordinator:
         self.last_seen = {h: t for h in range(hosts)}
         self.failed: set[int] = set()
         self.failed_switches: set[int] = set()
+        self.failed_sessions: set[str] = set()
 
     def switch_failure(self, lease: topology.AllreduceLease,
                        switch_id: int, *, runtime=None):
@@ -129,23 +148,44 @@ class Coordinator:
         return recover_switch_failure(self.network, lease, switch_id,
                                       runtime=runtime)
 
-    def heartbeat(self, host: int) -> None:
+    def heartbeat(self, host: int, *, now=None) -> None:
+        """Record a host's liveness (``now`` overrides the instance
+        clock for one call — deterministic timeout tests, no sleeps)."""
         if host in self.failed:
             return                      # rejoin requires explicit admit
-        self.last_seen[host] = self.clock()
+        self.last_seen[host] = self.clock() if now is None else now
 
-    def admit(self, host: int) -> None:
+    def admit(self, host: int, *, now=None) -> None:
         """Re-admit a recovered host (next re-mesh will include it)."""
         self.failed.discard(host)
-        self.last_seen[host] = self.clock()
+        self.last_seen[host] = self.clock() if now is None else now
 
-    def check(self) -> set[int]:
+    def check(self, *, now=None) -> set[int]:
         """Mark hosts not seen within the timeout as failed."""
-        now = self.clock()
-        for h, t in self.last_seen.items():
-            if h not in self.failed and now - t > self.timeout:
+        t = self.clock() if now is None else now
+        for h, seen in self.last_seen.items():
+            if h not in self.failed and t - seen > self.timeout:
                 self.failed.add(h)
         return set(self.failed)
+
+    def straggler_report(self, step_starts: dict[int, float], *,
+                         factor: float = 2.0, now=None) -> list[int]:
+        """Hosts whose *current* step has run ``factor`` × the median
+        elapsed time — the clocked wrapper over the pure
+        :func:`straggler_report` (``now`` injectable like the heartbeat
+        path, so slow-host detection tests run without sleeps)."""
+        t = self.clock() if now is None else now
+        return straggler_report({h: t - s for h, s in step_starts.items()},
+                                factor=factor)
+
+    def session_failure(self, runtime, tenant: str, *,
+                        reason: str = "retry budget exhausted") -> bool:
+        """Record and recover a session whose retry budget is exhausted
+        (see :func:`recover_session_failure`)."""
+        drained = recover_session_failure(runtime, tenant, reason=reason)
+        if drained:
+            self.failed_sessions.add(tenant)
+        return drained
 
     def plan(self, *, model: int, hosts_per_pod: int | None = None,
              ) -> RemeshPlan:

@@ -34,6 +34,13 @@ def _parse():
                     choices=("auto", "innetwork"),
                     help="auto = wire collectives; innetwork = the "
                          "emulated sPIN switch data plane (repro/switch)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="per-packet drop probability of the injected "
+                         "lossy fabric (DESIGN.md §14; needs --transport "
+                         "innetwork).  Surviving plans stay bitwise; plans "
+                         "past the retry budget degrade to the wire")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the deterministic fault plan")
     ap.add_argument("--tenants", type=int, default=1,
                     help="run K concurrent training jobs as tenants of ONE "
                          "shared emulated switch (multi-tenant runtime, "
@@ -47,6 +54,19 @@ def _parse():
                     choices=("round_robin", "priority"),
                     help="ingress interleave order for --tenants > 1")
     return ap.parse_args()
+
+
+def _fault_plan(args):
+    """``--fault-rate/--fault-seed`` → a deterministic ``FaultPlan``
+    (``None`` when no faults are requested, keeping ``FlareConfig``
+    valid for the wire transports)."""
+    if not args.fault_rate:
+        return None
+    if args.transport != "innetwork" and args.tenants <= 1:
+        sys.exit("--fault-rate models the lossy switch fabric; it needs "
+                 "--transport innetwork (or --tenants > 1)")
+    from repro.switch.packets import FaultPlan
+    return FaultPlan(seed=args.fault_seed, drop=args.fault_rate)
 
 
 def _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes):
@@ -85,7 +105,8 @@ def _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes):
         tcfg = trainer.TrainConfig(
             lr=args.lr, gather_algorithm=args.gather_algorithm,
             flare=FlareConfig(axes=mcfg.reduce_axes,
-                              transport="innetwork", **kw))
+                              transport="innetwork",
+                              fault_plan=_fault_plan(args), **kw))
         return kw, trainer.jit_train_step(
             model, mesh, mcfg, tcfg, params_shapes, batch_shapes,
             donate=False, reduce_manager=manager, tenant=f"job{k}")
@@ -178,7 +199,8 @@ def main():
                           reproducible=args.reproducible,
                           compression=args.compression,
                           sparse_k_frac=args.sparse_k,
-                          transport=args.transport))
+                          transport=args.transport,
+                          fault_plan=_fault_plan(args)))
 
     if args.tenants > 1:
         return _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes)

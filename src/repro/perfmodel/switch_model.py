@@ -318,3 +318,73 @@ def expected_hash_spill_bytes(n_inserts: float, table_slots: float,
                               elem_bytes: int = 4) -> float:
     """Spill traffic of the expected collisions: one (idx, val) pair each."""
     return expected_hash_collisions(n_inserts, table_slots) * 2 * elem_bytes
+
+
+# ---------------------------------------------------------------------------
+# Lossy-fabric model (DESIGN.md §14): retransmit/retry-round expectations.
+# ---------------------------------------------------------------------------
+# Plain-number inputs like the rest of this module; the measured side is
+# the reliability layer's retry counters (``dataplane._reliable_ingress``
+# / the static ``packets.FaultSchedule``), cross-checked in
+# ``tests/test_chaos.py`` the way the shared-switch model is.
+
+def loss_probability(drop: float, corrupt: float) -> float:
+    """Per-attempt failure probability: a packet is lost to the fold if
+    it drops on the wire OR arrives corrupted (the checksum rejects it —
+    corruption behaves exactly like a drop plus a NACK)."""
+    return 1.0 - (1.0 - float(drop)) * (1.0 - float(corrupt))
+
+
+def expected_retransmits_per_packet(q: float, max_retries: int) -> float:
+    """Expected retransmission attempts per packet under per-attempt
+    loss ``q``: the packet is re-sent once for every failed attempt
+    while budget remains — ``sum_{r=1..R} q^r``."""
+    return sum(q ** r for r in range(1, int(max_retries) + 1))
+
+
+def delivery_probability(q: float, max_retries: int) -> float:
+    """P(a packet is accepted within the budget): ``1 − q^(R+1)``."""
+    return 1.0 - q ** (int(max_retries) + 1)
+
+
+def expected_retry_rounds(q: float, max_retries: int,
+                          num_packets: int) -> float:
+    """Expected NACK rounds a level actually runs: round ``r`` happens
+    iff any of the ``n`` packets failed all of its first ``r`` attempts
+    — ``sum_{r=1..R} (1 − (1 − q^r)^n)``."""
+    n = max(1, int(num_packets))
+    return sum(1.0 - (1.0 - q ** r) ** n
+               for r in range(1, int(max_retries) + 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class LossPoint:
+    """The lossy-fabric operating point for one level's ingress."""
+
+    q: float                        # per-attempt loss probability
+    retransmits: float              # expected retransmission attempts
+    retry_rounds: float             # expected NACK rounds executed
+    wait_rounds: float              # expected backoff rounds spent waiting
+    survival: float                 # P(every packet accepted in budget)
+
+
+def model_lossy(drop: float, corrupt: float, num_packets: int, *,
+                max_retries: int = 3, timeout_rounds: int = 4,
+                backoff: float = 2.0) -> LossPoint:
+    """Evaluate the reliability layer's expected cost at one operating
+    point: ``num_packets`` independent packets (a level's ``P · n``
+    ingress), per-attempt loss ``q = loss_probability(drop, corrupt)``,
+    and the retry budget/backoff of ``packets.RetryPolicy``.  The wait
+    term charges ``timeout_rounds · backoff^(r−1)`` modeled rounds for
+    each retry round expected to run."""
+    q = loss_probability(drop, corrupt)
+    n = max(1, int(num_packets))
+    rounds = [1.0 - (1.0 - q ** r) ** n
+              for r in range(1, int(max_retries) + 1)]
+    return LossPoint(
+        q=q,
+        retransmits=n * expected_retransmits_per_packet(q, max_retries),
+        retry_rounds=sum(rounds),
+        wait_rounds=sum(p * timeout_rounds * backoff ** (r - 1)
+                        for r, p in enumerate(rounds, start=1)),
+        survival=delivery_probability(q, max_retries) ** n)

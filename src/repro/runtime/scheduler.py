@@ -49,13 +49,21 @@ class TenantLoad:
     clusters: int               # partition slice size
     priority: int = 0
     queued: int | None = None
+    #: NACK-driven retransmission packets a lossy fabric adds on top of
+    #: the plan's first-transmission ingress (DESIGN.md §14) — extra
+    #: service demand the interleave must account, not new combine work
+    #: (retransmitted payloads fold at most once via the seen-bitmap).
+    retransmit_packets: int = 0
 
     @property
     def leaf_packets(self) -> int:
-        """Ingress packets at the leaf level — what the switch schedules."""
+        """Ingress packets at the leaf level — what the switch schedules
+        (the queued backlog or the plan's full ingress, plus any modeled
+        retransmissions)."""
         if self.queued is not None:
-            return int(self.queued)
-        return int(self.counters.levels[0].ingress_packets)
+            return int(self.queued) + int(self.retransmit_packets)
+        return (int(self.counters.levels[0].ingress_packets)
+                + int(self.retransmit_packets))
 
     @property
     def combines(self) -> int:

@@ -141,6 +141,8 @@ class SessionManager:
         self._sessions: dict[str, Session] = {}
         self._epoch = 0           # bumped by rebind → fresh arrival perms
         self._next_tenant = 0
+        #: audit log of forced closures: ``(tenant, reason)`` per evict.
+        self.evictions: list[tuple[str, str]] = []
 
     def new_tenant(self) -> str:
         """A fresh unique tenant name (``tenant0``, ``tenant1``, ...)
@@ -282,6 +284,20 @@ class SessionManager:
     def close(self, tenant: str) -> None:
         self._sessions.pop(str(tenant), None)
 
+    def evict(self, tenant: str, *, reason: str = "evicted") -> bool:
+        """Forcibly drain one session (session-scoped degradation,
+        DESIGN.md §14): the tenant falls back to host-based collectives
+        while every other session keeps the switch.  The eviction is
+        logged — ``(tenant, reason)`` in arrival order — so the control
+        plane (``ft.recover_session_failure``) and tests can audit *why*
+        a tenant left.  Idempotent; returns whether a session closed."""
+        tenant = str(tenant)
+        if tenant not in self._sessions:
+            return False
+        del self._sessions[tenant]
+        self.evictions.append((tenant, reason))
+        return True
+
     def drain(self) -> tuple[str, ...]:
         """Close every session (host-based fallback for all of them)."""
         tenants = tuple(self._sessions)
@@ -401,6 +417,8 @@ class SessionManager:
                 readmitted.append(s.tenant)
             except AdmissionError:
                 evicted.append(s.tenant)
+                self.evictions.append((s.tenant, "no longer fits rebuilt "
+                                                 "tree"))
         return tuple(readmitted), tuple(evicted)
 
     # -- reporting ---------------------------------------------------------

@@ -161,19 +161,175 @@ def _apply_arrival(stack: Any, headers: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Reliability layer (DESIGN.md §14): lossy ingress + exactly-once recovery.
+# ---------------------------------------------------------------------------
+
+class FaultBudgetExceeded(RuntimeError):
+    """A fault plan loses packets the retry budget cannot recover.
+
+    Raised at trace time (survival is statically known — corruption
+    deterministically fails the checksum, so the set of accepted packets
+    is a pure function of the schedule).  The transport layer pre-checks
+    with :func:`plan_survives` and degrades the session to the wire
+    transport instead of ever tracing a non-surviving plane."""
+
+
+def _new_fault_stats() -> dict:
+    z = jnp.zeros((), jnp.int32)
+    return {"retransmits": z, "duplicates_dropped": z,
+            "corrupt_rejected": z, "delivered": z, "wait_rounds": z}
+
+
+def _reliable_ingress(stack: Any, headers: jax.Array,
+                      sched: pk.FaultSchedule,
+                      stats: dict) -> tuple[Any, jax.Array]:
+    """Replay a level's fault schedule and rebuild the clean canonical
+    child stack, exactly once per packet.
+
+    Each delivery round: the round's packets arrive (possibly
+    bit-corrupted on the wire, possibly interleaved across children),
+    header steering un-permutes them by ``HDR_CHILD``, the checksum
+    header gates out corrupted payloads, and the seen-bitmap admits each
+    ``(child, packet)`` slot at most once (``handlers.accept_mask`` /
+    ``fold_once``) — duplicates and redundant retransmissions are
+    no-ops.  Corruption targets the first leaf of the payload pytree
+    (the checksummed stream whose headers ride the stack; sidebands
+    fate-share via the shared accept mask).  If the schedule does not
+    recover every packet within the retry budget the slot can never
+    complete — :class:`FaultBudgetExceeded`."""
+    if not sched.survives:
+        raise FaultBudgetExceeded(
+            f"fault schedule loses packets beyond the retry budget "
+            f"({sched.rounds} rounds, {sched.retransmits} retransmits)")
+    leaves, treedef = jax.tree.flatten(stack)
+    p, n = int(headers.shape[0]), int(headers.shape[1])
+    seen = jnp.zeros((p, n), bool)
+    acc = [jnp.zeros_like(l) for l in leaves]
+    acc_hdr = jnp.zeros_like(headers)
+    for r in range(sched.rounds):
+        arrives = jnp.asarray(sched.arrives[r])
+        any_corrupt = bool(np.asarray(sched.corrupt[r]).any())
+        if any_corrupt:
+            # wire leg: corrupt the checksummed stream's masked packets
+            corrupt = jnp.asarray(sched.corrupt[r])
+            lvs = ([pk.corrupt_first_elem(leaves[0], corrupt)]
+                   + list(leaves[1:]))
+        else:
+            lvs = list(leaves)
+        hdr_r = headers
+        perm = np.asarray(sched.perms[r])
+        if not np.array_equal(perm, np.arange(p)):
+            # the round's streams arrive interleaved; steer them back by
+            # the CHILD header, never by arrival position
+            order = jnp.broadcast_to(
+                jnp.asarray(perm, jnp.int32)[:, None], (p, n))
+            lvs = [hd.apply_order(l, order) for l in lvs]
+            hdr_r = hd.apply_order(headers, order)
+            back = hd.child_order(hdr_r)
+            lvs = [hd.apply_order(l, back) for l in lvs]
+            hdr_r = hd.apply_order(hdr_r, back)
+        if any_corrupt:
+            ok = pk.payload_checksum(lvs[0]) == hdr_r[:, :, pk.HDR_CSUM]
+        else:
+            # injection is the only corruption source in the emulation —
+            # with none scheduled this round the verify is statically a
+            # pass, so skip the checksum work (mirrors hardware CRC
+            # offload: the host path doesn't recompute clean frames)
+            ok = jnp.ones((p, n), bool)
+        accept = hd.accept_mask(arrives, ok, seen)
+        acc = [hd.fold_once(a, l, accept) for a, l in zip(acc, lvs)]
+        acc_hdr = hd.fold_once(acc_hdr, hdr_r, accept)
+        stats["corrupt_rejected"] += jnp.sum(arrives & ~ok, dtype=jnp.int32)
+        stats["duplicates_dropped"] += jnp.sum(arrives & ok & seen,
+                                               dtype=jnp.int32)
+        seen = seen | (arrives & ok)
+    stats["retransmits"] += jnp.int32(sched.retransmits)
+    stats["delivered"] += jnp.sum(seen, dtype=jnp.int32)
+    stats["wait_rounds"] += jnp.int32(round(sched.wait_rounds))
+    return jax.tree.unflatten(treedef, acc), acc_hdr
+
+
+def level_packet_counts(level_fanins: Sequence[int], num_buckets: int,
+                        bucket_elems: int, dtype, *, mode: str = "dense",
+                        fmt: pk.PacketFormat = DEFAULT_FORMAT,
+                        block: int = 256, k_max: int | None = None,
+                        density_threshold: float = 0.25,
+                        ) -> list[tuple[int, int]]:
+    """Per up-hop ``(fanin, packets per child)`` for one plane's schedule.
+
+    The fault plan keys its per-level schedules on these shapes, so this
+    is the single source of truth shared by the planes (which inject)
+    and the transport layer (which pre-checks survival): dense streams a
+    constant ``B · ceil(S/N)`` packets per level, int8 frames the
+    quantized (block-padded) arena, and the sparse plane's packed
+    coordinate lists grow ``cap *= fanin`` per level until the density
+    threshold trips and it continues as dense fp32."""
+    if mode == "dense":
+        n = num_buckets * fmt.packets_per_block(bucket_elems, dtype)
+        return [(p, n) for p in level_fanins]
+    if mode == "int8":
+        s = bucket_elems + (-bucket_elems) % block
+        n = num_buckets * fmt.packets_per_block(s, jnp.int8)
+        return [(p, n) for p in level_fanins]
+    if mode == "sparse":
+        if k_max is None:
+            raise ValueError("sparse level_packet_counts needs k_max")
+        out, cap, dense = [], int(k_max), False
+        for p in level_fanins:
+            if not dense and sparse.densify_step(cap * p, bucket_elems,
+                                                 density_threshold):
+                dense = True
+            if dense:
+                n = num_buckets * fmt.packets_per_block(bucket_elems,
+                                                        jnp.float32)
+            else:
+                n = num_buckets * fmt.packets_per_block(2 * cap, jnp.int32)
+                cap *= p
+            out.append((p, n))
+        return out
+    raise ValueError(f"unknown plane mode {mode!r}")
+
+
+def fault_schedules(plan: "pk.FaultPlan | None",
+                    counts: Sequence[tuple[int, int]],
+                    ) -> list["pk.FaultSchedule | None"]:
+    """One schedule per level (``None`` where the plan doesn't apply)."""
+    if plan is None:
+        return [None] * len(counts)
+    return [plan.schedule(i, p, n) if plan.applies(i) else None
+            for i, (p, n) in enumerate(counts)]
+
+
+def plan_survives(plan: "pk.FaultPlan | None",
+                  counts: Sequence[tuple[int, int]]) -> bool:
+    """Static pre-check: does every level recover within the budget?
+
+    Deterministic in (plan, level shapes) — exactly the schedules the
+    plane will replay — so the transport can decide *before tracing*
+    whether to run in-network or degrade the session to the wire."""
+    return all(s is None or s.survives
+               for s in fault_schedules(plan, counts))
+
+
+# ---------------------------------------------------------------------------
 # Dense / fixed-tree data plane.
 # ---------------------------------------------------------------------------
 
 def _dense_level(arena: jax.Array, lvl: topology.MeshLevel,
                  handler: hd.Handler, design: str, n_bufs: int,
-                 fmt: pk.PacketFormat, arrival) -> jax.Array:
+                 fmt: pk.PacketFormat, arrival,
+                 fault: pk.FaultSchedule | None = None,
+                 fault_stats: dict | None = None) -> jax.Array:
     """One up-hop: frame, stream to the switch, aggregate, mask."""
     b, s = arena.shape
     r = lax.axis_index(lvl.axis)
     stream = pk.packetize(arena, fmt, child_rank=r)
     stacked = _gather_children(stream, lvl.axis)
-    payload, headers = _apply_arrival(stacked.payload, stacked.headers,
-                                      arrival)
+    payload, headers = stacked.payload, stacked.headers
+    if fault is not None:
+        payload, headers = _reliable_ingress(payload, headers, fault,
+                                             fault_stats)
+    payload, headers = _apply_arrival(payload, headers, arrival)
     egress, _ = hd.run(handler, payload, headers, design=design,
                        n_bufs=n_bufs, ctx={"dtype": arena.dtype})
     e = fmt.payload_elems(arena.dtype)
@@ -196,7 +352,9 @@ def switch_allreduce_dense(arena: jax.Array, axes: Sequence[str], *,
                            design: str = "auto",
                            fmt: pk.PacketFormat = DEFAULT_FORMAT,
                            arrival_perms: Sequence | None = None,
-                           mean: bool = False) -> jax.Array:
+                           fault_plan: pk.FaultPlan | None = None,
+                           with_fault_stats: bool = False,
+                           mean: bool = False):
     """Allreduce a ``(B, S)`` arena through the emulated switch tree.
 
     ``reproducible=True`` installs the ``fixed_tree`` handler: combines
@@ -205,23 +363,33 @@ def switch_allreduce_dense(arena: jax.Array, axes: Sequence[str], *,
     bitwise-equal to the wire ``fixed_tree`` collective
     (``collectives.allreduce`` with ``algorithm="fixed_tree"``) — the
     same combine tree, executed in-switch instead of rank-to-rank.
+
+    ``fault_plan`` replays a deterministic lossy fabric on every up-hop
+    (DESIGN.md §14): the reliability layer recovers the clean child
+    stack exactly once per packet, so a surviving plan leaves the result
+    bitwise identical to the fault-free run.  ``with_fault_stats``
+    additionally returns the traced retry/rejection counters.
     """
     b, s = arena.shape
     handler = hd.get_handler("fixed_tree" if reproducible else "dense_sum")
     design, n_bufs = resolve_design(s * arena.dtype.itemsize, design,
                                     reproducible)
     levels = _levels(axes)
+    fstats = _new_fault_stats()
     if len(levels) == 1 and levels[0].fanin == 1:
-        return arena
+        return (arena, fstats) if with_fault_stats else arena
+    faults = fault_schedules(fault_plan, level_packet_counts(
+        [l.fanin for l in levels], b, s, arena.dtype, mode="dense", fmt=fmt))
     cur = arena
     for i, lvl in enumerate(levels):
         arrival = arrival_perms[i] if arrival_perms is not None else None
-        cur = _dense_level(cur, lvl, handler, design, n_bufs, fmt, arrival)
+        cur = _dense_level(cur, lvl, handler, design, n_bufs, fmt, arrival,
+                           fault=faults[i], fault_stats=fstats)
     for lvl in reversed(levels):
         cur = _multicast_arena(cur, lvl, fmt)
     if mean:
         cur = cur / compat.world_size(axes)
-    return cur
+    return (cur, fstats) if with_fault_stats else cur
 
 
 # ---------------------------------------------------------------------------
@@ -248,7 +416,9 @@ def switch_allreduce_int8(arena: jax.Array, axes: Sequence[str], *,
                           design: str = "auto",
                           fmt: pk.PacketFormat = DEFAULT_FORMAT,
                           arrival_perms: Sequence | None = None,
-                          mean: bool = False) -> jax.Array:
+                          fault_plan: pk.FaultPlan | None = None,
+                          with_fault_stats: bool = False,
+                          mean: bool = False):
     """int8-transport allreduce through the emulated switch.
 
     Packets carry int8 payloads with a per-``block`` fp32 scale
@@ -263,8 +433,9 @@ def switch_allreduce_int8(arena: jax.Array, axes: Sequence[str], *,
     handler = hd.get_handler("int8_dequant")
     sfmt = _scales_format(fmt, block)
     levels = _levels(axes)
+    fstats = _new_fault_stats()
     if len(levels) == 1 and levels[0].fanin == 1:
-        return arena
+        return (arena, fstats) if with_fault_stats else arena
     # quantization needs whole blocks; packet alignment needs nothing
     # extra — the scales sideband's packet count matches the payload's
     # by construction (E_s = E/block), padding included
@@ -273,6 +444,9 @@ def switch_allreduce_int8(arena: jax.Array, axes: Sequence[str], *,
         [arena, jnp.zeros((b, pad), arena.dtype)], axis=1) if pad else arena
     s = xp.shape[1]
     design, n_bufs = resolve_design(s, design)     # int8: S bytes per block
+    faults = fault_schedules(fault_plan, level_packet_counts(
+        [l.fanin for l in levels], b, s0, arena.dtype, mode="int8", fmt=fmt,
+        block=block))
 
     acc = xp.astype(jnp.float32)
     e = fmt.payload_elems(jnp.int8)
@@ -285,6 +459,11 @@ def switch_allreduce_int8(arena: jax.Array, axes: Sequence[str], *,
         stacked = _gather_children(streams, lvl.axis)
         payload = {"q": stacked["q"].payload, "scale": stacked["scale"].payload}
         headers = stacked["q"].headers
+        if faults[i] is not None:
+            # "q" is the checksummed stream (its headers steer the
+            # stack); the scales sideband fate-shares the accept mask
+            payload, headers = _reliable_ingress(payload, headers,
+                                                 faults[i], fstats)
         arrival = arrival_perms[i] if arrival_perms is not None else None
         payload, headers = _apply_arrival(payload, headers, arrival)
         agg, _ = hd.run(handler, payload, headers, design=design,
@@ -303,7 +482,7 @@ def switch_allreduce_int8(arena: jax.Array, axes: Sequence[str], *,
     out = out[:, :s0]
     if mean:
         out = out / compat.world_size(axes)
-    return out
+    return (out, fstats) if with_fault_stats else out
 
 
 # ---------------------------------------------------------------------------
@@ -337,6 +516,8 @@ def switch_allreduce_sparse(arena: jax.Array, axes: Sequence[str],
                             density_threshold: float = 0.25,
                             fmt: pk.PacketFormat = DEFAULT_FORMAT,
                             arrival_perms: Sequence | None = None,
+                            fault_plan: pk.FaultPlan | None = None,
+                            with_fault_stats: bool = False,
                             mean: bool = False,
                             with_stats: bool = False):
     """Top-k sparse allreduce through the emulated switch (§7).
@@ -369,18 +550,25 @@ def switch_allreduce_sparse(arena: jax.Array, axes: Sequence[str],
     mine = jax.vmap(
         lambda v, i: sparse.scatter_dense(v, i, s, dtype=arena.dtype))(val,
                                                                        idx)
+    fstats = _new_fault_stats()
     if len(levels) == 1 and levels[0].fanin == 1:
         out = mine.astype(jnp.float32)
         if mean:
             out = out / compat.world_size(axes)
-        return ((out.astype(arena.dtype), mine,
-                 {"collisions": jnp.zeros((), jnp.int32),
-                  "spill_bytes": jnp.zeros((), jnp.int32)})
-                if with_stats else (out.astype(arena.dtype), mine))
+        ret = [out.astype(arena.dtype), mine]
+        if with_stats:
+            ret.append({"collisions": jnp.zeros((), jnp.int32),
+                        "spill_bytes": jnp.zeros((), jnp.int32)})
+        if with_fault_stats:
+            ret.append(fstats)
+        return tuple(ret)
     val32 = val.astype(jnp.float32)
     cap = k_max
     dense_acc: jax.Array | None = None
     collisions = jnp.zeros((), jnp.int32)
+    faults = fault_schedules(fault_plan, level_packet_counts(
+        [l.fanin for l in levels], b, s, arena.dtype, mode="sparse", fmt=fmt,
+        k_max=k_max, density_threshold=density_threshold))
 
     for i, lvl in enumerate(levels):
         arrival = arrival_perms[i] if arrival_perms is not None else None
@@ -396,14 +584,18 @@ def switch_allreduce_sparse(arena: jax.Array, axes: Sequence[str],
             # arrival-invariant even after it densifies mid-tree
             dense_acc = _dense_level(dense_acc, lvl,
                                      hd.get_handler("dense_sum_steered"),
-                                     "single", 1, fmt, arrival)
+                                     "single", 1, fmt, arrival,
+                                     fault=faults[i], fault_stats=fstats)
             continue
         packed = _pack_lists(idx, val32)                   # (B, 2·cap) int32
         r = lax.axis_index(lvl.axis)
         stream = pk.packetize(packed, fmt, child_rank=r)
         stacked = _gather_children(stream, lvl.axis)
-        payload, headers = _apply_arrival(stacked.payload, stacked.headers,
-                                          arrival)
+        payload, headers = stacked.payload, stacked.headers
+        if faults[i] is not None:
+            payload, headers = _reliable_ingress(payload, headers,
+                                                 faults[i], fstats)
+        payload, headers = _apply_arrival(payload, headers, arrival)
         # a coordinate list spans several packets, so the reassembly of
         # each child's wire image must group packets by the CHILD header,
         # not by arrival position — under a per-slot arrival interleave
@@ -440,11 +632,13 @@ def switch_allreduce_sparse(arena: jax.Array, axes: Sequence[str],
     if mean:
         dense_acc = dense_acc / compat.world_size(axes)
     red = dense_acc.astype(arena.dtype)
+    ret = [red, mine]
     if with_stats:
-        stats = {"collisions": collisions,
-                 "spill_bytes": collisions * 2 * 4}   # (idx, val) per spill
-        return red, mine, stats
-    return red, mine
+        ret.append({"collisions": collisions,
+                    "spill_bytes": collisions * 2 * 4})  # (idx, val)/spill
+    if with_fault_stats:
+        ret.append(fstats)
+    return tuple(ret)
 
 
 # ---------------------------------------------------------------------------

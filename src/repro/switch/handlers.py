@@ -138,6 +138,30 @@ def child_order_opt(headers):
 
 
 # ---------------------------------------------------------------------------
+# Exactly-once admission (DESIGN.md §14): seen-bitmaps + checksum gating.
+# ---------------------------------------------------------------------------
+
+def accept_mask(arrives: jax.Array, ok: jax.Array,
+                seen: jax.Array) -> jax.Array:
+    """Which of a round's deliveries the switch admits: delivered,
+    checksum-valid, and not yet in the per-(block, child) seen-bitmap —
+    so duplicates and redundant retransmissions are idempotent and
+    corrupted payloads never reach a fold."""
+    return arrives & ok & ~seen
+
+
+def fold_once(acc: jax.Array, update: jax.Array,
+              accept: jax.Array) -> jax.Array:
+    """Admit the accepted packets of one delivery round into the
+    reassembly buffer.  A pure select keyed on the ``(P, n)`` accept
+    mask: re-admitting a packet is impossible by construction (the mask
+    already excludes seen slots), so folding the same round twice is a
+    no-op — the idempotence the seen-bitmap protocol guarantees."""
+    m = accept.reshape(accept.shape + (1,) * (update.ndim - accept.ndim))
+    return jnp.where(m, update, acc)
+
+
+# ---------------------------------------------------------------------------
 # The handler registry.
 # ---------------------------------------------------------------------------
 

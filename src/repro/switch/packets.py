@@ -13,6 +13,13 @@ any dtype, NaNs and ragged tails included.
 Depacketization reassembles from the headers, not from array position —
 packets may arrive in any order (the adversarial-arrival property the
 reproducibility tests exercise) and the arena still round-trips.
+
+The reliability layer (DESIGN.md §14) rides on two extras here: every
+header carries a payload checksum (``HDR_CSUM``, stamped at framing
+time) so a corrupted payload is *detectable* at the switch, and
+:class:`FaultPlan` / :class:`FaultSchedule` describe a deterministic,
+seedable lossy fabric — which packets drop, duplicate, arrive corrupted
+or reordered on each delivery round — that the data plane replays.
 """
 from __future__ import annotations
 
@@ -21,6 +28,8 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax import lax
 
 #: Header field indices (one int32 each, HEADER_BYTES on the wire).
 HDR_BLOCK = 0       # reduction-block (arena bucket) id
@@ -28,7 +37,8 @@ HDR_SEQ = 1         # packet sequence number within the block
 HDR_CHILD = 2       # sending child's rank on the reduced axis
 HDR_VALID = 3       # valid payload elements (< payload_elems on tails)
 HDR_LAST = 4        # 1 on the block's final packet (completion marker)
-HEADER_FIELDS = 5
+HDR_CSUM = 5        # payload checksum (wraparound uint32 sum of elements)
+HEADER_FIELDS = 6
 HEADER_BYTES = HEADER_FIELDS * 4
 
 
@@ -95,7 +105,8 @@ def packetize(arena: jax.Array, fmt: PacketFormat,
     valid = jnp.minimum(e, s - seq * e).astype(jnp.int32)
     last = (seq == npkt - 1).astype(jnp.int32)
     child = jnp.full((b * npkt,), child_rank, jnp.int32)
-    headers = jnp.stack([block, seq, child, valid, last], axis=1)
+    csum = payload_checksum(payload)
+    headers = jnp.stack([block, seq, child, valid, last, csum], axis=1)
     return PacketStream(headers=headers, payload=payload)
 
 
@@ -117,3 +128,166 @@ def depacketize(stream: PacketStream, fmt: PacketFormat,
     flat = jnp.zeros((n, e), stream.payload.dtype).at[slot].set(
         stream.payload, mode="drop")
     return flat.reshape(num_buckets, npkt * e)[:, :bucket_elems]
+
+
+# ---------------------------------------------------------------------------
+# Payload integrity (DESIGN.md §14): checksum + wire corruption.
+# ---------------------------------------------------------------------------
+
+def _uint_type(dtype) -> jnp.dtype:
+    return jnp.dtype(f"uint{jnp.dtype(dtype).itemsize * 8}")
+
+
+def payload_checksum(payload: jax.Array) -> jax.Array:
+    """Per-packet checksum: wraparound uint32 sum of the payload's
+    elements reinterpreted as unsigned integers (``(..., E) -> (...)``
+    int32).  Bitwise on the payload image — any single-element change
+    shifts the sum by a nonzero delta mod 2^32, so the single-element
+    corruption :func:`corrupt_first_elem` injects is always detected."""
+    u = lax.bitcast_convert_type(payload, _uint_type(payload.dtype))
+    return jnp.sum(u.astype(jnp.uint32), axis=-1,
+                   dtype=jnp.uint32).astype(jnp.int32)
+
+
+def corrupt_first_elem(payload: jax.Array, mask: jax.Array) -> jax.Array:
+    """Flip bits of element 0 of each masked packet (``mask`` broadcasts
+    over the leading packet axes of a ``(..., E)`` payload).  The XOR
+    pattern is nonzero, so a corrupted packet never equals the clean one
+    and its header checksum can never validate."""
+    ut = _uint_type(payload.dtype)
+    u = lax.bitcast_convert_type(payload, ut)
+    bits = jnp.dtype(ut).itemsize * 8
+    pattern = jnp.asarray(0x5A5A5A5A5A5A5A5A & ((1 << bits) - 1), ut)
+    flipped = u.at[..., 0].set(u[..., 0] ^ pattern)
+    u = jnp.where(mask[..., None], flipped, u)
+    return lax.bitcast_convert_type(u, payload.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic fault injection (DESIGN.md §14).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Timeout/retransmit knobs, in *modeled rounds* (never wall clock).
+
+    The switch waits ``timeout_rounds`` service rounds for a slot to
+    complete, NACKs the missing packets, and backs the wait off
+    geometrically (``timeout_rounds * backoff**(retry-1)``) for up to
+    ``max_retries`` retransmission rounds before declaring the slot — and
+    with it the session — lost."""
+
+    timeout_rounds: int = 4
+    max_retries: int = 3
+    backoff: float = 2.0
+
+    def wait_rounds(self, retry: int) -> float:
+        """Modeled rounds waited before retransmission round ``retry``."""
+        return self.timeout_rounds * self.backoff ** max(0, retry - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic, seedable lossy fabric for the emulated switch.
+
+    Per delivery attempt each packet independently drops with
+    probability ``drop`` or arrives bit-corrupted with probability
+    ``corrupt``; each retransmission round redelivers already-accepted
+    packets with probability ``duplicate`` (exercising the seen-bitmap),
+    and with probability ``reorder`` a round's child streams arrive
+    interleaved by a random permutation (exercising header steering).
+    ``levels`` restricts injection to those tree levels (``None`` = all).
+
+    Hashable/frozen so it can ride inside ``FlareConfig``; all draws
+    come from ``np.random.default_rng([seed, level, P, n])`` so a plan is
+    a pure function of (plan, level, shape) — the chaos tests replay the
+    exact same faults on every run and every rank."""
+
+    seed: int = 0
+    drop: float = 0.0
+    duplicate: float = 0.0
+    reorder: float = 0.0
+    corrupt: float = 0.0
+    levels: tuple[int, ...] | None = None
+    retry: RetryPolicy = RetryPolicy()
+
+    def __post_init__(self):
+        for f in ("drop", "duplicate", "reorder", "corrupt"):
+            v = getattr(self, f)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"FaultPlan.{f}={v} outside [0, 1)")
+        if self.levels is not None:
+            object.__setattr__(self, "levels",
+                               tuple(int(l) for l in self.levels))
+
+    def applies(self, level: int) -> bool:
+        return self.levels is None or level in self.levels
+
+    def schedule(self, level: int, num_children: int,
+                 num_packets: int) -> "FaultSchedule":
+        """Materialize the per-round delivery masks for one level's
+        ``(P, n)`` child stack — deterministic in (plan, level, P, n)."""
+        p, n = int(num_children), int(num_packets)
+        rng = np.random.default_rng([self.seed, level, p, n])
+        rounds = 1 + self.retry.max_retries
+        arrives = np.zeros((rounds, p, n), bool)
+        corrupt = np.zeros((rounds, p, n), bool)
+        perms = np.tile(np.arange(p), (rounds, 1))
+        accepted = np.zeros((p, n), bool)
+        retransmits = duplicates = corrupt_rejected = 0
+        used = 1
+        for r in range(rounds):
+            attempt = ~accepted if r else np.ones((p, n), bool)
+            if r and not attempt.any():
+                break
+            used = r + 1
+            dropped = rng.random((p, n)) < self.drop
+            corr = rng.random((p, n)) < self.corrupt
+            arr = attempt & ~dropped
+            arrives[r] = arr
+            corrupt[r] = arr & corr
+            if r:
+                retransmits += int(attempt.sum())
+                dup = accepted & (rng.random((p, n)) < self.duplicate)
+                arrives[r] |= dup            # redelivered clean copies
+                duplicates += int(dup.sum())
+            corrupt_rejected += int((arr & corr).sum())
+            accepted |= arr & ~corr
+            if self.reorder and rng.random() < self.reorder:
+                perms[r] = rng.permutation(p)
+        return FaultSchedule(
+            arrives=arrives[:used], corrupt=corrupt[:used],
+            perms=perms[:used], survives=bool(accepted.all()),
+            retransmits=retransmits, duplicates=duplicates,
+            corrupt_rejected=corrupt_rejected,
+            wait_rounds=sum(self.retry.wait_rounds(r)
+                            for r in range(1, used)))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """One level's replayable fault trace: static numpy masks (never
+    traced values — the data plane unrolls over them) plus the derived
+    counters the perfmodel cross-check keys on.
+
+    ``arrives[r, p, i]`` — child ``p``'s packet ``i`` is delivered on
+    round ``r`` (round 0 = first transmission, later rounds =
+    NACK-driven retransmissions and duplicate redeliveries);
+    ``corrupt[r, p, i]`` — that delivery is bit-corrupted (fails the
+    checksum);  ``perms[r]`` — the child interleaving of round ``r``'s
+    arrivals.  ``survives`` is statically known because corruption
+    deterministically fails the checksum: every clean delivery is
+    accepted, everything else is rejected."""
+
+    arrives: np.ndarray         # (R, P, n) bool
+    corrupt: np.ndarray         # (R, P, n) bool
+    perms: np.ndarray           # (R, P) int — per-round child interleave
+    survives: bool              # all packets accepted within the budget
+    retransmits: int            # NACK-driven retransmission attempts
+    duplicates: int             # redeliveries of already-accepted packets
+    corrupt_rejected: int       # deliveries the checksum must reject
+    wait_rounds: float          # modeled backoff rounds spent waiting
+
+    @property
+    def rounds(self) -> int:
+        return self.arrives.shape[0]

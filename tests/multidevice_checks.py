@@ -7,11 +7,11 @@ Invoked by tests/test_collectives.py as::
 
 Groups: collectives | arena_pipeline | sparse_quant | fsdp_engine |
         trainer | repro | transports | hierarchy | switch | runtime |
-        sparse_densify
+        sparse_densify | chaos
 Exits non-zero on any failure (assertion output on stderr).
 
-The ``hierarchy``, ``switch``, ``runtime`` and ``sparse_densify``
-groups are mesh-shape-parametric: ``REPRO_MESH_SHAPE``
+The ``hierarchy``, ``switch``, ``runtime``, ``sparse_densify`` and
+``chaos`` groups are mesh-shape-parametric: ``REPRO_MESH_SHAPE``
 (e.g. ``8`` or ``2x4``, the ``(pod, data)`` reduction axes) selects the
 topology, and the pytest wrapper runs it under both the flat and the
 two-level shape via the ``--mesh-shape`` conftest option.
@@ -108,34 +108,23 @@ def check_collectives():
 
 
 def check_arena_pipeline():
-    """The PR-1 hot path: pipelined ring + flat-arena GradReducer.
+    """The PR-1 hot path: bucketed ring waves + flat-arena GradReducer.
 
     Bitwise claims verified here:
-      * ``allreduce_ring_pipelined`` ≡ ``allreduce_ring`` (op=add, 2P | Z);
       * ``ring_allreduce_bucketed``  ≡ per-bucket ``allreduce_ring`` with
         the same staggers (the §6.2 fused waves reorder rounds only);
       * arena ``GradReducer`` ≡ legacy per-bucket loop in reproducible
         fixed-tree mode (F3 — elementwise combine, layout-independent).
+
+    (``allreduce_ring_pipelined`` was retired in PR 6 — it measured
+    slower than the plain ring it claimed to pipeline; the bucketed
+    arena waves are the form that actually overlaps.)
     """
     mesh = _mesh()
     rng = np.random.default_rng(11)
     Z = 256                       # divisible by 2P for P ∈ {2, 4}
     xs = jnp.asarray((rng.normal(size=(4, Z)) * 1e3).astype(np.float32))
     expect = np.asarray(xs, np.float64).sum(0)
-
-    # pipelined ring vs plain ring: bitwise (single "data" axis, P=2)
-    for stag in (0, 3):
-        a = _run(lambda x, s=stag: coll.allreduce_ring(
-            x[0], "data", stagger=s), xs, mesh)
-        b = _run(lambda x, s=stag: coll.allreduce_ring_pipelined(
-            x[0], "data", stagger=s), xs, mesh)
-        assert a.tobytes() == b.tobytes(), f"pipelined ring stagger={stag}"
-    # and numerically correct on a ragged length (internal padding)
-    g = _run(lambda x: coll.allreduce_ring_pipelined(x[0][:97], "data"),
-             xs, mesh)
-    # data-axis groups are {0,1} and {2,3}; out_spec P(None) returns rank 0
-    want = np.asarray(xs[0][:97]) + np.asarray(xs[1][:97])
-    assert np.allclose(g, want, atol=1e-3), "pipelined ring ragged"
 
     # bucketed waves vs per-bucket plain rings: bitwise, same staggers
     B, S = 4, Z // 4
@@ -170,7 +159,7 @@ def check_arena_pipeline():
     assert a.tobytes() == b.tobytes(), "arena vs legacy fixed_tree bitwise"
 
     # every dense algorithm: arena path matches the fp64 oracle
-    for alg in ("ring", "ring_pipelined", "rhd", "fixed_tree",
+    for alg in ("ring", "rhd", "fixed_tree",
                 "two_level", "auto"):
         got = _run(lambda x, a=alg: reduce_with(x, algorithm=a, arena=True),
                    xs, mesh)
@@ -903,6 +892,178 @@ def check_sparse_densify():
     print(f"sparse_densify OK ({pod}x{data})")
 
 
+def check_chaos():
+    """PR 6: the lossy-fabric reliability layer (DESIGN.md §14).
+
+    Mesh-shape-parametric (``REPRO_MESH_SHAPE``): flat ``(1, 8)`` and
+    two-level ``(2, 4)`` topologies.  Verified on real tensors:
+      * dense fixed-tree under a surviving drop/duplicate/reorder/corrupt
+        plan ≡ the fault-free run **bitwise** — alone and composed with
+        the PR 5 adversarial arrival permutations;
+      * int8 and sparse planes hold the same bitwise anchor;
+      * the traced fault counters equal the plan's static schedule
+        counters exactly (the measured half of the perfmodel loss-rate
+        cross-check);
+      * engine end-to-end: a ``GradReducer`` with an injected lossy
+        fabric ≡ the fault-free reducer bitwise (reproducible mode);
+      * retry-budget exhaustion degrades ONLY the affected session: the
+        transport falls back to the wire (bitwise-equal in reproducible
+        mode), the ``SessionManager`` logs the eviction, and the other
+        tenant stays admitted.
+    """
+    from repro.runtime import SessionManager
+    from repro.switch import dataplane
+    from repro.switch import packets as pk
+
+    pod, data = _mesh_shape()
+    mesh = launch_mesh.make_fake_mesh((pod, data))
+    world = pod * data
+    fanins = [data, pod] if pod > 1 else [data]
+    rng = np.random.default_rng(71)
+
+    def run(fn, xs):
+        g = jax.jit(compat.shard_map(
+            fn, in_specs=(P(("pod", "data"), None),), out_specs=P(None),
+            axis_names={"pod", "data"}, check_vma=False))
+        with compat.set_mesh(mesh):
+            x = jax.device_put(xs, NamedSharding(mesh,
+                                                 P(("pod", "data"), None)))
+            return np.asarray(g(x))
+
+    def find_plan(counts, **kw):
+        """Deterministic seed search: the first plan that survives its
+        retry budget AND exercises retransmissions on these shapes."""
+        for seed in range(200):
+            plan = pk.FaultPlan(seed=seed, **kw)
+            scheds = [s for s in dataplane.fault_schedules(plan, counts)
+                      if s is not None]
+            if (dataplane.plan_survives(plan, counts)
+                    and sum(s.retransmits for s in scheds) > 0
+                    and sum(s.duplicates for s in scheds) > 0):
+                return plan
+        raise AssertionError(f"no surviving fault seed for {counts}")
+
+    B, S = 3, 64
+    xs = jnp.asarray((rng.normal(size=(world, B * S)) * 1e3)
+                     .astype(np.float32))
+    counts = dataplane.level_packet_counts(fanins, B, S, jnp.float32)
+    plan = find_plan(counts, drop=0.05, duplicate=0.3, reorder=0.5,
+                     corrupt=0.02)
+
+    # dense fixed tree: surviving faults leave the result bitwise equal,
+    # with and without adversarial arrival permutations on top
+    base = run(lambda x: dataplane.switch_allreduce_dense(
+        x[0].reshape(B, S), ("pod", "data"), reproducible=True), xs)
+    got = run(lambda x: dataplane.switch_allreduce_dense(
+        x[0].reshape(B, S), ("pod", "data"), reproducible=True,
+        fault_plan=plan), xs)
+    assert got.tobytes() == base.tobytes(), "faults changed dense bits"
+    perms = [np.stack([rng.permutation(p) for _ in range(B)], axis=1)
+             for p in fanins]
+    got = run(lambda x: dataplane.switch_allreduce_dense(
+        x[0].reshape(B, S), ("pod", "data"), reproducible=True,
+        fault_plan=plan, arrival_perms=perms), xs)
+    assert got.tobytes() == base.tobytes(), \
+        "faults + arrival permutation changed dense bits"
+
+    # traced counters ≡ the static schedule (per rank: every level's
+    # ingress replays its schedule once)
+    def stats_fn(x):
+        _, st = dataplane.switch_allreduce_dense(
+            x[0].reshape(B, S), ("pod", "data"), reproducible=True,
+            fault_plan=plan, with_fault_stats=True)
+        return jnp.stack([st["retransmits"], st["duplicates_dropped"],
+                          st["corrupt_rejected"], st["delivered"]]
+                         ).astype(jnp.float32)
+
+    st = run(stats_fn, xs).astype(int)
+    scheds = [s for s in dataplane.fault_schedules(plan, counts)
+              if s is not None]
+    want = (sum(s.retransmits for s in scheds),
+            sum(s.duplicates for s in scheds),
+            sum(s.corrupt_rejected for s in scheds),
+            sum(int(s.arrives.shape[1] * s.arrives.shape[2])
+                for s in scheds))
+    assert tuple(st) == want, f"traced fault counters {tuple(st)} != " \
+        f"static schedule {want}"
+
+    # int8 and sparse planes: same bitwise anchor under their own plans
+    c8 = dataplane.level_packet_counts(fanins, B, S, jnp.float32,
+                                       mode="int8", block=64)
+    p8 = find_plan(c8, drop=0.05, duplicate=0.3, reorder=0.5, corrupt=0.02)
+    a = run(lambda x: dataplane.switch_allreduce_int8(
+        x[0].reshape(B, S), ("pod", "data"), block=64), xs)
+    b = run(lambda x: dataplane.switch_allreduce_int8(
+        x[0].reshape(B, S), ("pod", "data"), block=64, fault_plan=p8), xs)
+    assert a.tobytes() == b.tobytes(), "faults changed int8 bits"
+
+    B2, S2, k = 2, 512, 32
+    xs_s = jnp.asarray(rng.normal(size=(world, B2 * S2)).astype(np.float32))
+    cs = dataplane.level_packet_counts(fanins, B2, S2, jnp.float32,
+                                       mode="sparse", k_max=k,
+                                       density_threshold=1.1)
+    ps = find_plan(cs, drop=0.05, duplicate=0.3, reorder=0.5, corrupt=0.02)
+    a = run(lambda x: dataplane.switch_allreduce_sparse(
+        x[0].reshape(B2, S2), ("pod", "data"), ks=k,
+        density_threshold=1.1)[0], xs_s)
+    b = run(lambda x: dataplane.switch_allreduce_sparse(
+        x[0].reshape(B2, S2), ("pod", "data"), ks=k,
+        density_threshold=1.1, fault_plan=ps)[0], xs_s)
+    assert a.tobytes() == b.tobytes(), "faults changed sparse bits"
+
+    # engine end-to-end: GradReducer over the lossy fabric.  A generous
+    # retry budget makes survival certain at any seed; reproducible mode
+    # pins the comparison to bitwise.
+    Z = 192
+    xs_e = jnp.asarray(rng.normal(size=(world, Z)).astype(np.float32))
+    gentle = pk.FaultPlan(seed=3, drop=0.03,
+                          retry=pk.RetryPolicy(max_retries=8))
+
+    def eng(x, kw):
+        g = {"a": x[0][:100], "b": x[0][100:164].reshape(8, 8),
+             "c": x[0][164:]}
+        r = GradReducer(FlareConfig(axes=("pod", "data"), bucket_bytes=256,
+                                    transport="innetwork", **kw))
+        red, _ = r(g, r.init_state(g))
+        return jnp.concatenate([red["a"], red["b"].reshape(-1), red["c"]])
+
+    clean = run(lambda x: eng(x, dict(reproducible=True)), xs_e)
+    lossy = run(lambda x: eng(x, dict(reproducible=True,
+                                      fault_plan=gentle)), xs_e)
+    assert clean.tobytes() == lossy.tobytes(), "engine fault bits"
+
+    # retry-budget exhaustion: ONLY the affected session degrades to the
+    # wire; the result stays bitwise (reproducible fixed tree, the PR 4
+    # wire-equality anchor) and the other tenant survives untouched
+    doomed = pk.FaultPlan(seed=0, drop=0.9,
+                          retry=pk.RetryPolicy(max_retries=0))
+    assert not dataplane.plan_survives(doomed, counts), \
+        "drop=0.9 with no retries should exhaust the budget"
+    mgr = SessionManager(("pod", "data"), (pod, data), seed=5)
+    mgr.open("victim", mode="dense", num_buckets=B, bucket_elems=S,
+             dtype=jnp.float32, reproducible=True)
+    mgr.open("bystander", mode="int8", num_buckets=B, bucket_elems=S,
+             dtype=jnp.float32)
+
+    def degrade(x):
+        t = transports.from_config(
+            FlareConfig(axes=("pod", "data"), transport="innetwork",
+                        reproducible=True, fault_plan=doomed),
+            jnp.float32, manager=mgr, tenant="victim")
+        red, _ = t(x[0].reshape(B, S), None, jnp.zeros((B,), jnp.int32),
+                   (S,) * B)
+        return red
+
+    got = run(degrade, xs)
+    assert got.tobytes() == base.tobytes(), "degraded session bits"
+    names = [s.tenant for s in mgr.active()]
+    assert "victim" not in names, "exhausted session must drain"
+    assert "bystander" in names, "other tenants must stay admitted"
+    assert ("victim", "retry budget exhausted") in mgr.evictions, \
+        mgr.evictions
+    print(f"chaos OK ({pod}x{data})")
+
+
 GROUPS = {
     "collectives": check_collectives,
     "arena_pipeline": check_arena_pipeline,
@@ -915,6 +1076,7 @@ GROUPS = {
     "switch": check_switch,
     "runtime": check_runtime,
     "sparse_densify": check_sparse_densify,
+    "chaos": check_chaos,
 }
 
 if __name__ == "__main__":

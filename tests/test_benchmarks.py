@@ -44,6 +44,14 @@ def test_run_quick_smoke():
     for n in (1, 2, 4):
         assert f"quick.runtime.tenants{n}.us_per_call" in names, names
     assert "quick.runtime.contention_x" in names, names
+    # PR 6: the reliability layer — fault-free overhead and a lossy run
+    # whose retry rate comes from the static fault schedule (> 0 by seed)
+    for mode in ("baseline", "reliable", "lossy"):
+        assert f"quick.chaos.{mode}.us_per_call" in names, names
+    assert "quick.chaos.overhead_x" in names, names
+    assert "quick.chaos.retry_rate" in names, names
+    retry = [l for l in rows if l.startswith("quick.chaos.retry_rate,")]
+    assert float(retry[0].split(",")[1]) > 0, retry
     # wall-clock values are positive microseconds
     for l in rows:
         assert float(l.split(",")[1]) > 0, l
@@ -89,3 +97,5 @@ def test_quick_expected_rows_cover_all_transports():
         assert f"quick.{t}.batched_speedup_x" in names
         assert f"quick.hier.{t}.speedup_x" in names
         assert f"quick.switch.{t}.overhead_x" in names
+    assert "quick.chaos.overhead_x" in names
+    assert "quick.chaos.retry_rate" in names

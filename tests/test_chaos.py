@@ -1,0 +1,276 @@
+"""Host-side tests for the lossy-fabric reliability layer (DESIGN.md §14).
+
+Everything here is single-device control-plane logic with fixed seeds —
+the fault plan's deterministic schedules, the perfmodel's loss terms
+cross-checked against them, session degradation bookkeeping, and the
+``--fault-rate`` CLI plumbing.  The data-plane bitwise anchors run in
+``tests/multidevice_checks.py`` group ``chaos`` (via
+``tests/test_collectives.py::test_multidevice_chaos``) and the
+``_reliable_ingress`` properties in ``tests/test_switch.py``.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.engine import FlareConfig
+from repro.ft import coordinator as ft
+from repro.perfmodel import switch_model as sm
+from repro.runtime import SessionManager
+from repro.runtime import scheduler as sc
+from repro.switch import dataplane
+from repro.switch import packets as pk
+
+pytestmark = pytest.mark.chaos
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: deterministic, seedable, validated.
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_deterministic():
+    """Same (plan, level, shapes) → bit-identical schedule; different
+    seeds or levels → (generically) different traces."""
+    a = pk.FaultPlan(seed=7, drop=0.1, duplicate=0.2, reorder=0.5,
+                     corrupt=0.05)
+    s1 = a.schedule(0, 8, 64)
+    s2 = a.schedule(0, 8, 64)
+    assert np.array_equal(s1.arrives, s2.arrives)
+    assert np.array_equal(s1.corrupt, s2.corrupt)
+    assert np.array_equal(s1.perms, s2.perms)
+    assert (s1.survives, s1.retransmits, s1.duplicates, s1.corrupt_rejected,
+            s1.wait_rounds) == (s2.survives, s2.retransmits, s2.duplicates,
+                                s2.corrupt_rejected, s2.wait_rounds)
+    s3 = a.schedule(1, 8, 64)
+    b = pk.FaultPlan(seed=8, drop=0.1, duplicate=0.2, reorder=0.5,
+                     corrupt=0.05)
+    s4 = b.schedule(0, 8, 64)
+    assert not np.array_equal(s1.arrives, s3.arrives)
+    assert not np.array_equal(s1.arrives, s4.arrives)
+
+
+def test_fault_plan_validation():
+    for bad in (dict(drop=-0.1), dict(drop=1.5), dict(duplicate=2.0),
+                dict(reorder=-1.0), dict(corrupt=1.01)):
+        with pytest.raises(ValueError):
+            pk.FaultPlan(**bad)
+    # levels filter: the plan only injects where it applies
+    plan = pk.FaultPlan(drop=0.5, levels=(1,))
+    assert not plan.applies(0) and plan.applies(1)
+    counts = [(4, 8), (2, 8)]
+    scheds = dataplane.fault_schedules(plan, counts)
+    assert scheds[0] is None and scheds[1] is not None
+    # an all-zero plan is the armed-but-clean fabric: one round, no loss
+    clean = pk.FaultPlan().schedule(0, 4, 16)
+    assert clean.rounds == 1 and clean.arrives.all()
+    assert clean.survives and clean.retransmits == 0
+    assert clean.duplicates == 0 and clean.corrupt_rejected == 0
+
+
+@given(st.integers(2, 10), st.integers(1, 200), st.floats(0.0, 0.3),
+       st.floats(0.0, 0.3), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_fault_schedule_invariants(p, n, drop, corrupt, seed):
+    """Structural invariants of any schedule: valid per-round child
+    permutations, round 0 attempts every packet, survival ⇔ every packet
+    gets ≥ 1 clean delivery, counters consistent with the masks."""
+    plan = pk.FaultPlan(seed=seed, drop=drop, corrupt=corrupt,
+                        duplicate=0.2, reorder=0.5)
+    s = plan.schedule(0, p, n)
+    assert s.arrives.shape == s.corrupt.shape == (s.rounds, p, n)
+    assert s.perms.shape == (s.rounds, p)
+    for r in range(s.rounds):
+        assert sorted(s.perms[r]) == list(range(p)), "not a permutation"
+    assert not (s.corrupt & ~s.arrives).any(), "corrupt ⊆ arrives"
+    clean = (s.arrives & ~s.corrupt)
+    assert s.survives == bool(clean.any(axis=0).all())
+    assert s.corrupt_rejected == int(s.corrupt.sum())
+    # retry budget bounds the rounds: first transmission + R retries
+    assert s.rounds <= plan.retry.max_retries + 1
+    if s.rounds > 1:
+        assert s.wait_rounds == sum(plan.retry.wait_rounds(r)
+                                    for r in range(1, s.rounds))
+
+
+def test_retry_policy_backoff():
+    rp = pk.RetryPolicy(timeout_rounds=4, max_retries=3, backoff=2.0)
+    assert [rp.wait_rounds(r) for r in (1, 2, 3)] == [4.0, 8.0, 16.0]
+
+
+# ---------------------------------------------------------------------------
+# Perfmodel loss terms ↔ the plan's measured (static-schedule) counters.
+# ---------------------------------------------------------------------------
+
+def test_loss_probability_composes():
+    assert sm.loss_probability(0.0, 0.0) == 0.0
+    assert sm.loss_probability(0.1, 0.0) == pytest.approx(0.1)
+    assert sm.loss_probability(0.0, 0.1) == pytest.approx(0.1)
+    # drop OR corrupt, independent
+    assert sm.loss_probability(0.1, 0.1) == pytest.approx(0.19)
+
+
+def test_model_lossy_limits():
+    pt = sm.model_lossy(0.0, 0.0, 1024)
+    assert (pt.q, pt.retransmits, pt.retry_rounds, pt.wait_rounds) \
+        == (0.0, 0.0, 0.0, 0.0)
+    assert pt.survival == 1.0
+    # monotone in the loss rate
+    a = sm.model_lossy(0.01, 0.0, 256)
+    b = sm.model_lossy(0.05, 0.0, 256)
+    assert b.retransmits > a.retransmits > 0
+    assert b.survival < a.survival < 1.0
+
+
+@pytest.mark.parametrize("drop,corrupt", [(0.02, 0.0), (0.05, 0.01)])
+def test_model_lossy_matches_measured_schedule_counters(drop, corrupt):
+    """The analytic loss terms agree with the *measured* retry counters
+    of the deterministic fault schedules — the same counters the traced
+    data plane accumulates (they are asserted equal bit for bit in the
+    multidevice ``chaos`` group), so this pins model ↔ emulator.  Many
+    packets + seed-averaging keep the sample near the expectation;
+    tolerances follow the existing ``test_switch.py`` style."""
+    p, n = 8, 512
+    plan0 = pk.FaultPlan(drop=drop, corrupt=corrupt)
+    pt = sm.model_lossy(drop, corrupt, p * n,
+                        max_retries=plan0.retry.max_retries,
+                        timeout_rounds=plan0.retry.timeout_rounds,
+                        backoff=plan0.retry.backoff)
+    seeds = range(8)
+    meas_retrans = meas_corrupt = meas_wait = survived = 0.0
+    for seed in seeds:
+        s = pk.FaultPlan(seed=seed, drop=drop, corrupt=corrupt
+                         ).schedule(0, p, n)
+        meas_retrans += s.retransmits / len(seeds)
+        meas_corrupt += s.corrupt_rejected / len(seeds)
+        meas_wait += s.wait_rounds / len(seeds)
+        survived += s.survives / len(seeds)
+    assert 0.5 * pt.retransmits < meas_retrans < 1.8 * pt.retransmits
+    if corrupt:
+        # corruption strikes per *attempt*: ≈ (first + retransmitted)
+        expect_cr = corrupt * (p * n + pt.retransmits)
+        assert 0.5 * expect_cr < meas_corrupt < 1.8 * expect_cr
+    assert meas_wait <= sum(
+        plan0.retry.wait_rounds(r)
+        for r in range(1, plan0.retry.max_retries + 1))
+    assert survived >= pt.survival - 0.25    # sample vs analytic P(all ok)
+
+
+# ---------------------------------------------------------------------------
+# Session degradation: evict bookkeeping, coordinator wiring, accounting.
+# ---------------------------------------------------------------------------
+
+def _manager():
+    m = SessionManager(("data",), (8,), seed=0)
+    m.open("a", mode="dense", num_buckets=2, bucket_elems=256,
+           dtype=jnp.float32, reproducible=True)
+    m.open("b", mode="int8", num_buckets=2, bucket_elems=256,
+           dtype=jnp.float32)
+    return m
+
+
+def test_evict_is_scoped_logged_and_idempotent():
+    m = _manager()
+    assert m.evict("a", reason="retry budget exhausted") is True
+    assert [s.tenant for s in m.active()] == ["b"]
+    assert m.evictions == [("a", "retry budget exhausted")]
+    # idempotent: a second evict (or an unknown tenant) is a no-op
+    assert m.evict("a") is False
+    assert m.evict("ghost") is False
+    assert len(m.evictions) == 1
+
+
+def test_recover_session_failure_none_safe():
+    assert ft.recover_session_failure(None, "a") is False
+    assert ft.recover_session_failure(_manager(), None) is False
+    m = _manager()
+    assert ft.recover_session_failure(m, "b") is True
+    assert ("b", "retry budget exhausted") in m.evictions
+
+
+def test_coordinator_session_failure_records():
+    c = ft.Coordinator(4, clock=lambda: 0.0)
+    m = _manager()
+    assert c.session_failure(m, "a") is True
+    assert c.failed_sessions == {"a"}
+    # repeated failure of a drained session records nothing new
+    assert c.session_failure(m, "a") is False
+    assert c.failed_sessions == {"a"}
+    # host/switch failure sets stay independent
+    assert c.failed == set() and c.failed_switches == set()
+
+
+def test_tenant_load_accounts_retransmits():
+    """Retransmissions are extra leaf service demand in both the
+    steady-state and the queued-backlog views — never extra combines."""
+    m = _manager()
+    s = m.session("a")
+    steady = sc.TenantLoad(s.tenant, s.counters, 1)
+    lossy = sc.TenantLoad(s.tenant, s.counters, 1, 0, None, 13)
+    assert lossy.leaf_packets == steady.leaf_packets + 13
+    assert lossy.combines == steady.combines
+    queued = sc.TenantLoad(s.tenant, s.counters, 1, queued=5,
+                           retransmit_packets=3)
+    assert queued.leaf_packets == 8
+
+
+def test_flare_config_validates_fault_plan():
+    plan = pk.FaultPlan(drop=0.01)
+    with pytest.raises(ValueError, match="innetwork"):
+        FlareConfig(axes=("data",), fault_plan=plan)
+    cfg = FlareConfig(axes=("data",), transport="innetwork",
+                      fault_plan=plan)
+    assert cfg.fault_plan is plan       # hashable → rides the frozen cfg
+    hash(cfg)
+
+
+def test_train_cli_fault_plan_helper():
+    import argparse
+
+    from repro.launch.train import _fault_plan
+
+    ns = argparse.Namespace(fault_rate=0.0, fault_seed=0,
+                            transport="auto", tenants=1)
+    assert _fault_plan(ns) is None
+    ns = argparse.Namespace(fault_rate=0.02, fault_seed=5,
+                            transport="innetwork", tenants=1)
+    plan = _fault_plan(ns)
+    assert plan == pk.FaultPlan(seed=5, drop=0.02)
+    with pytest.raises(SystemExit):
+        _fault_plan(argparse.Namespace(fault_rate=0.02, fault_seed=0,
+                                       transport="auto", tenants=1))
+
+
+# ---------------------------------------------------------------------------
+# Transport-layer survival pre-check (static, no devices needed).
+# ---------------------------------------------------------------------------
+
+def test_plan_survives_is_static_and_shape_keyed():
+    counts = dataplane.level_packet_counts([8], 4, 2048, jnp.float32)
+    assert dataplane.plan_survives(None, counts)
+    assert dataplane.plan_survives(pk.FaultPlan(), counts)
+    doomed = pk.FaultPlan(drop=0.9, retry=pk.RetryPolicy(max_retries=0))
+    assert not dataplane.plan_survives(doomed, counts)
+    # a generous budget recovers the same loss rate
+    patient = pk.FaultPlan(drop=0.9, retry=pk.RetryPolicy(max_retries=64))
+    assert dataplane.plan_survives(patient, counts)
+
+
+def test_level_packet_counts_modes():
+    fmt = dataplane.DEFAULT_FORMAT
+    b, s = 4, 2048
+    dense = dataplane.level_packet_counts([4, 2], b, s, jnp.float32)
+    assert dense == [(4, b * fmt.packets_per_block(s, jnp.float32)),
+                     (2, b * fmt.packets_per_block(s, jnp.float32))]
+    i8 = dataplane.level_packet_counts([4], b, 1000, jnp.float32,
+                                       mode="int8", block=256)
+    assert i8 == [(4, b * fmt.packets_per_block(1024, jnp.int8))]
+    sp = dataplane.level_packet_counts([4, 2], 2, 4096, jnp.float32,
+                                       mode="sparse", k_max=64,
+                                       density_threshold=1.1)
+    # packed (idx, val) lists double the capacity; cap grows by fanin
+    assert sp[0][1] == 2 * fmt.packets_per_block(2 * 64, jnp.int32)
+    assert sp[1][1] == 2 * fmt.packets_per_block(2 * 64 * 4, jnp.int32)
+    with pytest.raises(ValueError):
+        dataplane.level_packet_counts([4], 2, 64, jnp.float32,
+                                      mode="sparse")

@@ -56,3 +56,16 @@ def test_multidevice_runtime(mesh_shape):
     model ↔ scheduler cross-check — under both mesh shapes."""
     out = _run_group("runtime", mesh_shape=mesh_shape)
     assert "OK" in out
+
+
+@pytest.mark.chaos
+def test_multidevice_chaos(mesh_shape):
+    """The lossy-fabric reliability layer (PR 6, DESIGN.md §14): dense /
+    int8 / sparse planes under deterministic drop + duplicate + reorder +
+    corrupt injection stay bitwise-equal to the fault-free run while the
+    retry budget holds; traced retry counters equal the static schedule;
+    budget exhaustion degrades only the affected session to the wire —
+    under both mesh shapes.  All fault seeds are fixed (deterministic
+    seed search inside the check)."""
+    out = _run_group("chaos", mesh_shape=mesh_shape)
+    assert "OK" in out

@@ -110,6 +110,58 @@ def test_straggler_report():
     assert straggler_report({}) == []
 
 
+def test_heartbeat_expiry_to_eviction_to_remesh():
+    """The full timeout chain, clock injected per call (``now=``) so no
+    instance clock mutation and no sleeps: heartbeats age out →
+    ``check()`` evicts → ``plan_remesh`` excludes the evicted hosts and
+    shrinks the data axis to the surviving power of two."""
+    c = Coordinator(8, timeout_s=5, clock=lambda: 0.0)
+    # hosts 0..5 stay live at t=8; 6 and 7 go silent after t=0
+    for h in range(6):
+        c.heartbeat(h, now=8.0)
+    assert c.check(now=4.0) == set()          # nobody has aged out yet
+    assert c.check(now=12.0) == {6, 7}
+    # per-call now does not disturb the instance clock
+    assert c.clock() == 0.0
+    plan = c.plan(model=4)
+    assert set(plan.survivors) == {0, 1, 2, 3}     # floor pow2 of 6
+    assert plan.dropped_hosts == (4, 5)            # healthy but idled
+    assert plan.new_data == 4 and plan.world == 4
+    assert not ({6, 7} & set(plan.survivors))
+    # admit() with now= restores liveness under the same virtual clock
+    c.admit(6, now=12.0)
+    assert c.check(now=12.0) == {7}
+
+
+def test_straggler_report_edge_cases():
+    # empty report: no hosts → no stragglers (median of nothing)
+    assert straggler_report({}) == []
+    # single host: it IS the median; it can never exceed factor × itself
+    assert straggler_report({0: 100.0}) == []
+    # all hosts equally slow: uniform times are never straggling
+    assert straggler_report({h: 42.0 for h in range(6)}) == []
+    # all-stragglers-but-one is really one fast host: with an even count
+    # the upper median absorbs the slow majority, so nobody is flagged —
+    # straggling is relative to the cohort, not to the fastest host
+    times = {0: 1.0, 1: 9.0, 2: 9.0, 3: 9.0}
+    assert straggler_report(times) == []
+    # zero median (all idle) flags any host with positive elapsed time
+    assert straggler_report({0: 0.0, 1: 0.0, 2: 0.5}) == [2]
+    # factor knob
+    assert straggler_report({0: 1.0, 1: 1.0, 2: 2.5}, factor=2.0) == [2]
+    assert straggler_report({0: 1.0, 1: 1.0, 2: 2.5}, factor=3.0) == []
+
+
+def test_coordinator_straggler_report_injectable_clock():
+    """The clocked wrapper derives elapsed = now − step_start per host
+    and delegates to the pure report — deterministic via ``now=``."""
+    c = Coordinator(4, clock=lambda: 0.0)
+    starts = {0: 10.0, 1: 10.0, 2: 10.0, 3: 2.0}   # host 3 started early
+    assert c.straggler_report(starts, now=11.0) == [3]
+    assert c.straggler_report(starts, now=11.0, factor=10.0) == []
+    assert c.straggler_report({}, now=11.0) == []
+
+
 # ---------------------------------------------------------------------------
 # Switch failure → network-manager reroute → runtime drain/re-admit (§4).
 # ---------------------------------------------------------------------------

@@ -310,6 +310,88 @@ def test_sparse_densify_on_overflow_bitwise(mesh_shape):
     assert "OK" in r.stdout
 
 
+# ---------------------------------------------------------------------------
+# Reliability layer (PR 6): exactly-once ingress under any surviving plan.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 8), st.integers(1, 2), st.integers(1, 100),
+       st.sampled_from(("float32", "int32", "int8")),
+       st.floats(0.0, 0.15), st.floats(0.0, 0.4), st.floats(0.0, 0.6),
+       st.floats(0.0, 0.08), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_reliable_ingress_bitwise_under_any_surviving_plan(
+        p, b, s, dtype, drop, dup, reorder, corrupt, seed):
+    """DESIGN.md §14 as a property: for ANY fault plan whose retries
+    succeed within the budget, the reliability layer reconstructs the
+    clean canonical child stack bit for bit — drops are retransmitted,
+    duplicate deliveries are admitted at most once (the seen-bitmap:
+    they can never double-count), corrupted deliveries are rejected by
+    the payload checksum, and reordered streams are steered back by the
+    CHILD header.  The traced counters equal the static schedule
+    exactly; a plan past the budget must refuse at trace time."""
+    rng = np.random.default_rng(seed)
+    fmt = pk.PacketFormat(mtu_bytes=64)
+    arenas = [_random_arena(rng, b, s, dtype) for _ in range(p)]
+    streams = [pk.packetize(a, fmt, child_rank=c)
+               for c, a in enumerate(arenas)]
+    payload = jnp.stack([st_.payload for st_ in streams])
+    headers = jnp.stack([st_.headers for st_ in streams])
+    n = payload.shape[1]
+    plan = pk.FaultPlan(seed=seed, drop=drop, duplicate=dup,
+                        reorder=reorder, corrupt=corrupt)
+    sched = plan.schedule(0, p, n)
+    stats = dataplane._new_fault_stats()
+    if not sched.survives:
+        with pytest.raises(dataplane.FaultBudgetExceeded):
+            dataplane._reliable_ingress(payload, headers, sched, stats)
+        return
+    got, got_hdr = dataplane._reliable_ingress(payload, headers, sched,
+                                               stats)
+    assert np.asarray(got).tobytes() == np.asarray(payload).tobytes(), \
+        f"surviving plan changed bits: P={p} B={b} S={s} {dtype}"
+    assert np.asarray(got_hdr).tobytes() == np.asarray(headers).tobytes()
+    assert int(stats["retransmits"]) == sched.retransmits
+    assert int(stats["duplicates_dropped"]) == sched.duplicates
+    assert int(stats["corrupt_rejected"]) == sched.corrupt_rejected
+    assert int(stats["delivered"]) == p * n
+
+
+@given(st.integers(2, 6), st.integers(1, 120), st.floats(0.0, 0.1),
+       st.floats(0.0, 0.3), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_reliable_ingress_sideband_fate_shares(p, s, drop, corrupt, seed):
+    """The int8 plane's scales sideband rides the checksummed ``q``
+    stream's accept mask (headers steer both): any surviving plan
+    restores *both* leaves of the payload pytree bitwise."""
+    rng = np.random.default_rng(seed)
+    fmt = pk.PacketFormat(mtu_bytes=64)
+    e = fmt.payload_elems(jnp.int8)
+    sfmt = pk.PacketFormat(mtu_bytes=4)          # one fp32 scale per packet
+    qs, ss_ = [], []
+    for c in range(p):
+        q = _random_arena(rng, 1, s, "int8")
+        sc = jnp.asarray(rng.normal(size=(1, -(-s // e)))
+                         .astype(np.float32))
+        qs.append(pk.packetize(q, fmt, child_rank=c))
+        ss_.append(pk.packetize(sc, sfmt, child_rank=c))
+    payload = {"q": jnp.stack([t.payload for t in qs]),
+               "scale": jnp.stack([t.payload for t in ss_])}
+    headers = jnp.stack([t.headers for t in qs])
+    n = payload["q"].shape[1]
+    assert payload["scale"].shape[1] == n        # sideband packet-aligned
+    plan = pk.FaultPlan(seed=seed, drop=drop, corrupt=corrupt)
+    sched = plan.schedule(0, p, n)
+    stats = dataplane._new_fault_stats()
+    if not sched.survives:
+        with pytest.raises(dataplane.FaultBudgetExceeded):
+            dataplane._reliable_ingress(payload, headers, sched, stats)
+        return
+    got, _ = dataplane._reliable_ingress(payload, headers, sched, stats)
+    for key in ("q", "scale"):
+        assert np.asarray(got[key]).tobytes() == \
+            np.asarray(payload[key]).tobytes(), key
+
+
 def test_single_buffer_fold_is_order_sensitive_but_tree_is_not():
     """Sanity for the reproducibility story: the contended single buffer
     (§6.1) folds in arrival order — permuting arrivals may change bits —
