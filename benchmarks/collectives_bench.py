@@ -167,13 +167,15 @@ with compat.set_mesh(mesh24):
         print(f"transports.{name}.hier_speedup_x,"
               f"{ts['flat']/ts['hier']:.2f},flat/hier_2x4mesh")
 
-# --- emulated switch data plane vs flat wire transport (PR 4) --------------
+# --- emulated switch data plane vs flat wire transport (PR 4, PR 7) --------
 # FlareConfig(transport="innetwork") reduces the arena through the
 # packetized sPIN-handler emulation (repro/switch) instead of the wire
 # collectives.  The emulator is a *fidelity* artifact — it pays host-side
 # packet framing plus SPMD-masked aggregation on every rank — so the
 # tracked number is its overhead factor over the flat wire schedule per
-# handler type, not a speedup claim.
+# handler type, not a speedup claim.  ``slotloop`` is the per-slot
+# bitwise-oracle schedule (``batched=False``); ``batched_x`` is the
+# batched data plane's speedup over it.
 B, S = 4, 1 << 14
 arena = jnp.asarray(rng.normal(size=(B, S)).astype(np.float32))
 exts = (S,) * B
@@ -183,10 +185,12 @@ with compat.set_mesh(mesh8):
                      ("sparse", dict(sparse_k_frac=0.01)),
                      ("int8", dict(compression="int8"))]:
         ts = {}
-        for mode, extra in [("flat", dict()),
-                            ("innetwork", dict(transport="innetwork"))]:
+        for mode, extra, batched in [
+                ("flat", dict(), True),
+                ("innetwork", dict(transport="innetwork"), True),
+                ("slotloop", dict(transport="innetwork"), False)]:
             cfg = FlareConfig(axes=("data",), **kw, **extra)
-            t = transports.from_config(cfg, jnp.float32, batched=True)
+            t = transports.from_config(cfg, jnp.float32, batched=batched)
             fn = jax.jit(compat.shard_map(
                 lambda a, t=t: t(a, jnp.zeros_like(a),
                                  jnp.zeros((B,), jnp.int32), exts)[0],
@@ -197,6 +201,8 @@ with compat.set_mesh(mesh8):
                   f"{ts[mode]*1e6:.0f},8dev_cpu_B{B}xS{S}")
         print(f"transports.switch.{name}.overhead_x,"
               f"{ts['innetwork']/ts['flat']:.2f},innetwork/flat")
+        print(f"transports.switch.{name}.batched_x,"
+              f"{ts['slotloop']/ts['innetwork']:.2f},slotloop/batched")
 
 # --- multi-tenant switch runtime: contention overhead (PR 5) ---------------
 # the measured tenant (dense, reproducible fixed-tree) reduces through the
@@ -353,19 +359,22 @@ with compat.set_mesh(mesh24):
         print(f"quick.hier.{name}.speedup_x,"
               f"{ts['flat']/ts['hier']:.2f},flat/hier_2x4mesh")
 
-# emulated switch data plane vs flat wire transport (PR 4), tiny shapes —
-# keeps FlareConfig(transport="innetwork") + the repro/switch packet/
-# handler plumbing under the tier-1 smoke gate for every handler type
+# emulated switch data plane vs flat wire transport (PR 4, PR 7), tiny
+# shapes — keeps FlareConfig(transport="innetwork") + the repro/switch
+# packet/handler plumbing under the tier-1 smoke gate for every handler
+# type, in both the batched plane and the slot-loop oracle schedule
 with compat.set_mesh(mesh8):
     ad = jax.device_put(arena, NamedSharding(mesh8, P()))
     for name, kw in [("dense", dict()),
                      ("sparse", dict(sparse_k_frac=0.01)),
                      ("int8", dict(compression="int8"))]:
         ts = {}
-        for mode, extra in [("flat", dict()),
-                            ("innetwork", dict(transport="innetwork"))]:
+        for mode, extra, batched in [
+                ("flat", dict(), True),
+                ("innetwork", dict(transport="innetwork"), True),
+                ("slotloop", dict(transport="innetwork"), False)]:
             cfg = FlareConfig(axes=("data",), **kw, **extra)
-            t = transports.from_config(cfg, jnp.float32, batched=True)
+            t = transports.from_config(cfg, jnp.float32, batched=batched)
             fn = jax.jit(compat.shard_map(
                 lambda a, t=t: t(a, jnp.zeros_like(a),
                                  jnp.zeros((B,), jnp.int32), exts)[0],
@@ -376,6 +385,8 @@ with compat.set_mesh(mesh8):
                   f"{ts[mode]*1e6:.0f},8dev_cpu_B{B}xS{S}")
         print(f"quick.switch.{name}.overhead_x,"
               f"{ts['innetwork']/ts['flat']:.2f},innetwork/flat")
+        print(f"quick.switch.{name}.batched_x,"
+              f"{ts['slotloop']/ts['innetwork']:.2f},slotloop/batched")
 
 # multi-tenant switch runtime (PR 5): the measured tenant reduces through
 # the shared emulated switch while 0/1/3 contending sessions are admitted
@@ -487,8 +498,10 @@ QUICK_EXPECTED_ROWS = frozenset(
        for t in ("dense", "sparse", "int8") for m in ("flat", "hier")]
     + [f"quick.hier.{t}.speedup_x" for t in ("dense", "sparse", "int8")]
     + [f"quick.switch.{t}.{m}.us_per_call"
-       for t in ("dense", "sparse", "int8") for m in ("flat", "innetwork")]
+       for t in ("dense", "sparse", "int8")
+       for m in ("flat", "innetwork", "slotloop")]
     + [f"quick.switch.{t}.overhead_x" for t in ("dense", "sparse", "int8")]
+    + [f"quick.switch.{t}.batched_x" for t in ("dense", "sparse", "int8")]
     + [f"quick.runtime.tenants{n}.us_per_call" for n in (1, 2, 4)]
     + ["quick.runtime.contention_x"]
     + [f"quick.chaos.{n}.us_per_call"

@@ -312,9 +312,14 @@ class SwitchTransport(Transport):
     ``reproducible`` pins the fixed-tree handler (always tree
     aggregation, §6.4).
 
-    The schedule is inherently tree-driven — the ``hierarchical`` and
-    ``batched`` knobs of the wire transports don't apply (packets carry
-    their block id, so B buckets always share the wire).
+    The schedule is inherently tree-driven — the ``hierarchical`` knob
+    of the wire transports doesn't apply (packets carry their block id,
+    so B buckets always share the wire).  ``batched`` (inherited from
+    :class:`Transport`, default True) picks the data-plane schedule:
+    the batched plane runs each tree level as a few collectives +
+    slot-axis kernels over the packed packet tensor, ``batched=False``
+    keeps the per-slot/per-hop loop as the bitwise oracle — the two are
+    cross-checked bit for bit in the multidevice ``switch`` group.
     """
 
     mode: str = "dense"             # dense | int8 | sparse
@@ -402,7 +407,7 @@ class SwitchTransport(Transport):
                 buf, self.axes, reproducible=self.reproducible,
                 design=self.design,
                 arrival_perms=self._session_perms(buf),
-                fault_plan=self.fault_plan)
+                fault_plan=self.fault_plan, batched=self.batched)
             if self.mean:
                 red = red / self._world()
             return red, (jnp.zeros_like(ef) if ef is not None else None)
@@ -415,7 +420,8 @@ class SwitchTransport(Transport):
             def transmit(v):
                 red = dataplane.switch_allreduce_int8(
                     v, self.axes, block=self.block, design=self.design,
-                    arrival_perms=perms, fault_plan=self.fault_plan)
+                    arrival_perms=perms, fault_plan=self.fault_plan,
+                    batched=self.batched)
                 return red, compression.quantize_roundtrip(v, self.block)
         elif self.mode == "sparse":
             perms = self._session_perms(buf, k=max(ks))
@@ -424,7 +430,8 @@ class SwitchTransport(Transport):
                 return dataplane.switch_allreduce_sparse(
                     v, self.axes, ks,
                     density_threshold=self.density_threshold,
-                    arrival_perms=perms, fault_plan=self.fault_plan)
+                    arrival_perms=perms, fault_plan=self.fault_plan,
+                    batched=self.batched)
         else:
             raise ValueError(f"unknown switch transport mode {self.mode!r}")
         red, ef_out = compression.error_feedback_step(buf, ef, transmit)
@@ -434,20 +441,24 @@ class SwitchTransport(Transport):
 
 
 def _switch_from_config(config, dtype, is_float: bool, *,
+                        batched: bool = True,
                         manager=None, tenant=None) -> SwitchTransport:
     axes = tuple(config.axes)
     fault_plan = getattr(config, "fault_plan", None)
     if config.sparse_k_frac > 0 and is_float:
-        return SwitchTransport(axes, mean=config.mean, mode="sparse",
+        return SwitchTransport(axes, mean=config.mean, batched=batched,
+                               mode="sparse",
                                k_frac=config.sparse_k_frac,
                                density_threshold=config.density_threshold,
                                manager=manager, tenant=tenant,
                                fault_plan=fault_plan)
     if config.compression == "int8" and is_float:
-        return SwitchTransport(axes, mean=config.mean, mode="int8",
+        return SwitchTransport(axes, mean=config.mean, batched=batched,
+                               mode="int8",
                                manager=manager, tenant=tenant,
                                fault_plan=fault_plan)
-    return SwitchTransport(axes, mean=config.mean, mode="dense",
+    return SwitchTransport(axes, mean=config.mean, batched=batched,
+                           mode="dense",
                            reproducible=config.reproducible,
                            manager=manager, tenant=tenant,
                            fault_plan=fault_plan)
@@ -475,7 +486,7 @@ def from_config(config, dtype, *, batched: bool = True,
     hierarchical = getattr(config, "hierarchical", None)
     is_float = jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
     if getattr(config, "transport", "auto") == "innetwork":
-        return _switch_from_config(config, dtype, is_float,
+        return _switch_from_config(config, dtype, is_float, batched=batched,
                                    manager=manager, tenant=tenant)
     if manager is not None:
         raise ValueError(

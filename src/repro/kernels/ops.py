@@ -47,6 +47,33 @@ def tree_reduce(x: jax.Array, tile_n: int = 2048,
     return _tr.tree_reduce(x, tile_n=tile, accum_dtype=accum_dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("tile_e", "accum_dtype"))
+def tree_reduce_slots(x: jax.Array, tile_e: int | None = None,
+                      accum_dtype=None) -> jax.Array:
+    """Fixed-tree reduce of a packed (P, S, E) slot stack over axis 0.
+
+    Slot-axis companion to :func:`tree_reduce` for the batched switch
+    data plane (pads P to pow2 with zero children — absorbing under +).
+
+    Off-TPU the interpreted Pallas grid costs more than the fold it
+    runs, and the pure-jnp oracle executes the *same* aligned-pair add
+    sequence (bitwise identical — pinned in ``tests/test_kernels.py``),
+    so dispatch follows the backend.
+    """
+    p, s, e = x.shape
+    if accum_dtype is None:
+        accum_dtype = (jnp.float32 if jnp.issubdtype(x.dtype, jnp.floating)
+                       else x.dtype)
+    pp = 1 << max(0, (p - 1).bit_length())
+    if pp != p:
+        x = jnp.concatenate([x, jnp.zeros((pp - p, s, e), x.dtype)])
+    if jax.default_backend() != "tpu":
+        return _ref.tree_reduce(x, accum_dtype=accum_dtype)
+    tile_s = 64 if s % 64 == 0 else (8 if s % 8 == 0 else 1)
+    return _tr.tree_reduce_slots(x, tile_s=tile_s, tile_e=tile_e,
+                                 accum_dtype=accum_dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("qblock",))
 def quantize(x: jax.Array, qblock: int = 256):
     n = x.shape[0]
@@ -85,6 +112,23 @@ def dequant_accum(q: jax.Array, scales: jax.Array,
     return _quant.dequant_accum(q, scales, qblock=qblock, tile_b=tile_b)
 
 
+@functools.partial(jax.jit, static_argnames=("qblock",))
+def dequant_accum_slots(q: jax.Array, scales: jax.Array,
+                        qblock: int = 256) -> jax.Array:
+    """Fused dequant + fold of a (P, S, E) slot stack → (S, E) fp32.
+
+    Batched-switch companion to :func:`dequant_accum`: the scales
+    sideband is packed per slot as ``(P, S, E // qblock)``.
+    """
+    p, s, e = q.shape
+    if e % qblock:
+        # same contract as dequant_accum: the caller owns the per-slot
+        # scales layout, so a ragged E means the scales shape is wrong
+        raise ValueError(f"dequant_accum_slots: E={e} % qblock={qblock} != 0")
+    tile_s = 64 if s % 64 == 0 else (8 if s % 8 == 0 else 1)
+    return _quant.dequant_accum_slots(q, scales, qblock=qblock, tile_s=tile_s)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "block"))
 def topk_compact(x: jax.Array, k: int, block: int = 512):
     """Per-block magnitude top-k → (values, local indices), -1 padded."""
@@ -109,6 +153,30 @@ def sparse_accum(idx: jax.Array, val: jax.Array, size: int,
         return _ref.sparse_accum(idx, val, size, out_dtype)
     return _sa.sparse_accum(idx, val, size, tile_z=tile_z, tile_e=tile_e,
                             out_dtype=out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("size", "out_dtype"))
+def sparse_accum_slots(idx: jax.Array, val: jax.Array, size: int,
+                       out_dtype=jnp.float32) -> jax.Array:
+    """Batched scatter-add: (B, E) bucket-local lists → (B, size) buffers.
+
+    The batched switch root's densify step — one kernel over all buckets
+    instead of a per-bucket scatter.  Sentinel (<0) entries drop.
+
+    The one-hot-matmul kernel is an MXU trick: it beats indirect writes
+    only where indirect writes are expensive (TPU).  Off-TPU the
+    interpreted grid loops a tiny matmul thousands of times while the
+    backend has a perfectly good native scatter, so dispatch follows the
+    backend, not just the tiling.
+    """
+    b, e = idx.shape
+    tile_z = 2048 if size % 2048 == 0 else (256 if size % 256 == 0 else 0)
+    tile_e = 512 if e % 512 == 0 else (64 if e % 64 == 0 else (8 if e % 8 == 0
+                                                               else 0))
+    if jax.default_backend() != "tpu" or not tile_z or not tile_e:
+        return _ref.sparse_accum_slots(idx, val, size, out_dtype)
+    return _sa.sparse_accum_slots(idx, val, size, tile_z=tile_z,
+                                  tile_e=tile_e, out_dtype=out_dtype)
 
 
 def blockwise_sparsify(x: jax.Array, k: int, block: int = 512):

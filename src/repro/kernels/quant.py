@@ -108,6 +108,54 @@ def dequant_accum(q: jax.Array, scales: jax.Array, *, qblock: int = 256,
     return out.reshape(n)
 
 
+def _dequant_accum_slots_kernel(q_ref, s_ref, o_ref, *, qblock):
+    q = q_ref[...]                                        # (P, TILE_S, E)
+    s = s_ref[...]                                        # (P, TILE_S, E/qblock)
+    p, ts, e = q.shape
+    nb = e // qblock
+    # same sequential stack-order fold as _dequant_accum_kernel, with the
+    # packet-slot axis kept: each slot row carries nb quantization blocks.
+    acc = (q[0].astype(jnp.float32).reshape(ts, nb, qblock)
+           * s[0][..., None])
+    for i in range(1, p):
+        acc = acc + (q[i].astype(jnp.float32).reshape(ts, nb, qblock)
+                     * s[i][..., None])
+    o_ref[...] = acc.reshape(ts, e)
+
+
+def dequant_accum_slots(q: jax.Array, scales: jax.Array, *,
+                        qblock: int = 256, tile_s: int = 64,
+                        interpret: bool | None = None) -> jax.Array:
+    """Fused dequantize + accumulate of a packed (P, S, E) int8 slot stack.
+
+    Slot-axis variant of :func:`dequant_accum` for the batched switch
+    data plane: P children's packet stacks (S slots × E payload elems,
+    with per-``qblock`` fp32 scales of shape ``(P, S, E // qblock)``)
+    fold into one (S, E) fp32 buffer in stack order.  Bitwise-identical
+    to flattening slots into one row — the fold is elementwise over
+    (slot, elem) with the same per-element child order.
+    """
+    p, s, e = q.shape
+    if e % qblock:
+        raise ValueError(f"dequant_accum_slots: E={e} % qblock={qblock} != 0")
+    tile_s = min(tile_s, s)
+    if s % tile_s:
+        raise ValueError(
+            f"dequant_accum_slots: S={s} % tile_s={tile_s} != 0")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kernel = functools.partial(_dequant_accum_slots_kernel, qblock=qblock)
+    return pl.pallas_call(
+        kernel,
+        grid=(s // tile_s,),
+        in_specs=[pl.BlockSpec((p, tile_s, e), lambda i: (0, i, 0)),
+                  pl.BlockSpec((p, tile_s, e // qblock), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((tile_s, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, e), jnp.float32),
+        interpret=interpret,
+    )(q, scales)
+
+
 def dequantize(q: jax.Array, scales: jax.Array, *, qblock: int = 256,
                tile_b: int = 64, out_dtype=jnp.float32,
                interpret: bool | None = None) -> jax.Array:

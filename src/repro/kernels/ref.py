@@ -45,6 +45,18 @@ def dequant_accum(q: jax.Array, scales: jax.Array,
     return acc
 
 
+def dequant_accum_slots(q: jax.Array, scales: jax.Array,
+                        qblock: int = 256) -> jax.Array:
+    """Sequential dequantize-and-fold of a (P, S, E) int8 slot stack."""
+    p, s, e = q.shape
+    nb = e // qblock
+    qf = q.astype(jnp.float32).reshape(p, s, nb, qblock)
+    acc = qf[0] * scales[0][..., None]
+    for i in range(1, p):
+        acc = acc + qf[i] * scales[i][..., None]
+    return acc.reshape(s, e)
+
+
 def topk_compact(x: jax.Array, k: int, block: int = 512, n_iter: int = 24):
     """Same bisection + prefix-compaction algorithm, in plain jnp."""
     n = x.shape[0]
@@ -97,3 +109,9 @@ def sparse_accum(idx: jax.Array, val: jax.Array, size: int,
     idx = jnp.where(idx < 0, size, idx)
     out = jnp.zeros((size,), out_dtype)
     return out.at[idx].add(val.astype(out_dtype), mode="drop")
+
+
+def sparse_accum_slots(idx: jax.Array, val: jax.Array, size: int,
+                       out_dtype=jnp.float32) -> jax.Array:
+    """Per-bucket scatter-add: (B, E) bucket-local lists → (B, size)."""
+    return jax.vmap(lambda i, v: sparse_accum(i, v, size, out_dtype))(idx, val)

@@ -74,3 +74,58 @@ def sparse_accum(idx: jax.Array, val: jax.Array, size: int, *,
         interpret=interpret,
     )(idx, val)
     return out
+
+
+def _sparse_accum_slots_kernel(idx_ref, val_ref, o_ref, *, tile_z):
+    zt = pl.program_id(1)
+    et = pl.program_id(2)
+    idx = idx_ref[...][0]                         # (TILE_E,) int32, bucket-local
+    val = val_ref[...][0].astype(jnp.float32)     # (TILE_E,)
+    z_lo = zt * tile_z
+    local = idx - z_lo
+    e = idx.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (e, tile_z), 1)
+    onehot = (cols == local[:, None]).astype(jnp.float32)   # OOB rows all-zero
+    contrib = val[None, :] @ onehot               # (1, TILE_Z) on the MXU
+
+    @pl.when(et == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += contrib.astype(o_ref.dtype)
+
+
+def sparse_accum_slots(idx: jax.Array, val: jax.Array, size: int, *,
+                       tile_z: int = 2048, tile_e: int = 512,
+                       out_dtype=jnp.float32,
+                       interpret: bool | None = None) -> jax.Array:
+    """Batched ``sparse_accum``: (B, E) coordinate lists → (B, size) buffers.
+
+    The batched switch root densifies every bucket's merged coordinate
+    list in one call instead of one scatter per bucket.  Indices are
+    bucket-local (``0 ≤ idx < size``; out-of-range/sentinel entries drop).
+    Grid is (buckets × dense tiles × entry tiles) with the entry axis
+    innermost, so each (bucket, dense-tile) output block accumulates its
+    entry tiles in order — the same entry-major order as the per-bucket
+    kernel, hence identical bits per bucket.
+    """
+    b, e = idx.shape
+    if size % tile_z:
+        raise ValueError(
+            f"sparse_accum_slots: size={size} % tile_z={tile_z} != 0")
+    tile_e = min(tile_e, e)
+    if e % tile_e:
+        raise ValueError(
+            f"sparse_accum_slots: entries={e} % tile_e={tile_e} != 0")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kernel = functools.partial(_sparse_accum_slots_kernel, tile_z=tile_z)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, size // tile_z, e // tile_e),
+        in_specs=[pl.BlockSpec((1, tile_e), lambda i, z, t: (i, t)),
+                  pl.BlockSpec((1, tile_e), lambda i, z, t: (i, t))],
+        out_specs=pl.BlockSpec((1, tile_z), lambda i, z, t: (i, z)),
+        out_shape=jax.ShapeDtypeStruct((b, size), out_dtype),
+        interpret=interpret,
+    )(idx, val)

@@ -61,3 +61,48 @@ def tree_reduce(x: jax.Array, *, tile_n: int = 2048,
         out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
         interpret=interpret,
     )(x)
+
+
+def _tree_reduce_slots_kernel(x_ref, o_ref, *, accum_dtype):
+    x = x_ref[...].astype(accum_dtype)          # (P, TILE_S, TILE_E)
+    p = x.shape[0]
+    while p > 1:                                 # static unroll: log2(P) levels
+        x = x.reshape(p // 2, 2, *x.shape[1:])
+        x = x[:, 0] + x[:, 1]                    # aligned pairs (2i, 2i+1)
+        p //= 2
+    o_ref[...] = x[0].astype(o_ref.dtype)
+
+
+def tree_reduce_slots(x: jax.Array, *, tile_s: int = 64,
+                      tile_e: int | None = None,
+                      accum_dtype=jnp.float32,
+                      interpret: bool | None = None) -> jax.Array:
+    """Reduce a packed (P, S, E) packet-slot stack over axis 0.
+
+    The batched switch data plane's fold: ``S`` packet slots of ``E``
+    payload elements each, combined per element in the same aligned
+    binary tree as :func:`tree_reduce` (the combine is elementwise, so
+    the slot split never changes bits vs reducing the flattened
+    ``(P, S·E)`` stack).  Grid over slot tiles × element tiles; each
+    instance holds a ``(P, TILE_S, TILE_E)`` block in VMEM.
+    """
+    p, s, e = x.shape
+    if p & (p - 1):
+        raise ValueError(f"tree_reduce_slots: P={p} must be a power of two")
+    if s % tile_s:
+        raise ValueError(f"tree_reduce_slots: S={s} % tile_s={tile_s} != 0")
+    tile_e = e if tile_e is None else tile_e
+    if e % tile_e:
+        raise ValueError(f"tree_reduce_slots: E={e} % tile_e={tile_e} != 0")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kernel = functools.partial(_tree_reduce_slots_kernel,
+                               accum_dtype=accum_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(s // tile_s, e // tile_e),
+        in_specs=[pl.BlockSpec((p, tile_s, tile_e), lambda i, j: (0, i, j))],
+        out_specs=pl.BlockSpec((tile_s, tile_e), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, e), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -161,6 +161,121 @@ def _apply_arrival(stack: Any, headers: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Batched wire primitives (DESIGN.md §12): whole-stack ingress + row-pick
+# multicast.  The slot-loop path above realizes the same data movement as
+# P−1 ring hops / log P binomial hops; these express it as one collective
+# per level, which is what closes the emulator's overhead gap.
+# ---------------------------------------------------------------------------
+
+def _all_gather_stack(leaf: jax.Array, axis: str) -> jax.Array:
+    """Child-stacked ingress in one collective: ``(n, ...)`` →
+    ``(P, n, ...)`` with slot ``c`` = child ``c``'s copy — bitwise the
+    same stack ``_gather_children`` assembles from P−1 ring hops."""
+    return lax.all_gather(leaf, axis, axis=0, tiled=False)
+
+
+def _multicast_root(tree: Any, levels: Sequence[topology.MeshLevel]) -> Any:
+    """Root multicast down every level in one collective per level.
+
+    The binomial ``_multicast`` chain relays the switch rank's bits
+    unchanged (every hop overwrites, never combines), so its fixpoint is
+    simply "every rank holds the switch rank's leaves" — which one
+    all-gather + static row-pick per level produces bit for bit.
+    """
+    for lvl in reversed(levels):
+        tree = jax.tree.map(
+            lambda l: _all_gather_stack(l, lvl.axis)[lvl.switch_rank], tree)
+    return tree
+
+
+def _resolve_perm(perm, p: int, n: int) -> np.ndarray | None:
+    """Materialize an arrival permutation as a static ``(P, n)`` order."""
+    if perm is None:
+        return None
+    if callable(perm):
+        perm = perm(p, n)
+        if perm is None:
+            return None
+    perm = np.asarray(perm, np.int32)
+    if perm.ndim == 1:
+        perm = np.broadcast_to(perm[:, None], (p, n))
+    return perm
+
+
+def _steered(handler: hd.Handler) -> bool:
+    return handler.header_handler in (hd.child_order, hd.child_order_opt)
+
+
+def _net_order(handler: hd.Handler, arrival, p: int,
+               n: int) -> np.ndarray | None:
+    """The *net* stack order after arrival interleave ∘ header steering,
+    composed statically at trace time.
+
+    Arrival permutations are static (or trace-time callables) and header
+    steering is ``argsort(HDR_CHILD)`` of statically-known headers, so
+    the batched path never materializes permuted headers: for a
+    child-steered handler the argsort is the exact inverse of any
+    arrival permutation (child ids are distinct per slot), net identity;
+    for an arrival-order handler the net order is the permutation
+    itself.
+    """
+    if _steered(handler):
+        return None
+    return _resolve_perm(arrival, p, n)
+
+
+def _batched_admission(sched: pk.FaultSchedule, stats: dict) -> np.ndarray:
+    """Vectorized replay of a level's fault schedule — the per-(block,
+    child) accept masks of every round folded into static numpy tensors.
+
+    The slot-loop ``_reliable_ingress`` is exactly-once by construction:
+    when the schedule survives, the recovered stack equals the clean
+    gathered stack bit for bit, and every traced counter is a pure
+    function of the schedule's masks (the chaos anchor pins traced ==
+    static).  So the batched path evaluates those mask folds in numpy —
+    clean = arrives ∧ ¬corrupt, seen = any clean delivery so far — and
+    emits the counters as constants:
+
+    * ``corrupt_rejected``: every corrupted delivery fails the checksum,
+      ``Σ corrupt``;
+    * ``duplicates_dropped``: a clean delivery of an already-seen slot,
+      ``Σ (clean ∧ seen_before)``;
+    * ``delivered``: slots seen after the final round (= P·n iff the
+      schedule survives).
+
+    Returns the final ``(P, n)`` delivered mask, which the caller folds
+    into the gathered stack (``fold_once``) — all-ones on a surviving
+    schedule, so admission never perturbs bits.
+    """
+    if not sched.survives:
+        raise FaultBudgetExceeded(
+            f"fault schedule loses packets beyond the retry budget "
+            f"({sched.rounds} rounds, {sched.retransmits} retransmits)")
+    arrives = np.asarray(sched.arrives)
+    corrupt = np.asarray(sched.corrupt)
+    clean = arrives & ~corrupt
+    seen_after = np.cumsum(clean, axis=0) > 0
+    seen_before = np.zeros_like(seen_after)
+    seen_before[1:] = seen_after[:-1]
+    stats["corrupt_rejected"] += jnp.int32(int(corrupt.sum()))
+    stats["duplicates_dropped"] += jnp.int32(int((clean & seen_before).sum()))
+    stats["retransmits"] += jnp.int32(sched.retransmits)
+    stats["delivered"] += jnp.int32(int(seen_after[-1].sum()))
+    stats["wait_rounds"] += jnp.int32(round(sched.wait_rounds))
+    return seen_after[-1]
+
+
+def _admit(stack: Any, fault: pk.FaultSchedule | None,
+           fault_stats: dict) -> Any:
+    """Apply a level's batched admission mask to the gathered stack."""
+    if fault is None:
+        return stack
+    mask = jnp.asarray(_batched_admission(fault, fault_stats))
+    return jax.tree.map(
+        lambda l: hd.fold_once(jnp.zeros_like(l), l, mask), stack)
+
+
+# ---------------------------------------------------------------------------
 # Reliability layer (DESIGN.md §14): lossy ingress + exactly-once recovery.
 # ---------------------------------------------------------------------------
 
@@ -347,6 +462,32 @@ def _multicast_arena(arena: jax.Array, lvl: topology.MeshLevel,
     return pk.depacketize(stream, fmt, b, s)
 
 
+def _dense_level_batched(arena: jax.Array, lvl: topology.MeshLevel,
+                         handler: hd.Handler, design: str, n_bufs: int,
+                         plan: pk.FramePlan, arrival,
+                         fault: pk.FaultSchedule | None = None,
+                         fault_stats: dict | None = None) -> jax.Array:
+    """One up-hop as a few batched operations over the packed tensor.
+
+    The framing plan packs the arena into the canonical ``(n, E)`` slot
+    tensor (pure reshape — headers are static, never materialized on
+    the wire), one all-gather stacks every child, the schedule's
+    admission mask and the statically-composed net arrival order fold
+    in, and the handler's slot-axis kernel aggregates the whole level.
+    Bitwise identical to ``_dense_level``: same stack, same fold order,
+    same kernels.
+    """
+    ctx = {"dtype": arena.dtype}
+    stack = _all_gather_stack(plan.pack(arena), lvl.axis)      # (P, n, E)
+    stack = _admit(stack, fault, fault_stats)
+    order = _net_order(handler, arrival, lvl.fanin, plan.num_packets)
+    if order is not None:
+        stack = hd.apply_order(stack, jnp.asarray(order, jnp.int32))
+    agg, _ = handler.payload_handler(stack, None, design, n_bufs, ctx)
+    out = plan.unpack(handler.completion_handler(agg, ctx))
+    return _mask_to_switch(out, lvl.axis, lvl.switch_rank)
+
+
 def switch_allreduce_dense(arena: jax.Array, axes: Sequence[str], *,
                            reproducible: bool = False,
                            design: str = "auto",
@@ -354,6 +495,7 @@ def switch_allreduce_dense(arena: jax.Array, axes: Sequence[str], *,
                            arrival_perms: Sequence | None = None,
                            fault_plan: pk.FaultPlan | None = None,
                            with_fault_stats: bool = False,
+                           batched: bool = True,
                            mean: bool = False):
     """Allreduce a ``(B, S)`` arena through the emulated switch tree.
 
@@ -369,6 +511,11 @@ def switch_allreduce_dense(arena: jax.Array, axes: Sequence[str], *,
     stack exactly once per packet, so a surviving plan leaves the result
     bitwise identical to the fault-free run.  ``with_fault_stats``
     additionally returns the traced retry/rejection counters.
+
+    ``batched=True`` (the default) runs each level as a few batched
+    operations over the packed slot tensor; ``batched=False`` keeps the
+    per-slot/per-hop schedule as the bitwise oracle (the two paths are
+    cross-checked bit for bit in the multidevice ``switch`` group).
     """
     b, s = arena.shape
     handler = hd.get_handler("fixed_tree" if reproducible else "dense_sum")
@@ -381,12 +528,21 @@ def switch_allreduce_dense(arena: jax.Array, axes: Sequence[str], *,
     faults = fault_schedules(fault_plan, level_packet_counts(
         [l.fanin for l in levels], b, s, arena.dtype, mode="dense", fmt=fmt))
     cur = arena
-    for i, lvl in enumerate(levels):
-        arrival = arrival_perms[i] if arrival_perms is not None else None
-        cur = _dense_level(cur, lvl, handler, design, n_bufs, fmt, arrival,
-                           fault=faults[i], fault_stats=fstats)
-    for lvl in reversed(levels):
-        cur = _multicast_arena(cur, lvl, fmt)
+    if batched:
+        plan = pk.FramePlan(b, s, arena.dtype, fmt)
+        for i, lvl in enumerate(levels):
+            arrival = arrival_perms[i] if arrival_perms is not None else None
+            cur = _dense_level_batched(cur, lvl, handler, design, n_bufs,
+                                       plan, arrival, fault=faults[i],
+                                       fault_stats=fstats)
+        cur = _multicast_root(cur, levels)
+    else:
+        for i, lvl in enumerate(levels):
+            arrival = arrival_perms[i] if arrival_perms is not None else None
+            cur = _dense_level(cur, lvl, handler, design, n_bufs, fmt,
+                               arrival, fault=faults[i], fault_stats=fstats)
+        for lvl in reversed(levels):
+            cur = _multicast_arena(cur, lvl, fmt)
     if mean:
         cur = cur / compat.world_size(axes)
     return (cur, fstats) if with_fault_stats else cur
@@ -418,6 +574,7 @@ def switch_allreduce_int8(arena: jax.Array, axes: Sequence[str], *,
                           arrival_perms: Sequence | None = None,
                           fault_plan: pk.FaultPlan | None = None,
                           with_fault_stats: bool = False,
+                          batched: bool = True,
                           mean: bool = False):
     """int8-transport allreduce through the emulated switch.
 
@@ -451,8 +608,25 @@ def switch_allreduce_int8(arena: jax.Array, axes: Sequence[str], *,
     acc = xp.astype(jnp.float32)
     e = fmt.payload_elems(jnp.int8)
     npkt = fmt.packets_per_block(s, jnp.int8)
+    qplan = pk.FramePlan(b, s, jnp.int8, fmt)
+    splan = pk.FramePlan(b, s // block, jnp.float32, sfmt)
     for i, lvl in enumerate(levels):
         q, scales = compression.quantize_int8(acc, block)
+        if batched:
+            # two collectives per level (payload + scales sideband); the
+            # int8 handler is child-steered, so any arrival interleave
+            # composes with its steering to the identity (_net_order)
+            # and is never materialized
+            qs = _all_gather_stack(qplan.pack(q), lvl.axis)
+            ss = _all_gather_stack(splan.pack(scales), lvl.axis)
+            # "q" is the admission-gated stream; the scales sideband
+            # fate-shares the delivered mask
+            payload = _admit({"q": qs, "scale": ss}, faults[i], fstats)
+            agg, _ = handler.payload_handler(payload, None, design, n_bufs,
+                                             {"qblock": block})
+            acc = qplan.unpack(agg)                        # (B, S) fp32
+            acc = _mask_to_switch(acc, lvl.axis, lvl.switch_rank)
+            continue
         r = lax.axis_index(lvl.axis)
         streams = {"q": pk.packetize(q, fmt, child_rank=r),
                    "scale": pk.packetize(scales, sfmt, child_rank=r)}
@@ -473,11 +647,15 @@ def switch_allreduce_int8(arena: jax.Array, axes: Sequence[str], *,
 
     # root multicast: requantize once, stream int8 + scales back down
     q, scales = compression.quantize_int8(acc, block)
-    streams = {"q": pk.packetize(q, fmt), "scale": pk.packetize(scales, sfmt)}
-    for lvl in reversed(levels):
-        streams = _multicast(streams, lvl.axis, lvl.switch_rank)
-    q = pk.depacketize(streams["q"], fmt, b, s)
-    scales = pk.depacketize(streams["scale"], sfmt, b, s // block)
+    if batched:
+        q, scales = _multicast_root((q, scales), levels)
+    else:
+        streams = {"q": pk.packetize(q, fmt),
+                   "scale": pk.packetize(scales, sfmt)}
+        for lvl in reversed(levels):
+            streams = _multicast(streams, lvl.axis, lvl.switch_rank)
+        q = pk.depacketize(streams["q"], fmt, b, s)
+        scales = pk.depacketize(streams["scale"], sfmt, b, s // block)
     out = compression.dequantize_int8(q, scales, block, dtype=arena.dtype)
     out = out[:, :s0]
     if mean:
@@ -502,13 +680,10 @@ def _unpack_lists(packed: jax.Array, cap: int) -> tuple[jax.Array, jax.Array]:
 
 def _densify(idx: jax.Array, val32: jax.Array, b: int, s: int) -> jax.Array:
     """§7 array storage: scatter-add ``(B, cap)`` lists into a dense
-    ``(B, S)`` fp32 buffer — the ``kernels/sparse_accum`` Pallas kernel,
-    bucket offsets folding B into one dense span (sentinels → -1)."""
-    gidx = jnp.where(idx != sparse.SENTINEL,
-                     idx + jnp.arange(b, dtype=jnp.int32)[:, None] * s,
-                     -1)
-    return ops.sparse_accum(gidx.reshape(-1), val32.reshape(-1),
-                            b * s).reshape(b, s)
+    ``(B, S)`` fp32 buffer — the slot-axis ``kernels/sparse_accum_slots``
+    Pallas kernel, one grid over every bucket (sentinels → -1)."""
+    lidx = jnp.where(idx != sparse.SENTINEL, idx, -1)
+    return ops.sparse_accum_slots(lidx, val32, s)
 
 
 def switch_allreduce_sparse(arena: jax.Array, axes: Sequence[str],
@@ -518,6 +693,7 @@ def switch_allreduce_sparse(arena: jax.Array, axes: Sequence[str],
                             arrival_perms: Sequence | None = None,
                             fault_plan: pk.FaultPlan | None = None,
                             with_fault_stats: bool = False,
+                            batched: bool = True,
                             mean: bool = False,
                             with_stats: bool = False):
     """Top-k sparse allreduce through the emulated switch (§7).
@@ -570,6 +746,7 @@ def switch_allreduce_sparse(arena: jax.Array, axes: Sequence[str],
         [l.fanin for l in levels], b, s, arena.dtype, mode="sparse", fmt=fmt,
         k_max=k_max, density_threshold=density_threshold))
 
+    dplan = pk.FramePlan(b, s, jnp.float32, fmt)
     for i, lvl in enumerate(levels):
         arrival = arrival_perms[i] if arrival_perms is not None else None
         if dense_acc is None and sparse.densify_step(
@@ -582,36 +759,56 @@ def switch_allreduce_sparse(arena: jax.Array, axes: Sequence[str],
             # child-steered dense sum: the fold order stays a pure
             # function of child rank, so the sparse plane is bitwise
             # arrival-invariant even after it densifies mid-tree
-            dense_acc = _dense_level(dense_acc, lvl,
-                                     hd.get_handler("dense_sum_steered"),
-                                     "single", 1, fmt, arrival,
-                                     fault=faults[i], fault_stats=fstats)
+            if batched:
+                dense_acc = _dense_level_batched(
+                    dense_acc, lvl, hd.get_handler("dense_sum_steered"),
+                    "single", 1, dplan, arrival,
+                    fault=faults[i], fault_stats=fstats)
+            else:
+                dense_acc = _dense_level(dense_acc, lvl,
+                                         hd.get_handler("dense_sum_steered"),
+                                         "single", 1, fmt, arrival,
+                                         fault=faults[i], fault_stats=fstats)
             continue
         packed = _pack_lists(idx, val32)                   # (B, 2·cap) int32
-        r = lax.axis_index(lvl.axis)
-        stream = pk.packetize(packed, fmt, child_rank=r)
-        stacked = _gather_children(stream, lvl.axis)
-        payload, headers = stacked.payload, stacked.headers
-        if faults[i] is not None:
-            payload, headers = _reliable_ingress(payload, headers,
-                                                 faults[i], fstats)
-        payload, headers = _apply_arrival(payload, headers, arrival)
-        # a coordinate list spans several packets, so the reassembly of
-        # each child's wire image must group packets by the CHILD header,
-        # not by arrival position — under a per-slot arrival interleave
-        # the stack rows mix children, and pairing child A's indices
-        # with child B's values would silently corrupt the sum
-        order = hd.child_order(headers)
-        payload = hd.apply_order(payload, order)
-        headers = hd.apply_order(headers, order)
-        # reassemble each child's wire image from its packets, then merge
-        child_packed = jax.vmap(
-            lambda pl, hdrs: pk.depacketize(pk.PacketStream(hdrs, pl),
-                                            fmt, b, 2 * cap)
-        )(payload, headers)
-        cidx, cval = _unpack_lists(child_packed, cap)      # (P, B, cap)
-        merged, stats = hd.run(handler, {"idx": cidx, "val": cval}, headers,
-                               design="single")
+        if batched:
+            # one collective gathers every child's packed wire image;
+            # the merge handler regroups packets by CHILD, and arrival
+            # interleave ∘ child-regroup is the identity on each child's
+            # image, so reassembly is a pure unframe (reshape + slice)
+            lplan = pk.FramePlan(b, 2 * cap, jnp.int32, fmt)
+            stack = _all_gather_stack(lplan.pack(packed), lvl.axis)
+            stack = _admit(stack, faults[i], fstats)
+            child_packed = lplan.unpack(stack)             # (P, B, 2·cap)
+            cidx, cval = _unpack_lists(child_packed, cap)  # (P, B, cap)
+            merged, stats = handler.payload_handler(
+                {"idx": cidx, "val": cval}, None, "single", 1, {})
+        else:
+            r = lax.axis_index(lvl.axis)
+            stream = pk.packetize(packed, fmt, child_rank=r)
+            stacked = _gather_children(stream, lvl.axis)
+            payload, headers = stacked.payload, stacked.headers
+            if faults[i] is not None:
+                payload, headers = _reliable_ingress(payload, headers,
+                                                     faults[i], fstats)
+            payload, headers = _apply_arrival(payload, headers, arrival)
+            # a coordinate list spans several packets, so the reassembly
+            # of each child's wire image must group packets by the CHILD
+            # header, not by arrival position — under a per-slot arrival
+            # interleave the stack rows mix children, and pairing child
+            # A's indices with child B's values would silently corrupt
+            # the sum
+            order = hd.child_order(headers)
+            payload = hd.apply_order(payload, order)
+            headers = hd.apply_order(headers, order)
+            # reassemble each child's wire image from its packets, merge
+            child_packed = jax.vmap(
+                lambda pl, hdrs: pk.depacketize(pk.PacketStream(hdrs, pl),
+                                                fmt, b, 2 * cap)
+            )(payload, headers)
+            cidx, cval = _unpack_lists(child_packed, cap)  # (P, B, cap)
+            merged, stats = hd.run(handler, {"idx": cidx, "val": cval},
+                                   headers, design="single")
         collisions = collisions + stats["collisions"]
         cap *= lvl.fanin
         idx, val32 = merged["idx"], merged["val"]
@@ -627,8 +824,11 @@ def switch_allreduce_sparse(arena: jax.Array, axes: Sequence[str],
         dense_acc = _mask_to_switch(dense_acc, levels[-1].axis,
                                     levels[-1].switch_rank)
 
-    for lvl in reversed(levels):
-        dense_acc = _multicast_arena(dense_acc, lvl, fmt)
+    if batched:
+        dense_acc = _multicast_root(dense_acc, levels)
+    else:
+        for lvl in reversed(levels):
+            dense_acc = _multicast_arena(dense_acc, lvl, fmt)
     if mean:
         dense_acc = dense_acc / compat.world_size(axes)
     red = dense_acc.astype(arena.dtype)
@@ -713,8 +913,18 @@ def plan_counters(axis_names: Sequence[str], axis_sizes: Sequence[int],
                   num_buckets: int, bucket_elems: int, dtype, *,
                   fmt: pk.PacketFormat = DEFAULT_FORMAT,
                   design: str = "auto",
-                  reproducible: bool = False) -> SwitchCounters:
-    """Static counters for the plane's schedule on a mesh (no tracing)."""
+                  reproducible: bool = False,
+                  batched: bool = True) -> SwitchCounters:
+    """Static counters for the plane's schedule on a mesh (no tracing).
+
+    ``batched`` is accepted (and ignored) so callers can pass the
+    transport's knob straight through: batching changes the *schedule*
+    of the emulation, never the modeled switch work — the same packets
+    arrive, the same combines run, the same buffers hold them — so the
+    counters are identical for both paths (pinned in
+    ``tests/test_switch.py``).
+    """
+    del batched
     fanins = [(lvl.axis, lvl.fanin) for lvl in
               topology.mesh_levels(tuple(axis_names), tuple(axis_sizes))]
     return _counters(fanins, num_buckets, bucket_elems, dtype, fmt,
@@ -725,7 +935,8 @@ def tree_counters(tree: topology.ReductionTree, num_buckets: int,
                   bucket_elems: int, dtype, *,
                   fmt: pk.PacketFormat = DEFAULT_FORMAT,
                   design: str = "auto",
-                  reproducible: bool = False) -> SwitchCounters:
+                  reproducible: bool = False,
+                  batched: bool = True) -> SwitchCounters:
     """Static counters for an arbitrary :class:`topology.ReductionTree`.
 
     ``plan_counters`` reads fan-ins off the mesh axes; this variant reads
@@ -735,8 +946,10 @@ def tree_counters(tree: topology.ReductionTree, num_buckets: int,
     truth for admission and scheduling.  Per level the fan-in is the
     *largest* child count at that level (the busiest switch bounds the
     schedule); a single-host tree degenerates to one fan-in-1 level,
-    matching ``topology.mesh_levels``.
+    matching ``topology.mesh_levels``.  ``batched`` is ignored exactly
+    as in :func:`plan_counters`.
     """
+    del batched
     fanins = [(f"level{lvl}",
                max(len(tree.nodes[i].children) for i in tree.levels[lvl]))
               for lvl in range(1, len(tree.levels))]

@@ -76,7 +76,12 @@ def fold_tree(stack: jax.Array) -> jax.Array:
     """§6.3 binary-counter tree: the aligned fixed tree over the stack
     index (``kernels/tree_reduce``; fp32 accumulation for floats, exact
     native accumulation for integers; P padded to a power of two with
-    zero streams)."""
+    zero streams).  A ``(P, S, E)`` packet-slot stack keeps its slot
+    axis and runs the slot-gridded kernel — the elementwise tree makes
+    that bitwise-identical to flattening, so both data-plane paths
+    share one fold."""
+    if stack.ndim == 3:
+        return ops.tree_reduce_slots(stack)
     p = stack.shape[0]
     flat = stack.reshape(p, -1)
     return ops.tree_reduce(flat).reshape(stack.shape[1:])
@@ -278,23 +283,35 @@ register(Handler(
 # -- int8 dequantize-accumulate (F1) -----------------------------------------
 
 def _int8_payload(stack, headers, design, n_bufs, ctx):
-    """stack = {"q": (P, n, E) int8, "scale": (P, n, E/qblock) fp32}."""
+    """stack = {"q": (P, n, E) int8, "scale": (P, n, E/qblock) fp32}.
+
+    The slot axis is kept through the fold (``dequant_accum_slots``)
+    whenever the per-packet payload tiles into whole quantization blocks
+    — one slot-gridded kernel per level for both data-plane paths.
+    """
     q, s = stack["q"], stack["scale"]
     p, n = q.shape[:2]
     qblock = ctx["qblock"]
-    qf = q.reshape(p, -1)
-    sf = s.reshape(p, -1)
+    if q.shape[-1] % qblock == 0:
+        def accum(qs, ss):
+            return ops.dequant_accum_slots(qs, ss, qblock=qblock)
+    else:   # payload narrower than a quantization block: flatten slots
+        def accum(qs, ss):
+            pp = qs.shape[0]
+            return ops.dequant_accum(qs.reshape(pp, -1),
+                                     ss.reshape(pp, -1),
+                                     qblock=qblock).reshape(qs.shape[1:])
     if design == "single":
-        acc = ops.dequant_accum(qf, sf, qblock=qblock)
+        acc = accum(q, s)
     elif design == "multi":
         n_bufs = max(1, min(int(n_bufs), p))
-        acc = ops.dequant_accum(qf[0::n_bufs], sf[0::n_bufs], qblock=qblock)
+        acc = accum(q[0::n_bufs], s[0::n_bufs])
         for j in range(1, n_bufs):
-            acc = acc + ops.dequant_accum(qf[j::n_bufs], sf[j::n_bufs],
-                                          qblock=qblock)
+            acc = acc + accum(q[j::n_bufs], s[j::n_bufs])
     elif design == "tree":
-        deq = compression.dequantize_int8(qf, sf, qblock)
-        acc = fold_tree(deq)
+        deq = compression.dequantize_int8(q.reshape(p, -1),
+                                          s.reshape(p, -1), qblock)
+        acc = fold_tree(deq.reshape(q.shape).astype(jnp.float32))
     else:
         raise ValueError(f"unknown aggregation design {design!r}")
     return acc.reshape(q.shape[1:]), {}

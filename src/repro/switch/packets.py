@@ -131,6 +131,100 @@ def depacketize(stream: PacketStream, fmt: PacketFormat,
 
 
 # ---------------------------------------------------------------------------
+# Static framing plan (batched data plane, DESIGN.md §12).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FramePlan:
+    """Arena-style static pack/unpack plan for a ``(B, S)`` dtype arena.
+
+    The batched data plane never materializes per-packet slices: every
+    slot offset is a pure function of ``(B, S, dtype, fmt)``, so framing
+    collapses to one pad+reshape (``pack``) and reassembly to one
+    reshape+slice (``unpack``) — the same static-offset discipline as
+    ``core/arena.py``.  Headers are likewise static (``headers`` /
+    ``child_headers`` return numpy, computed at trace time): for the
+    canonical slot order ``slot = block * npkt + seq``, every header
+    field except the checksum is a function of the slot index alone.
+
+    Bitwise contract (pinned by hypothesis in ``tests/test_switch.py``):
+    ``pack`` produces exactly ``packetize(...).payload`` and ``unpack``
+    inverts any slot permutation of it via header steering, for all
+    dtypes, ragged tails, and arrival permutations.
+    """
+
+    num_buckets: int
+    bucket_elems: int
+    dtype: object
+    fmt: PacketFormat
+
+    def __post_init__(self):
+        object.__setattr__(self, "dtype", jnp.dtype(self.dtype))
+
+    @property
+    def payload_elems(self) -> int:
+        return self.fmt.payload_elems(self.dtype)
+
+    @property
+    def packets_per_block(self) -> int:
+        return self.fmt.packets_per_block(self.bucket_elems, self.dtype)
+
+    @property
+    def num_packets(self) -> int:
+        return self.num_buckets * self.packets_per_block
+
+    @property
+    def pad(self) -> int:
+        return (self.packets_per_block * self.payload_elems
+                - self.bucket_elems)
+
+    def pack(self, arena: jax.Array) -> jax.Array:
+        """``(..., B, S)`` arena → ``(..., n, E)`` packed payload tensor
+        (canonical slot order; bitwise equal to ``packetize().payload``)."""
+        *lead, b, s = arena.shape
+        if (b, s) != (self.num_buckets, self.bucket_elems):
+            raise ValueError(f"pack: arena {arena.shape[-2:]} != plan "
+                             f"({self.num_buckets}, {self.bucket_elems})")
+        if self.pad:
+            arena = jnp.concatenate(
+                [arena, jnp.zeros((*lead, b, self.pad), arena.dtype)],
+                axis=-1)
+        return arena.reshape(*lead, self.num_packets, self.payload_elems)
+
+    def unpack(self, payload: jax.Array) -> jax.Array:
+        """``(..., n, E)`` canonical-order payload → ``(..., B, S)`` arena."""
+        *lead, n, e = payload.shape
+        if (n, e) != (self.num_packets, self.payload_elems):
+            raise ValueError(f"unpack: payload {payload.shape[-2:]} != plan "
+                             f"({self.num_packets}, {self.payload_elems})")
+        flat = payload.reshape(*lead, self.num_buckets,
+                               self.packets_per_block * e)
+        return flat[..., :self.bucket_elems]
+
+    def headers(self, child_rank: int = 0) -> np.ndarray:
+        """Static ``(n, HEADER_FIELDS)`` int32 headers for the canonical
+        slot order.  ``HDR_CSUM`` is left 0 — the batched plane verifies
+        payload integrity against the fault schedule's static masks, not
+        per-packet sums (a checksum of bits the plan itself packed would
+        be circular)."""
+        npkt = self.packets_per_block
+        e = self.payload_elems
+        block = np.repeat(np.arange(self.num_buckets, dtype=np.int32), npkt)
+        seq = np.tile(np.arange(npkt, dtype=np.int32), self.num_buckets)
+        valid = np.minimum(e, self.bucket_elems - seq * e).astype(np.int32)
+        last = (seq == npkt - 1).astype(np.int32)
+        child = np.full((self.num_packets,), child_rank, np.int32)
+        csum = np.zeros((self.num_packets,), np.int32)
+        return np.stack([block, seq, child, valid, last, csum], axis=1)
+
+    def child_headers(self, num_children: int) -> np.ndarray:
+        """Static ``(P, n, HEADER_FIELDS)`` headers, ``HDR_CHILD`` = the
+        child's index in the gathered stack."""
+        return np.stack([self.headers(child_rank=p)
+                         for p in range(num_children)])
+
+
+# ---------------------------------------------------------------------------
 # Payload integrity (DESIGN.md §14): checksum + wire corruption.
 # ---------------------------------------------------------------------------
 

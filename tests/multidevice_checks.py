@@ -674,6 +674,82 @@ def check_switch():
         density_threshold=1.1, arrival_perms=pp)[0], xs=xs_s)
     assert sp_got.tobytes() == sp_base.tobytes(), \
         "per-slot arrival interleave corrupted the sparse merge"
+
+    # PR 7: the batched data plane ≡ the slot-loop oracle, bitwise, on
+    # every plane — composed with fully adversarial per-slot arrival
+    # interleavings AND a surviving lossy-fabric plan (the hardest
+    # schedule the two paths must agree on) — and the traced fault
+    # counters are integer-equal (static admission masks in the batched
+    # plane vs per-slot traced admission in the loop).
+    from repro.switch import packets as pk
+
+    def slot_perms(seed):
+        """Per-level trace-time callables: a fresh per-slot (P, n)
+        interleaving, deterministic in (seed, level, P, n) so the
+        batched and slotloop runs resolve the SAME permutations."""
+        def mk(lvl):
+            def perm(p, n):
+                r = np.random.default_rng((seed, lvl, p, n))
+                return np.stack([r.permutation(p) for _ in range(n)],
+                                axis=1)
+            return perm
+        return [mk(lvl) for lvl in range(len(fanins))]
+
+    def surviving_plan(counts):
+        for seed in range(100):
+            p_ = pk.FaultPlan(seed=seed, drop=0.03, duplicate=0.05,
+                              reorder=0.3, corrupt=0.02,
+                              retry=pk.RetryPolicy(max_retries=8))
+            if dataplane.plan_survives(p_, counts):
+                return p_
+        raise AssertionError(f"no surviving fault seed for {counts}")
+
+    d_plan = surviving_plan(
+        dataplane.level_packet_counts(fanins, B, S, jnp.float32))
+    i_plan = surviving_plan(dataplane.level_packet_counts(
+        fanins, B, S, jnp.float32, mode="int8", block=64))
+    s_plans = {thr: surviving_plan(dataplane.level_packet_counts(
+        fanins, B2, S2, jnp.float32, mode="sparse", k_max=k,
+        density_threshold=thr)) for thr in (1.1, 0.05)}
+    cases = {
+        "dense_single": (xs_t, lambda x, b: dataplane.switch_allreduce_dense(
+            x[0].reshape(B, S), ("pod", "data"), design="single", batched=b,
+            arrival_perms=slot_perms(1), fault_plan=d_plan)),
+        "fixed_tree": (xs_t, lambda x, b: dataplane.switch_allreduce_dense(
+            x[0].reshape(B, S), ("pod", "data"), reproducible=True,
+            batched=b, arrival_perms=slot_perms(2), fault_plan=d_plan)),
+        "int8": (xs_t, lambda x, b: dataplane.switch_allreduce_int8(
+            x[0].reshape(B, S), ("pod", "data"), block=64, batched=b,
+            arrival_perms=slot_perms(3), fault_plan=i_plan)),
+        "sparse_lists": (xs_s, lambda x, b: dataplane.switch_allreduce_sparse(
+            x[0].reshape(B2, S2), ("pod", "data"), ks=k, batched=b,
+            density_threshold=1.1, arrival_perms=slot_perms(4),
+            fault_plan=s_plans[1.1])[0]),
+        "sparse_dense": (xs_s, lambda x, b: dataplane.switch_allreduce_sparse(
+            x[0].reshape(B2, S2), ("pod", "data"), ks=k, batched=b,
+            density_threshold=0.05, arrival_perms=slot_perms(5),
+            fault_plan=s_plans[0.05])[0]),
+    }
+    for name, (data_in, call) in cases.items():
+        bt = run(lambda x, c=call: c(x, True), xs=data_in)
+        sl = run(lambda x, c=call: c(x, False), xs=data_in)
+        assert bt.tobytes() == sl.tobytes(), \
+            f"batched != slotloop bits: {name}"
+
+    def fstats(x, batched):
+        _, st = dataplane.switch_allreduce_dense(
+            x[0].reshape(B, S), ("pod", "data"), reproducible=True,
+            batched=batched, arrival_perms=slot_perms(2), fault_plan=d_plan,
+            with_fault_stats=True)
+        return jnp.stack([st["retransmits"], st["duplicates_dropped"],
+                          st["corrupt_rejected"], st["delivered"],
+                          st["wait_rounds"]]).astype(jnp.float32)
+
+    st_b = run(lambda x: fstats(x, True), xs=xs_t).astype(int)
+    st_s = run(lambda x: fstats(x, False), xs=xs_t).astype(int)
+    assert tuple(st_b) == tuple(st_s), \
+        f"fault counters differ: batched {tuple(st_b)} != " \
+        f"slotloop {tuple(st_s)}"
     print(f"switch OK ({pod}x{data})")
 
 

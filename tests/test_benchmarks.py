@@ -35,11 +35,13 @@ def test_run_quick_smoke():
             assert f"quick.hier.{transport}.{mode}.us_per_call" in names, \
                 names
         assert f"quick.hier.{transport}.speedup_x" in names, names
-        # PR 4: the emulated switch data plane vs the flat wire schedule
-        for mode in ("flat", "innetwork"):
+        # PR 4: the emulated switch data plane vs the flat wire schedule;
+        # PR 7: the slot-loop oracle schedule and the batched speedup row
+        for mode in ("flat", "innetwork", "slotloop"):
             assert f"quick.switch.{transport}.{mode}.us_per_call" in names, \
                 names
         assert f"quick.switch.{transport}.overhead_x" in names, names
+        assert f"quick.switch.{transport}.batched_x" in names, names
     # PR 5: the multi-tenant runtime's contention rows
     for n in (1, 2, 4):
         assert f"quick.runtime.tenants{n}.us_per_call" in names, names
@@ -97,5 +99,7 @@ def test_quick_expected_rows_cover_all_transports():
         assert f"quick.{t}.batched_speedup_x" in names
         assert f"quick.hier.{t}.speedup_x" in names
         assert f"quick.switch.{t}.overhead_x" in names
+        assert f"quick.switch.{t}.batched_x" in names
+        assert f"quick.switch.{t}.slotloop.us_per_call" in names
     assert "quick.chaos.overhead_x" in names
     assert "quick.chaos.retry_rate" in names

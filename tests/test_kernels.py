@@ -163,6 +163,94 @@ def test_blockwise_sparsify_roundtrip():
 
 
 # ---------------------------------------------------------------------------
+# slot-axis kernels (PR 7: the batched switch data plane)
+# ---------------------------------------------------------------------------
+
+def test_tree_reduce_slots_kernel_bitwise():
+    """The slot-axis Pallas kernel, the flattened kernel, the jnp oracle
+    and the ops dispatch all produce the SAME bits: the fold is
+    elementwise over (slot, elem), so the slot split can never
+    reassociate — this is what lets the batched data plane fold packed
+    (P, S, E) stacks and stay a bitwise oracle of the slot loop."""
+    from repro.kernels import tree_reduce as _tr
+    rng = np.random.default_rng(7)
+    p, s, e = 4, 8, 64
+    x = jnp.asarray((rng.normal(size=(p, s, e)) * 1e3).astype(np.float32))
+    want = np.asarray(ref.tree_reduce(x))
+    direct = np.asarray(_tr.tree_reduce_slots(x, tile_s=8, interpret=True))
+    assert np.array_equal(direct, want), "Pallas slot kernel != jnp oracle"
+    flat = np.asarray(ops.tree_reduce(x.reshape(p, s * e))).reshape(s, e)
+    assert np.array_equal(flat, want), "slot split reassociated the fold"
+    # the backend-dispatched public wrapper is pinned to the same bits
+    # (off-TPU it routes to the oracle — see kernels/ops.py)
+    got = np.asarray(ops.tree_reduce_slots(x))
+    assert np.array_equal(got, want)
+    # non-pow2 P pads with zero children (absorbing under +)
+    x3 = x[:3]
+    got3 = np.asarray(ops.tree_reduce_slots(x3))
+    want3 = np.asarray(ref.tree_reduce(jnp.concatenate(
+        [x3, jnp.zeros((1, s, e), x3.dtype)])))
+    assert np.array_equal(got3, want3)
+
+
+def test_tree_reduce_slots_integer_exact():
+    x = jnp.full((4, 2, 8), (1 << 24) + 1, jnp.int32)
+    got = np.asarray(ops.tree_reduce_slots(x))
+    assert got.dtype == np.int32
+    assert (got == 4 * ((1 << 24) + 1)).all()
+
+
+def test_dequant_accum_slots_kernel_vs_ref():
+    """Slot-packed fused dequant-fold vs the sequential jnp oracle.
+
+    Not asserted bitwise: XLA may fuse the multiply-add differently per
+    tensor shape (FMA), which under fp32 cancellation shows up at the
+    ~1e-5 level.  Both data-plane schedules call the SAME wrapper, so
+    batched ≡ slotloop is unaffected (pinned in multidevice_checks)."""
+    from repro.core import compression
+    from repro.kernels import quant as _quant
+    rng = np.random.default_rng(11)
+    p, s, e, qblock = 3, 8, 128, 64
+    x = rng.normal(size=(p, s * e)).astype(np.float32)
+    q, scales = compression.quantize_int8(jnp.asarray(x), qblock)
+    qs = q.reshape(p, s, e)
+    ss_ = scales.reshape(p, s, e // qblock)
+    want = np.asarray(ref.dequant_accum_slots(qs, ss_, qblock=qblock))
+    direct = np.asarray(_quant.dequant_accum_slots(
+        qs, ss_, qblock=qblock, tile_s=8, interpret=True))
+    np.testing.assert_allclose(direct, want, rtol=1e-4, atol=1e-4)
+    got = np.asarray(ops.dequant_accum_slots(qs, ss_, qblock=qblock))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # and the slot fold agrees with the flattened (P, n) fold
+    flat = np.asarray(ops.dequant_accum(q, scales, qblock=qblock))
+    np.testing.assert_allclose(got.reshape(-1), flat, rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError, match="qblock"):
+        ops.dequant_accum_slots(qs[:, :, :100], ss_, qblock=qblock)
+
+
+def test_sparse_accum_slots_kernel_vs_ref():
+    """Batched one-hot-matmul scatter vs the per-bucket scatter oracle;
+    sentinel (<0) entries drop in both."""
+    from repro.kernels import sparse_accum as _sa
+    rng = np.random.default_rng(13)
+    b, e, size = 2, 64, 512
+    idx = jnp.asarray(rng.integers(-1, size, size=(b, e)).astype(np.int32))
+    val = jnp.asarray(rng.normal(size=(b, e)).astype(np.float32))
+    want = np.asarray(ref.sparse_accum_slots(idx, val, size))
+    direct = np.asarray(_sa.sparse_accum_slots(
+        idx, val, size, tile_z=256, tile_e=8, interpret=True))
+    np.testing.assert_allclose(direct, want, rtol=1e-4, atol=1e-4)
+    # off-TPU the public wrapper routes to the oracle itself — bitwise
+    got = np.asarray(ops.sparse_accum_slots(idx, val, size))
+    assert np.array_equal(got, want)
+    # duplicate indices accumulate (the densify step's contract)
+    dup = jnp.asarray([[5, 5, 5, -1]], jnp.int32)
+    dv = jnp.asarray([[1.0, 2.0, 3.0, 9.0]], jnp.float32)
+    dense = np.asarray(ops.sparse_accum_slots(dup, dv, 8))
+    assert dense[0, 5] == 6.0 and dense.sum() == 6.0
+
+
+# ---------------------------------------------------------------------------
 # flash_attn (the §Perf memory-roofline kernel)
 # ---------------------------------------------------------------------------
 

@@ -94,6 +94,58 @@ def test_packet_headers(b, s, dtype):
         assert mine[mine[:, pk.HDR_SEQ] == npkt - 1][0, pk.HDR_LAST] == 1
 
 
+@given(st.integers(1, 5), st.integers(1, 700), st.sampled_from(DTYPES),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_frameplan_matches_per_packet_framing(b, s, dtype, seed):
+    """The batched data plane's static FramePlan is a bitwise drop-in
+    for per-packet framing (PR 7): ``pack`` produces exactly
+    ``packetize().payload``, the static headers match the dynamic ones
+    (all fields but the checksum — the batched plane verifies integrity
+    via the fault schedule's static masks), ``unpack`` inverts ``pack``
+    bit for bit on ragged tails and every dtype, and any slot arrival
+    permutation is steered back to canonical order by (BLOCK, SEQ)
+    alone."""
+    rng = np.random.default_rng(seed)
+    fmt = pk.PacketFormat(mtu_bytes=64)       # small MTU → ragged tails
+    arena = _random_arena(rng, b, s, dtype)
+    plan = pk.FramePlan(b, s, dtype, fmt)
+    packed = plan.pack(arena)
+    stream = pk.packetize(arena, fmt, child_rank=3)
+    assert packed.shape == stream.payload.shape
+    assert np.asarray(packed).tobytes() == \
+        np.asarray(stream.payload).tobytes(), \
+        f"pack != packetize payload: B={b} S={s} {dtype}"
+    hdr = plan.headers(child_rank=3)
+    dyn = np.asarray(stream.headers)
+    for field in (pk.HDR_BLOCK, pk.HDR_SEQ, pk.HDR_CHILD, pk.HDR_VALID,
+                  pk.HDR_LAST):
+        assert np.array_equal(hdr[:, field], dyn[:, field]), field
+    out = plan.unpack(packed)
+    assert out.dtype == arena.dtype
+    assert np.asarray(out).tobytes() == np.asarray(arena).tobytes(), \
+        f"unpack(pack) changed bits: B={b} S={s} {dtype}"
+    # arrival permutation: the (BLOCK, SEQ) fields alone recover the
+    # canonical slot order — reshape-only reassembly stays sound
+    perm = rng.permutation(plan.num_packets)
+    hp = hdr[perm]
+    order = np.argsort(hp[:, pk.HDR_BLOCK] * plan.packets_per_block
+                       + hp[:, pk.HDR_SEQ])
+    restored = np.asarray(packed)[perm][order]
+    assert restored.tobytes() == np.asarray(packed).tobytes(), \
+        "header steering failed to restore canonical slot order"
+
+
+def test_frameplan_child_headers_stack():
+    plan = pk.FramePlan(2, 100, jnp.float32, pk.PacketFormat(mtu_bytes=64))
+    hdrs = plan.child_headers(5)
+    assert hdrs.shape == (5, plan.num_packets, pk.HEADER_FIELDS)
+    for p in range(5):
+        assert (hdrs[p, :, pk.HDR_CHILD] == p).all()
+        assert np.array_equal(hdrs[p, :, pk.HDR_BLOCK],
+                              hdrs[0, :, pk.HDR_BLOCK])
+
+
 # ---------------------------------------------------------------------------
 # Handlers: arrival-order invariance (fixed tree) and design equivalence.
 # ---------------------------------------------------------------------------
@@ -242,6 +294,25 @@ def test_plan_counters_match_switch_model_inputs():
                                   reproducible=True)
     assert big.design == "tree"
     assert sm.select_design(4 << 20)[0] != "tree"
+
+
+def test_counters_invariant_under_batched_schedule():
+    """Batching changes the *schedule* of the emulation, never the
+    modeled switch work: the same packets arrive, the same combines
+    run, the same buffers hold them — so the analytic counters are
+    identical for the batched plane and the slot-loop oracle, for both
+    the mesh-axis and rebuilt-tree variants."""
+    from repro.core import topology
+    for kw in (dict(), dict(reproducible=True), dict(design="single")):
+        a = dataplane.plan_counters(("pod", "data"), (2, 4), 3, 2048,
+                                    jnp.float32, batched=True, **kw)
+        b = dataplane.plan_counters(("pod", "data"), (2, 4), 3, 2048,
+                                    jnp.float32, batched=False, **kw)
+        assert a == b, kw
+    tree = topology.build_tree(8, 4)
+    ta = dataplane.tree_counters(tree, 2, 1024, jnp.float32, batched=True)
+    tb = dataplane.tree_counters(tree, 2, 1024, jnp.float32, batched=False)
+    assert ta == tb
 
 
 @pytest.mark.parametrize("seed", [0, 1])
