@@ -283,6 +283,32 @@ with compat.set_mesh(mesh8):
     print(f"transports.chaos.retry_rate,"
           f"{sched.retransmits/counts[0][1]:.4f},"
           f"retrans{sched.retransmits}_of_{counts[0][1]}pkts_drop1pct")
+
+# --- congestion-aware dynamic trees (PR 8, DESIGN.md §15) ------------------
+# a hot leaf slot on the two-level fabric triggers SessionManager.replan
+# onto the cheapest tree under the congestion map.  Tracked: the
+# predicted aggregate throughput on the static tree (congested) vs the
+# dynamically re-planned tree, and their ratio — the replan's predicted
+# win.  Control-plane only (counters + analytic model, no tensors); the
+# hysteresis contract guarantees the ratio is > 1.0 whenever a replan
+# happens at all.
+from repro.runtime import CongestionMonitor
+cmgr = SessionManager(("pod", "data"), (2, 4), max_sessions=4)
+cmgr.open("canary", mode="dense", num_buckets=8, bucket_elems=1 << 15,
+          dtype=jnp.float32, reproducible=True)
+cmgr.open("bg", mode="sparse", num_buckets=8, bucket_elems=1 << 15,
+          dtype=jnp.float32, k=2048)
+cmon = CongestionMonitor(cmgr)
+cmon.inject((1, 0), 2.0)
+cres = cmgr.replan(cmon, threshold=0.5, hysteresis=0.05)
+c_static = sum(cres.predicted_before.values())
+c_dynamic = sum(cres.predicted_after.values())
+print(f"transports.canary.static.pred_pkts_per_cy,{c_static:.4f},"
+      f"hot_leaf_h2.0_2x4fabric")
+print(f"transports.canary.dynamic.pred_pkts_per_cy,{c_dynamic:.4f},"
+      f"replanned={cres.replanned}")
+print(f"transports.canary.contention_x,{c_dynamic/c_static:.2f},"
+      f"dynamic/static_pred")
 """
 
 # tiny-shape variant for `run.py --quick` / the tier-1 smoke test: all
@@ -451,6 +477,30 @@ with compat.set_mesh(mesh8):
     sched = sw_dp.fault_schedules(FaultPlan(seed=1, drop=0.01), counts)[0]
     print(f"quick.chaos.retry_rate,{sched.retransmits/counts[0][1]:.4f},"
           f"retrans{sched.retransmits}_of_{counts[0][1]}pkts_drop1pct")
+
+# congestion-aware dynamic trees (PR 8, DESIGN.md §15): a hot leaf slot
+# on the two-level fabric triggers SessionManager.replan onto the
+# cheapest tree under the congestion map.  Tracked: predicted aggregate
+# throughput on the static (congested) tree vs the re-planned one, and
+# their ratio — run_quick() fails if a replan ever *degrades* the
+# prediction (the hysteresis contract).  Control-plane only.
+from repro.runtime import CongestionMonitor
+cmgr = SessionManager(("pod", "data"), (2, 4), max_sessions=4)
+cmgr.open("canary", mode="dense", num_buckets=8, bucket_elems=1 << 15,
+          dtype=jnp.float32, reproducible=True)
+cmgr.open("bg", mode="sparse", num_buckets=8, bucket_elems=1 << 15,
+          dtype=jnp.float32, k=2048)
+cmon = CongestionMonitor(cmgr)
+cmon.inject((1, 0), 2.0)
+cres = cmgr.replan(cmon, threshold=0.5, hysteresis=0.05)
+c_static = sum(cres.predicted_before.values())
+c_dynamic = sum(cres.predicted_after.values())
+print(f"quick.canary.static.pred_pkts_per_cy,{c_static:.4f},"
+      f"hot_leaf_h2.0_2x4fabric")
+print(f"quick.canary.dynamic.pred_pkts_per_cy,{c_dynamic:.4f},"
+      f"replanned={cres.replanned}")
+print(f"quick.canary.contention_x,{c_dynamic/c_static:.2f},"
+      f"dynamic/static_pred")
 """
 
 
@@ -506,7 +556,9 @@ QUICK_EXPECTED_ROWS = frozenset(
     + ["quick.runtime.contention_x"]
     + [f"quick.chaos.{n}.us_per_call"
        for n in ("baseline", "reliable", "lossy")]
-    + ["quick.chaos.overhead_x", "quick.chaos.retry_rate"])
+    + ["quick.chaos.overhead_x", "quick.chaos.retry_rate"]
+    + [f"quick.canary.{m}.pred_pkts_per_cy" for m in ("static", "dynamic")]
+    + ["quick.canary.contention_x"])
 
 
 def run_quick():
@@ -538,6 +590,14 @@ def run_quick():
     if missing:
         raise RuntimeError(
             f"--quick benchmark incomplete; missing rows: {sorted(missing)}")
+    for name, val, _der in rows:
+        # the hysteresis contract: a congestion replan may decline to
+        # move, but it must never land on a tree with a *worse*
+        # predicted aggregate throughput
+        if name == "quick.canary.contention_x" and val < 1.0:
+            raise RuntimeError(
+                f"congestion replan degraded predicted throughput "
+                f"({val:.2f}x dynamic/static)")
     return rows
 
 

@@ -3,7 +3,7 @@
 The container has no network access and no ``hypothesis`` wheel; without
 it five tier-1 test modules fail at *collection*.  This stub implements
 the tiny slice of the API those modules use — ``given``, ``settings``
-and the ``integers`` / ``floats`` / ``lists`` / ``sets`` /
+and the ``integers`` / ``floats`` / ``tuples`` / ``lists`` / ``sets`` /
 ``dictionaries`` / ``data`` strategies —
 drawing a small, deterministic set of examples per test (seeded PRNG, so
 failures reproduce).  It is only installed when the real package is
@@ -45,6 +45,10 @@ def booleans() -> _Strategy:
 def sampled_from(seq) -> _Strategy:
     items = list(seq)
     return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
 
 
 def lists(elements: _Strategy, *, min_size: int = 0,
@@ -141,7 +145,7 @@ def install() -> None:
     mod = types.ModuleType("hypothesis")
     strategies = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "booleans", "sampled_from",
-                 "lists", "sets", "dictionaries", "data"):
+                 "tuples", "lists", "sets", "dictionaries", "data"):
         setattr(strategies, name, globals()[name])
     mod.given = given
     mod.settings = settings

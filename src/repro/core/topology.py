@@ -201,6 +201,79 @@ def rebuild_excluding(tree: ReductionTree,
     return build_tree(len(survivors), tree.radix)
 
 
+def switch_slot(tree: ReductionTree, switch_id: int) -> tuple[int, int]:
+    """The physical ``(level, index)`` slot a switch node occupies.
+
+    Slots name the fabric's switch positions independently of any one
+    tree shape: a rebuilt tree binds its (fewer) switches to the same
+    slot pool, which is what lets a congestion map outlive a replan.
+    """
+    node = tree.nodes[switch_id]
+    if node.is_host:
+        raise ValueError(f"node {switch_id} is a host, not a switch")
+    return (node.level, tree.levels[node.level].index(switch_id))
+
+
+def slot_pools(tree: ReductionTree) -> dict[int, int]:
+    """Physical switch slots per level — the fabric a tree runs on."""
+    return {lvl: len(tree.levels[lvl]) for lvl in range(1, len(tree.levels))}
+
+
+def tree_cost(tree: ReductionTree, hotness, pools=None) -> float:
+    """Bottleneck service cost of running ``tree`` on a congested fabric.
+
+    ``hotness`` maps ``(level, index)`` slots to added load fractions
+    (≥ 0; ``inf`` = unusable, e.g. a failed switch).  Each level binds
+    its switches to the coolest available slots, pairing the largest
+    fan-in with the coolest slot (the assignment that minimizes the
+    bottleneck); the level's cost is the worst ``fanin · (1 + heat)``
+    product and the tree's cost is the worst level.  A level needing
+    more switches than ``pools`` provides is infeasible → ``inf``.
+    """
+    pools = slot_pools(tree) if pools is None else pools
+    cost = 0.0
+    for lvl in range(1, len(tree.levels)):
+        k = len(tree.levels[lvl])
+        n = pools.get(lvl, 0)
+        if k > n:
+            return math.inf
+        heat = sorted(hotness.get((lvl, i), 0.0) for i in range(n))[:k]
+        fanins = sorted((len(tree.nodes[nid].children)
+                         for nid in tree.levels[lvl]), reverse=True)
+        cost = max(cost, max(f * (1.0 + h) for f, h in zip(fanins, heat)))
+    return cost
+
+
+def rebuild_avoiding(tree: ReductionTree, hotness, *,
+                     pools=None) -> ReductionTree | None:
+    """The cheapest tree over the same hosts under a congestion map.
+
+    The Canary generalization of the §4 failure path: instead of growing
+    the fan-in just enough to exclude one dead switch, enumerate every
+    uniform tree shape the physical slot pool can host and pick the one
+    with the lowest :func:`tree_cost` under ``hotness`` — failure is the
+    special case of an infinitely hot slot.  ``hotness`` keys are
+    ``(level, index)`` slots, or ``int`` node ids of ``tree`` (converted
+    via :func:`switch_slot`).  ``pools`` defaults to ``tree``'s own
+    slots; pass the *original* fabric's pools when ``tree`` is already a
+    rebuild.  Returns ``None`` when no candidate is feasible at finite
+    cost (every usable shape needs an unusable slot) — the host-based
+    fallback.
+    """
+    pools = slot_pools(tree) if pools is None else dict(pools)
+    hot: dict[tuple[int, int], float] = {}
+    for key, v in dict(hotness).items():
+        slot = switch_slot(tree, key) if isinstance(key, int) else tuple(key)
+        hot[slot] = max(hot.get(slot, 0.0), float(v))
+    best, best_cost = None, math.inf
+    for radix in range(2, tree.num_hosts + 1):
+        cand = build_tree(tree.num_hosts, radix)
+        cost = tree_cost(cand, hot, pools)
+        if cost < best_cost:
+            best, best_cost = cand, cost
+    return best
+
+
 def rebuild_excluding_switch(tree: ReductionTree,
                              switch_id: int) -> ReductionTree | None:
     """Recompute a tree over the *same hosts* avoiding a failed switch.
@@ -210,24 +283,21 @@ def rebuild_excluding_switch(tree: ReductionTree,
     failed switch means its level must make do with one switch fewer, so
     the fan-in at that level grows until the level fits — the recomputed
     tree spans every host but concentrates traffic on the survivors.
-    Returns ``None`` when the failed switch has no sibling at its level
-    (nothing to re-route through): the caller falls back to host-based
-    allreduce, exactly the paper's admission-failure path.
+    Implemented as :func:`rebuild_avoiding` with the failed slot pinned
+    infinitely hot, which also covers the boundary the old growth loop
+    missed: at ``radix >= num_hosts`` a surviving sibling can still
+    host the whole level (candidates are enumerated from scratch, not
+    grown from the current radix).  Returns ``None`` when the failed
+    switch has no usable sibling (nothing to re-route through): the
+    caller falls back to host-based allreduce, exactly the paper's
+    admission-failure path.
     """
     node = tree.nodes[switch_id]
     if node.is_host:
         raise ValueError(f"node {switch_id} is a host; use rebuild_excluding")
-    surviving = len(tree.levels[node.level]) - 1
-    if surviving < 1:
+    if len(tree.levels[node.level]) - 1 < 1:
         return None                       # no alternative switch → host-based
-    radix = tree.radix
-    while radix < tree.num_hosts:
-        radix += 1
-        t = build_tree(tree.num_hosts, radix)
-        if len(t.levels) <= node.level \
-                or len(t.levels[node.level]) <= surviving:
-            return t
-    return None
+    return rebuild_avoiding(tree, {switch_id: math.inf})
 
 
 # ---------------------------------------------------------------------------

@@ -360,7 +360,7 @@ class SwitchTransport(Transport):
             self.tenant, mode=self.mode, num_buckets=buf.shape[0],
             bucket_elems=buf.shape[1], dtype=buf.dtype,
             reproducible=self.reproducible, design=self.design, k=k,
-            axes=self.axes)
+            axes=self.axes, fault_plan=self.fault_plan)
         return self.manager.arrival_perms(sess.tenant)
 
     def _plan_survives(self, buf, ks) -> bool:

@@ -53,6 +53,13 @@ def _parse():
     ap.add_argument("--schedule-order", type=str, default="round_robin",
                     choices=("round_robin", "priority"),
                     help="ingress interleave order for --tenants > 1")
+    ap.add_argument("--congestion-replan", type=float, default=0.0,
+                    metavar="HOTNESS",
+                    help="after training, inject HOTNESS background load "
+                         "on the fabric's first leaf slot, observe it "
+                         "through the congestion monitor and re-plan the "
+                         "sessions onto the cheapest tree (DESIGN.md §15; "
+                         "needs --tenants > 1)")
     return ap.parse_args()
 
 
@@ -148,6 +155,20 @@ def _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes):
             print(f"step {step:5d} | " + " | ".join(line) +
                   f" | dt {time.time() - t0:6.3f}s", flush=True)
     print(manager.report(), flush=True)
+    if args.congestion_replan > 0:
+        from repro.runtime import CongestionMonitor
+
+        monitor = CongestionMonitor(manager)
+        monitor.inject((1, 0), args.congestion_replan)
+        res = manager.replan(monitor, threshold=0.5, hysteresis=0.05)
+        fanins = [sorted((len(manager.tree.nodes[n].children)
+                          for n in lvl), reverse=True)
+                  for lvl in manager.tree.levels[1:]]
+        print(f"congestion replan: replanned={res.replanned} "
+              f"reason={res.reason!r} improvement_x={res.improvement_x:.3f} "
+              f"readmitted={list(res.readmitted)} "
+              f"evicted={list(res.evicted)} fanins={fanins}", flush=True)
+        print(manager.report(), flush=True)
 
 
 def main():
@@ -201,6 +222,10 @@ def main():
                           sparse_k_frac=args.sparse_k,
                           transport=args.transport,
                           fault_plan=_fault_plan(args)))
+
+    if args.congestion_replan > 0 and args.tenants <= 1:
+        sys.exit("--congestion-replan re-plans the shared switch's "
+                 "sessions; it needs --tenants > 1")
 
     if args.tenants > 1:
         return _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes)

@@ -10,7 +10,12 @@ This package validates the paper's *quantitative* claims 1:1:
     aggregation designs, dense and sparse handlers (Figures 11, 14).
   * ``network_sim``   — flow-level fat-tree simulator comparing host-ring,
     in-network dense, SparCML host-sparse and Flare in-network sparse
-    allreduce (Figure 15).
+    allreduce (Figure 15).  Every algorithm takes ``background_flows=``
+    (``BackgroundFlow`` cross traffic per link class, processor-sharing
+    ``effective_link_rates``) so the congestion monitor
+    (``repro.runtime.congestion``, DESIGN.md §15) can derive slot
+    hotness from simulated fabric contention as well as from measured
+    schedule occupancy.
 
 The switch microarchitecture itself has no TPU analogue, so its *timing*
 lives here as models; its *function* — packet handlers actually reducing

@@ -21,11 +21,19 @@ Union growth model: merging ``n`` sparse sets of density ``d`` yields
 ``min(1, d · n^(1-ω))`` — ω=0 disjoint indices (worst densification),
 ω=1 identical supports (none).  ResNet-50 bucket-top-k gradients are
 mostly disjoint: ω defaults to 0.15.
+
+Congestion (the Canary extension, DESIGN.md §15): every algorithm takes
+``background_flows=`` — injected cross traffic per link class
+(:class:`BackgroundFlow`) that scales the per-phase effective link rate
+by the processor-sharing factor ``c / (c + b)``.  These are the
+background-traffic signals ``runtime/congestion.py`` turns into
+per-switch hotness for the replan policy.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,38 +64,85 @@ class AllreduceOutcome:
 
 ENTRY_BYTES = 8              # (int32 idx, fp32 val)
 
+#: Link classes of the 2-level fat tree: host↔leaf access links and
+#: leaf↔spine aggregation links.
+LINK_CLASSES = ("host_leaf", "leaf_spine")
+
+
+@dataclasses.dataclass(frozen=True)
+class BackgroundFlow:
+    """Injected cross traffic on one link class of the fat tree.
+
+    ``gbps`` of background load shared with our allreduce on every link
+    of class ``link`` — the congestion signal the Canary-style replan
+    loop reacts to.  Flows on the same class accumulate.
+    """
+
+    link: str                   # "host_leaf" | "leaf_spine"
+    gbps: float
+
+    def __post_init__(self):
+        if self.link not in LINK_CLASSES:
+            raise ValueError(f"unknown link class {self.link!r}; "
+                             f"have {LINK_CLASSES}")
+
+    @property
+    def bytes_per_us(self) -> float:
+        return max(0.0, float(self.gbps)) / 8.0 * 1e3
+
+
+def effective_link_rates(net: FatTree,
+                         background_flows: Sequence[BackgroundFlow] = (),
+                         ) -> dict[str, float]:
+    """Per-link-class effective rate (bytes/µs) under background load.
+
+    A link of capacity ``c`` carrying ``b`` bytes/µs of background
+    traffic serves our flow the processor-sharing fraction ``c/(c+b)``
+    of the line: effective rate ``c²/(c+b)`` — monotone decreasing in
+    ``b``, → ``c`` as ``b`` → 0 (the fault-free limit is exact).
+    """
+    cap = net.link_bytes_per_us
+    load = {k: 0.0 for k in LINK_CLASSES}
+    for f in background_flows or ():
+        load[f.link] += f.bytes_per_us
+    return {k: cap * cap / (cap + b) for k, b in load.items()}
+
 
 def _union_density(d: float, n: int, omega: float) -> float:
     return min(1.0, d * n ** (1.0 - omega))
 
 
-def host_ring(z_bytes: int, net: FatTree = FatTree()) -> AllreduceOutcome:
+def host_ring(z_bytes: int, net: FatTree = FatTree(), *,
+              background_flows: Sequence[BackgroundFlow] = (),
+              ) -> AllreduceOutcome:
     """Rabenseifner ring: 2(P−1) steps of Z/P per host."""
     p = net.hosts
+    rates = effective_link_rates(net, background_flows)
     steps = 2 * (p - 1)
     per_step = z_bytes / p
     # ring edges: intra-leaf edges traverse 2 links (host→leaf→host),
-    # leaf-boundary edges 4 (host→leaf→spine→leaf→host).
+    # leaf-boundary edges 4 (host→leaf→spine→leaf→host).  Every step
+    # includes boundary edges, so the slowest link class paces the ring.
     cross = net.leaves
     intra = p - cross
     traffic = steps * per_step * (2 * intra + 4 * cross)
-    time = steps * (per_step / net.link_bytes_per_us
+    time = steps * (per_step / min(rates.values())
                     + 2 * net.hop_latency_us)
     return AllreduceOutcome("host_ring", time, traffic,
                             host_bytes=steps * per_step)
 
 
-def innet_dense(z_bytes: int, net: FatTree = FatTree()) -> AllreduceOutcome:
+def innet_dense(z_bytes: int, net: FatTree = FatTree(), *,
+                background_flows: Sequence[BackgroundFlow] = (),
+                ) -> AllreduceOutcome:
     """Flare §4 dense reduction tree: hosts→leaf→root, multicast back."""
     # streaming pipeline: each stage forwards at the min of line rate and
     # the switch's aggregation capacity share for its active ports.
     leaf_ports = net.hosts_per_leaf
-    leaf_rate = min(net.link_bytes_per_us,
-                    net.switch_dense_tbps / 8 * 1e6 / leaf_ports / 1e3 * 1e3
-                    / 1.0)  # bytes/us per port
+    rates = effective_link_rates(net, background_flows)
     # capacity per port in bytes/us: tbps → bytes/us = tbps/8 ·1e6
     cap_per_port = net.switch_dense_tbps / 8.0 * 1e6 / leaf_ports
-    eff = min(net.link_bytes_per_us, cap_per_port)
+    eff = min(min(rates.values()), cap_per_port)
     # 4 pipeline hops (host→leaf→spine→leaf→host), streamed
     time = z_bytes / eff + 4 * net.hop_latency_us
     traffic = (net.hosts * z_bytes        # hosts → leaves (up)
@@ -100,7 +155,9 @@ def innet_dense(z_bytes: int, net: FatTree = FatTree()) -> AllreduceOutcome:
 
 def sparcml(z_bytes: int, density: float, *,
             net: FatTree = FatTree(), omega: float = 0.15,
-            merge_ns_per_byte: float = 0.35) -> AllreduceOutcome:
+            merge_ns_per_byte: float = 0.35,
+            background_flows: Sequence[BackgroundFlow] = (),
+            ) -> AllreduceOutcome:
     """SparCML SSAR recursive doubling: sparse sets double each step.
 
     Each of log2(P) steps, every host exchanges its current (idx, val) set
@@ -111,6 +168,7 @@ def sparcml(z_bytes: int, density: float, *,
     break-even falls back to dense exchange (documented SparCML behaviour).
     """
     p = net.hosts
+    rates = effective_link_rates(net, background_flows)
     z_elems = z_bytes // 4
     steps = int(math.log2(p))
     total_traffic = 0.0
@@ -122,10 +180,11 @@ def sparcml(z_bytes: int, density: float, *,
         set_bytes = min(nnz * ENTRY_BYTES, z_bytes)   # dense fallback
         dist = 2 ** s
         hops = 2 if dist < net.hosts_per_leaf else 4
+        rate = rates["host_leaf"] if hops == 2 else min(rates.values())
         # both partners send simultaneously on disjoint paths
         total_traffic += p * set_bytes * hops
         host_bytes += set_bytes
-        time += set_bytes / net.link_bytes_per_us \
+        time += set_bytes / rate \
             + set_bytes * merge_ns_per_byte * 1e-3 \
             + hops * net.hop_latency_us
     return AllreduceOutcome("sparcml", time, total_traffic, host_bytes)
@@ -133,7 +192,9 @@ def sparcml(z_bytes: int, density: float, *,
 
 def flare_sparse(z_bytes: int, density: float, *,
                  net: FatTree = FatTree(), omega: float = 0.15,
-                 spill_fraction: float = 0.0) -> AllreduceOutcome:
+                 spill_fraction: float = 0.0,
+                 background_flows: Sequence[BackgroundFlow] = (),
+                 ) -> AllreduceOutcome:
     """Flare §7 in-network sparse allreduce on the reduction tree.
 
     Hosts send (idx, val) lists up; leaf switches merge (hash storage,
@@ -153,8 +214,9 @@ def flare_sparse(z_bytes: int, density: float, *,
     down = net.leaves * root_bytes + net.hosts * root_bytes
     traffic = up + down
 
+    rates = effective_link_rates(net, background_flows)
     cap_per_port = net.switch_sparse_tbps / 8.0 * 1e6 / net.hosts_per_leaf
-    eff = min(net.link_bytes_per_us, cap_per_port)
+    eff = min(min(rates.values()), cap_per_port)
     # pipeline: host uplink (k), leaf→root (leaf list), down (root list ×2)
     time = (k_bytes + leaf_bytes + 2 * root_bytes) / eff \
         + 4 * net.hop_latency_us
@@ -164,12 +226,16 @@ def flare_sparse(z_bytes: int, density: float, *,
 
 def figure15(z_bytes: int = 100 << 20, density: float = 1.0 / 512,
              net: FatTree = FatTree(), omega: float = 0.15,
+             background_flows: Sequence[BackgroundFlow] = (),
              ) -> dict[str, AllreduceOutcome]:
     """The full Fig. 15 comparison (defaults = the paper's setup:
     100 MiB vector, buckets of 512 with one value sent per bucket)."""
+    bg = tuple(background_flows)
     return {
-        "host_ring": host_ring(z_bytes, net),
-        "innet_dense": innet_dense(z_bytes, net),
-        "sparcml": sparcml(z_bytes, density, net=net, omega=omega),
-        "flare_sparse": flare_sparse(z_bytes, density, net=net, omega=omega),
+        "host_ring": host_ring(z_bytes, net, background_flows=bg),
+        "innet_dense": innet_dense(z_bytes, net, background_flows=bg),
+        "sparcml": sparcml(z_bytes, density, net=net, omega=omega,
+                           background_flows=bg),
+        "flare_sparse": flare_sparse(z_bytes, density, net=net, omega=omega,
+                                     background_flows=bg),
     }

@@ -14,6 +14,10 @@ switch (``repro.switch``):
   priority), the shared-service simulation, and per-tenant
   packet/combine/occupancy counters that cross-check
   ``perfmodel.switch_model.model_shared``.
+* ``congestion`` — hotness maps over the fabric's physical switch
+  slots (measured utilization + injected background traffic), the
+  signal half of the Canary-style dynamic-tree loop
+  (``SessionManager.replan``, DESIGN.md §15).
 
 Tenants attach through the transport layer:
 ``transports.from_config(cfg, dtype, manager=mgr, tenant=...)`` (or
@@ -30,11 +34,13 @@ from repro.runtime.partition import (ClusterSlice, Partition, POLICIES,
 from repro.runtime.scheduler import (ORDERS, SharedSchedule, TenantCounters,
                                      TenantLoad, ingress_shares, interleave,
                                      service_tau, simulate_shared)
-from repro.runtime.sessions import (AdmissionError, Session, SessionManager,
-                                    session_demand_bytes)
+from repro.runtime.congestion import CongestionMap, CongestionMonitor
+from repro.runtime.sessions import (AdmissionError, ReplanResult, Session,
+                                    SessionManager, session_demand_bytes)
 
 __all__ = [
-    "AdmissionError", "ClusterSlice", "ORDERS", "POLICIES", "Partition",
+    "AdmissionError", "ClusterSlice", "CongestionMap", "CongestionMonitor",
+    "ORDERS", "POLICIES", "Partition", "ReplanResult",
     "Session", "SessionManager", "SharedSchedule", "TenantCounters",
     "TenantLoad", "greedy_partition", "ingress_shares", "interleave",
     "make_partition", "service_tau", "session_demand_bytes",

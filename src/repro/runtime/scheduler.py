@@ -54,6 +54,12 @@ class TenantLoad:
     #: service demand the interleave must account, not new combine work
     #: (retransmitted payloads fold at most once via the seen-bitmap).
     retransmit_packets: int = 0
+    #: Congestion slowdown on this tenant's service time (DESIGN.md §15):
+    #: ``τ_eff = τ · service_scale``.  1.0 = idle fabric; the replan loop
+    #: sets ``1 + bound heat`` of the hottest slot the tree binds, so the
+    #: measured shared schedule and the analytic prediction see the same
+    #: congested operating point.
+    service_scale: float = 1.0
 
     @property
     def leaf_packets(self) -> int:
@@ -177,7 +183,8 @@ def simulate_shared(loads: Sequence[TenantLoad], *,
     invariant the partition layer guarantees.
     """
     packets = {l.tenant: l.leaf_packets for l in loads}
-    taus = {l.tenant: service_tau(l.counters, params) for l in loads}
+    taus = {l.tenant: service_tau(l.counters, params) * l.service_scale
+            for l in loads}
     cores = {l.tenant: int(l.clusters) * params.cores_per_cluster
              for l in loads}
     seq = interleave(packets, order,

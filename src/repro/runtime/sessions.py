@@ -32,6 +32,13 @@ switch failure the *rebuilt* reduction tree
 on the new tree (fan-ins grow, demands grow, some sessions may no longer
 fit → evicted to host-based fallback), mirroring the paper's recompute
 path.  ``ft.coordinator.recover_switch_failure`` drives this.
+
+``replan`` (DESIGN.md §15) generalizes that failure path into a
+*performance* trigger: a congestion map over the fabric's physical
+switch slots (``runtime.congestion``) picks the cheapest tree via
+``topology.rebuild_avoiding``, and the sessions are drained and
+re-admitted on it only when their predicted throughput improves by more
+than the hysteresis margin — the Canary-style dynamic-tree loop.
 """
 from __future__ import annotations
 
@@ -55,6 +62,36 @@ class AdmissionError(RuntimeError):
 
 
 @dataclasses.dataclass(frozen=True)
+class ReplanResult:
+    """Outcome of one ``SessionManager.replan`` pass (DESIGN.md §15).
+
+    ``replanned`` says whether the manager moved to a new tree;
+    ``reason`` is the human-readable why ("below threshold", "no
+    cheaper tree", "hysteresis", "replanned").  ``predicted_before`` /
+    ``predicted_after`` are per-tenant predicted throughputs
+    (pkts/cycle, analytic shared mode) under the observed congestion
+    map on the old and candidate trees — what the hysteresis decision
+    was made from, and what benchmarks gate on.
+    """
+
+    replanned: bool
+    reason: str
+    tree: topology.ReductionTree
+    readmitted: tuple = ()
+    evicted: tuple = ()
+    predicted_before: dict = dataclasses.field(default_factory=dict)
+    predicted_after: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def improvement_x(self) -> float:
+        """Aggregate predicted-throughput ratio after/before (1.0 when
+        nothing changed or nothing was predicted)."""
+        b = sum(self.predicted_before.values())
+        a = sum(self.predicted_after.values())
+        return (a / b) if b > 0.0 else 1.0
+
+
+@dataclasses.dataclass(frozen=True)
 class Session:
     """One tenant's live allreduce session on the shared switch."""
 
@@ -70,6 +107,12 @@ class Session:
     k: int | None = None         # sparse list capacity (top-k)
     counters: dataplane.SwitchCounters | None = None
     demand_bytes: int = 0
+    #: lossy-fabric plan (``switch.packets.FaultPlan``) this session's
+    #: transport runs under, and the static retransmission packets its
+    #: per-level fault schedules add to the leaf ingress — extra service
+    #: demand the shared scheduler must account (DESIGN.md §14).
+    fault_plan: object = None
+    retransmit_packets: int = 0
 
     @property
     def spec(self) -> tuple:
@@ -136,6 +179,10 @@ class SessionManager:
         self.fmt = fmt
         self.seed = int(seed)
         self.tree = topology.build_mesh_tree(self.axis_sizes)
+        #: the *physical* fabric: switch slots per level, frozen at
+        #: construction — rebind/replan rebuild the logical tree but the
+        #: slots it binds to (and congestion maps over them) are fixed.
+        self.fabric_pools = topology.slot_pools(self.tree)
         self._mesh_levels = topology.mesh_levels(self.axis_names,
                                                  self.axis_sizes)
         self._sessions: dict[str, Session] = {}
@@ -180,8 +227,10 @@ class SessionManager:
 
     def _counters(self, mode: str, num_buckets: int, bucket_elems: int,
                   dtype, design: str, reproducible: bool,
-                  k: int | None) -> dataplane.SwitchCounters:
-        """Static ingress counters on the *current* tree, per wire image.
+                  k: int | None, tree: topology.ReductionTree | None = None,
+                  ) -> dataplane.SwitchCounters:
+        """Static ingress counters on a tree (default: the current one),
+        per wire image.
 
         The wire carries what the transport actually frames: the arena
         dtype for dense, int8 payloads (quant-block-padded) for the F1
@@ -199,15 +248,38 @@ class SessionManager:
             wire_dtype, elems = jnp.dtype(jnp.int32), 2 * k
         else:
             raise ValueError(f"unknown session mode {mode!r}")
-        return dataplane.tree_counters(self.tree, num_buckets, elems,
+        return dataplane.tree_counters(self.tree if tree is None else tree,
+                                       num_buckets, elems,
                                        wire_dtype, fmt=self.fmt,
                                        design=design,
                                        reproducible=reproducible)
 
+    def _retransmit_packets(self, mode: str, num_buckets: int,
+                            bucket_elems: int, dtype, k: int | None,
+                            fault_plan) -> int:
+        """Static retransmissions the session's fault plan adds across
+        the current tree's levels (``dataplane.fault_schedules`` on the
+        same level shapes the transport pre-checks — the single source
+        of truth, so the scheduler's modeled demand matches the plane's
+        traced retry counters)."""
+        if fault_plan is None:
+            return 0
+        if mode == "sparse" and k is None:
+            k = max(1, bucket_elems // 100)      # same default as _counters
+        fanins = [max(len(self.tree.nodes[n].children) for n in lvl)
+                  for lvl in self.tree.levels[1:]]
+        counts = dataplane.level_packet_counts(
+            fanins, int(num_buckets), int(bucket_elems), dtype,
+            mode=mode, fmt=self.fmt, k_max=k)
+        return sum(s.retransmits
+                   for s in dataplane.fault_schedules(fault_plan, counts)
+                   if s is not None)
+
     def open(self, tenant: str, *, mode: str, num_buckets: int,
              bucket_elems: int, dtype, weight: float = 1.0,
              priority: int = 0, reproducible: bool = False,
-             design: str = "auto", k: int | None = None) -> Session:
+             design: str = "auto", k: int | None = None,
+             fault_plan=None) -> Session:
         """Admit a session, or raise :class:`AdmissionError`.
 
         Admission is the paper's: a bounded session count (each active
@@ -236,11 +308,16 @@ class SessionManager:
                 f"session {tenant!r} needs {demand} B of aggregation "
                 f"buffers; the static share is {self.bytes_per_session} B "
                 f"({self.memory_budget_bytes} B / {self.max_sessions})")
+        retransmits = self._retransmit_packets(mode, int(num_buckets),
+                                               int(bucket_elems), dtype, k,
+                                               fault_plan)
         sess = Session(tenant=tenant, mode=mode, num_buckets=int(num_buckets),
                        bucket_elems=int(bucket_elems), dtype=dtype_name,
                        weight=float(weight), priority=int(priority),
                        reproducible=bool(reproducible), design=design,
-                       k=k, counters=counters, demand_bytes=demand)
+                       k=k, counters=counters, demand_bytes=demand,
+                       fault_plan=fault_plan,
+                       retransmit_packets=retransmits)
         self._sessions[tenant] = sess
         return sess
 
@@ -248,7 +325,8 @@ class SessionManager:
                bucket_elems: int, dtype, reproducible: bool = False,
                design: str = "auto", k: int | None = None,
                weight: float = 1.0, priority: int = 0,
-               axes: Sequence[str] | None = None) -> Session:
+               axes: Sequence[str] | None = None,
+               fault_plan=None) -> Session:
         """Open-or-reuse: the transports' trace-time entry point.
 
         A session whose spec (wire image + admission-relevant knobs)
@@ -273,13 +351,14 @@ class SessionManager:
         spec = (mode, int(num_buckets), int(bucket_elems), dtype_name,
                 bool(reproducible), design, k)
         if existing is not None:
-            if existing.spec == spec:
+            if existing.spec == spec and existing.fault_plan == fault_plan:
                 return existing
             self.close(tenant)
         return self.open(tenant, mode=mode, num_buckets=num_buckets,
                          bucket_elems=bucket_elems, dtype=dtype,
                          weight=weight, priority=priority,
-                         reproducible=reproducible, design=design, k=k)
+                         reproducible=reproducible, design=design, k=k,
+                         fault_plan=fault_plan)
 
     def close(self, tenant: str) -> None:
         self._sessions.pop(str(tenant), None)
@@ -314,7 +393,8 @@ class SessionManager:
         as queued — the steady-state view.
         """
         if queued is None:
-            queued = {s.tenant: s.counters.levels[0].ingress_packets
+            queued = {s.tenant: (s.counters.levels[0].ingress_packets
+                                 + s.retransmit_packets)
                       for s in self._sessions.values()}
         return pt.make_partition(self.policy, self.weights(),
                                  self.params.clusters,
@@ -322,35 +402,43 @@ class SessionManager:
                                  queued=queued)
 
     def _loads(self, part: pt.Partition,
-               queued: dict[str, int] | None = None) -> list[sc.TenantLoad]:
+               queued: dict[str, int] | None = None,
+               service_scale: float = 1.0) -> list[sc.TenantLoad]:
         return [sc.TenantLoad(tenant=s.tenant, counters=s.counters,
                               clusters=part.clusters(s.tenant),
                               priority=s.priority,
                               queued=(None if queued is None
-                                      else queued.get(s.tenant, 0)))
+                                      else queued.get(s.tenant, 0)),
+                              retransmit_packets=s.retransmit_packets,
+                              service_scale=float(service_scale))
                 for s in self._sessions.values()]
 
-    def schedule(self, queued: dict[str, int] | None = None,
-                 ) -> sc.SharedSchedule:
+    def schedule(self, queued: dict[str, int] | None = None, *,
+                 service_scale: float = 1.0) -> sc.SharedSchedule:
         """Interleave + simulate the active sessions' leaf ingress.
 
         With a ``queued`` backlog snapshot, both the partition (greedy
         reclamation) and the simulated packet counts follow it — an
         idle tenant gets 0 clusters *and* 0 scheduled packets, which is
-        exactly the work-conserving pairing.
+        exactly the work-conserving pairing.  ``service_scale`` slows
+        every service time by the congestion factor (DESIGN.md §15) so
+        the measured counters reflect a congested fabric.
         """
         return sc.simulate_shared(self._loads(self.partition(queued),
-                                              queued),
+                                              queued, service_scale),
                                   order=self.order, params=self.params)
 
-    def predicted(self) -> tuple[sm.TenantPoint, ...]:
+    def predicted(self, *, service_scale: float = 1.0,
+                  ) -> tuple[sm.TenantPoint, ...]:
         """The analytic shared-switch mode at the current partition."""
         part = self.partition()
-        packets = {s.tenant: s.counters.levels[0].ingress_packets
+        packets = {s.tenant: (s.counters.levels[0].ingress_packets
+                              + s.retransmit_packets)
                    for s in self._sessions.values()}
         shares = sc.ingress_shares(packets, self.order)
         allocs = [(s.tenant, part.clusters(s.tenant),
-                   sc.service_tau(s.counters, self.params),
+                   sc.service_tau(s.counters, self.params)
+                   * float(service_scale),
                    shares[s.tenant])
                   for s in self._sessions.values()]
         return sm.model_shared(allocs, self.params)
@@ -413,13 +501,116 @@ class SessionManager:
                           bucket_elems=s.bucket_elems, dtype=s.dtype,
                           weight=s.weight, priority=s.priority,
                           reproducible=s.reproducible, design=s.design,
-                          k=s.k)
+                          k=s.k, fault_plan=s.fault_plan)
                 readmitted.append(s.tenant)
             except AdmissionError:
                 evicted.append(s.tenant)
                 self.evictions.append((s.tenant, "no longer fits rebuilt "
                                                  "tree"))
         return tuple(readmitted), tuple(evicted)
+
+    # -- congestion-aware replanning (DESIGN.md §15) -----------------------
+    def congestion_factor(self, hotness,
+                          tree: topology.ReductionTree | None = None,
+                          ) -> float:
+        """The multiplicative slowdown a congestion map imposes on a
+        tree's bottleneck: hot cost over cold cost on the physical
+        fabric (``topology.tree_cost``).  1.0 = the map doesn't touch
+        the tree's critical switch; ``inf`` = the tree is infeasible."""
+        tree = self.tree if tree is None else tree
+        cold = topology.tree_cost(tree, {}, self.fabric_pools)
+        hot = topology.tree_cost(tree, hotness, self.fabric_pools)
+        if not math.isfinite(hot) or cold <= 0.0:
+            return math.inf
+        return hot / cold
+
+    def _predict_under(self, tree: topology.ReductionTree,
+                       hotness) -> dict[str, float]:
+        """Per-tenant predicted throughput (pkts/cycle) with counters
+        recomputed on ``tree`` and τ scaled by its congestion factor."""
+        factor = self.congestion_factor(hotness, tree)
+        if not math.isfinite(factor):
+            return {t: 0.0 for t in self._sessions}
+        part = self.partition()
+        counters = {
+            s.tenant: self._counters(s.mode, s.num_buckets, s.bucket_elems,
+                                     s.dtype, s.design, s.reproducible,
+                                     s.k, tree=tree)
+            for s in self._sessions.values()}
+        packets = {s.tenant: (counters[s.tenant].levels[0].ingress_packets
+                              + s.retransmit_packets)
+                   for s in self._sessions.values()}
+        shares = sc.ingress_shares(packets, self.order)
+        allocs = [(s.tenant, part.clusters(s.tenant),
+                   sc.service_tau(counters[s.tenant], self.params) * factor,
+                   shares[s.tenant])
+                  for s in self._sessions.values()]
+        return {p.tenant: p.bandwidth_pkts
+                for p in sm.model_shared(allocs, self.params)}
+
+    def replan(self, monitor=None, *, hotness=None,
+               threshold: float = 0.5,
+               hysteresis: float = 0.05) -> "ReplanResult":
+        """Congestion-triggered drain → rebuild → re-admit.
+
+        The PR 5 failure path generalized to a *performance* trigger
+        (Canary, DESIGN.md §15): when the congestion map's hottest slot
+        reaches ``threshold``, pick the cheapest feasible tree under the
+        map (``topology.rebuild_avoiding`` over the fixed physical
+        fabric) and move the sessions onto it — but only those whose
+        predicted throughput improves by more than the ``hysteresis``
+        margin; the rest are evicted to host-based fallback rather than
+        ping-ponged.  A successful replan lands on the cost argmin, so
+        re-observing the same (static) map is a no-op — hysteresis makes
+        oscillation impossible, property-tested.  Rebinding bumps the
+        epoch: arrival permutations re-roll deterministically.
+
+        Pass a ``runtime.congestion.CongestionMonitor`` (observed here),
+        or a raw ``hotness`` map keyed by ``(level, index)`` fabric
+        slots / node ids of the current tree.
+        """
+        if monitor is not None:
+            hot = dict(monitor.observe().hotness)
+        elif hotness is not None:
+            hot = {}
+            for key, v in dict(hotness).items():
+                slot = (topology.switch_slot(self.tree, key)
+                        if isinstance(key, int) else tuple(key))
+                hot[slot] = max(hot.get(slot, 0.0), float(v))
+        else:
+            raise ValueError("replan needs a monitor= or a hotness= map")
+        before = self._predict_under(self.tree, hot)
+        peak = max(hot.values(), default=0.0)
+        if peak < threshold:
+            return ReplanResult(False, "below threshold", self.tree,
+                                predicted_before=before,
+                                predicted_after=before)
+        cand = topology.rebuild_avoiding(self.tree, hot,
+                                         pools=self.fabric_pools)
+        # same node ids can carry different fan-in assignments, so
+        # structural equality must compare the children maps, not just
+        # the level shapes
+        if cand is None or (cand.levels == self.tree.levels
+                            and cand.nodes == self.tree.nodes):
+            return ReplanResult(False, "no cheaper tree", self.tree,
+                                predicted_before=before,
+                                predicted_after=before)
+        after = self._predict_under(cand, hot)
+        improved = {t for t in before
+                    if after.get(t, 0.0) > before[t] * (1.0 + hysteresis)}
+        if self._sessions and not improved:
+            return ReplanResult(False, "hysteresis", self.tree,
+                                predicted_before=before,
+                                predicted_after=after)
+        dropped = tuple(sorted(set(before) - improved))
+        for t in dropped:
+            self.evict(t, reason="replan: no predicted improvement")
+        readmitted, evicted = self.rebind(cand)
+        return ReplanResult(True, "replanned", cand,
+                            readmitted=readmitted,
+                            evicted=dropped + evicted,
+                            predicted_before=before,
+                            predicted_after=after)
 
     # -- reporting ---------------------------------------------------------
     def report(self) -> str:

@@ -7,15 +7,17 @@ Invoked by tests/test_collectives.py as::
 
 Groups: collectives | arena_pipeline | sparse_quant | fsdp_engine |
         trainer | repro | transports | hierarchy | switch | runtime |
-        sparse_densify | chaos
+        sparse_densify | chaos | canary
 Exits non-zero on any failure (assertion output on stderr).
 
-The ``hierarchy``, ``switch``, ``runtime``, ``sparse_densify`` and
-``chaos`` groups are mesh-shape-parametric: ``REPRO_MESH_SHAPE``
+The ``hierarchy``, ``switch``, ``runtime``, ``sparse_densify``,
+``chaos`` and ``canary`` groups are mesh-shape-parametric:
+``REPRO_MESH_SHAPE``
 (e.g. ``8`` or ``2x4``, the ``(pod, data)`` reduction axes) selects the
 topology, and the pytest wrapper runs it under both the flat and the
 two-level shape via the ``--mesh-shape`` conftest option.
 """
+import math
 import os
 import sys
 
@@ -1140,6 +1142,126 @@ def check_chaos():
     print(f"chaos OK ({pod}x{data})")
 
 
+def check_canary():
+    """PR 8: congestion-aware dynamic trees (DESIGN.md §15).
+
+    Mesh-shape-parametric.  A reproducible fixed-tree dense tenant (the
+    *canary*) and a sparse bystander share the switch; a
+    ``CongestionMonitor`` observes an injected hot leaf slot plus
+    background leaf↔spine traffic and ``SessionManager.replan`` moves
+    the sessions onto the cheapest tree under that map.  Verified on
+    real tensors:
+      * the canary's result is **bitwise identical** before and after
+        the replan (the rebind changes the control plane and the
+        arrival-permutation epoch, never the fixed-tree math);
+      * on the two-level mesh the replan actually routes around the hot
+        slot (tree changes, predicted throughput improves, epoch
+        bumps); on the flat mesh there is no alternate shape and the
+        replan is a structural no-op — in both cases idempotent
+        (re-observing the same map never replans again);
+      * the shared-switch model and the measured scheduler agree at the
+        *congested* operating point (τ scaled by the congestion
+        factor) within the usual tolerance band.
+    """
+    from repro.perfmodel import network_sim as ns
+    from repro.runtime import CongestionMonitor, SessionManager
+
+    pod, data = _mesh_shape()
+    mesh = launch_mesh.make_fake_mesh((pod, data))
+    world = pod * data
+    rng = np.random.default_rng(83)
+
+    def run(fn, xs):
+        g = jax.jit(compat.shard_map(
+            fn, in_specs=(P(("pod", "data"), None),), out_specs=P(None),
+            axis_names={"pod", "data"}, check_vma=False))
+        with compat.set_mesh(mesh):
+            x = jax.device_put(xs, NamedSharding(mesh,
+                                                 P(("pod", "data"), None)))
+            return np.asarray(g(x))
+
+    shapes = {"canary": (2, 96), "bg": (2, 192)}
+    cfgs = {
+        "canary": FlareConfig(axes=("pod", "data"), transport="innetwork",
+                              reproducible=True),
+        "bg": FlareConfig(axes=("pod", "data"), transport="innetwork",
+                          sparse_k_frac=0.1),
+    }
+    xs = {n: jnp.asarray((rng.normal(size=(world, b * s)) * 1e2)
+                         .astype(np.float32))
+          for n, (b, s) in shapes.items()}
+
+    def tfn(name, mgr):
+        b, s = shapes[name]
+
+        def fn(x):
+            t = transports.from_config(cfgs[name], jnp.float32,
+                                       manager=mgr, tenant=name)
+            arena = x[0].reshape(b, s)
+            ef = jnp.zeros_like(arena) if t.needs_state else None
+            red, _ = t(arena, ef, jnp.zeros((b,), jnp.int32), (s,) * b)
+            return red
+        return fn
+
+    mgr = SessionManager(("pod", "data"), (pod, data), seed=11)
+    before = {n: run(tfn(n, mgr), xs[n]) for n in shapes}
+    assert len(mgr.active()) == 2, [s.tenant for s in mgr.active()]
+    old_nodes = mgr.tree.nodes
+    old_epoch = mgr._epoch
+
+    monitor = CongestionMonitor(mgr)
+    monitor.inject((1, 0), 2.0)
+    monitor.inject_flow(ns.BackgroundFlow("leaf_spine", 10.0))
+    res = mgr.replan(monitor, threshold=0.5, hysteresis=0.05)
+
+    multi_leaf = mgr.fabric_pools.get(1, 0) >= 2
+    if multi_leaf:
+        assert res.replanned and res.reason == "replanned", res
+        assert mgr.tree.nodes != old_nodes, "replan must route around"
+        assert mgr._epoch == old_epoch + 1, "rebind must bump the epoch"
+        assert res.improvement_x > 1.0, res.improvement_x
+        assert sorted(res.readmitted) == sorted(shapes), res
+        assert not res.evicted, res
+    else:
+        assert not res.replanned and res.reason == "no cheaper tree", res
+        assert mgr.tree.nodes == old_nodes
+
+    # idempotence: the same (static) map never replans twice
+    res2 = mgr.replan(monitor, threshold=0.5, hysteresis=0.05)
+    assert not res2.replanned and res2.reason == "no cheaper tree", res2
+
+    # the canary's bits survive the replan: fresh traces on the
+    # rebound manager equal the pre-replan results exactly
+    for n in shapes:
+        after = run(tfn(n, mgr), xs[n])
+        assert after.tobytes() == before[n].tobytes(), \
+            f"{n}: replan changed bits"
+
+    # model ↔ measured at the *congested* operating point: both sides
+    # see τ scaled by the same congestion factor.  Saturated sessions
+    # (as in check_runtime) keep the comparison in the
+    # bandwidth-dominated regime the tolerance band is calibrated for.
+    big = SessionManager(("pod", "data"), (pod, data))
+    big.open("canary", mode="dense", num_buckets=8, bucket_elems=1 << 15,
+             dtype=jnp.float32, reproducible=True)
+    big.open("bg", mode="sparse", num_buckets=8, bucket_elems=1 << 15,
+             dtype=jnp.float32, k=2048)
+    bigmon = CongestionMonitor(big)
+    bigmon.inject((1, 0), 2.0)
+    bigmon.inject_flow(ns.BackgroundFlow("leaf_spine", 10.0))
+    hot = dict(bigmon.observe().hotness)
+    factor = big.congestion_factor(hot)
+    assert factor >= 1.0 and math.isfinite(factor), factor
+    sched = big.schedule(service_scale=factor)
+    pred = {p.tenant: p for p in big.predicted(service_scale=factor)}
+    for c in sched.counters:
+        p = pred[c.tenant]
+        assert 0.5 * p.bandwidth_pkts < c.throughput_pkts \
+            < 1.8 * p.bandwidth_pkts, \
+            (c.tenant, c.throughput_pkts, p.bandwidth_pkts)
+    print(f"canary OK ({pod}x{data})")
+
+
 GROUPS = {
     "collectives": check_collectives,
     "arena_pipeline": check_arena_pipeline,
@@ -1153,6 +1275,7 @@ GROUPS = {
     "runtime": check_runtime,
     "sparse_densify": check_sparse_densify,
     "chaos": check_chaos,
+    "canary": check_canary,
 }
 
 if __name__ == "__main__":

@@ -54,6 +54,13 @@ def test_run_quick_smoke():
     assert "quick.chaos.retry_rate" in names, names
     retry = [l for l in rows if l.startswith("quick.chaos.retry_rate,")]
     assert float(retry[0].split(",")[1]) > 0, retry
+    # PR 8: congestion-aware dynamic trees — the replan's predicted win
+    # on the two-level fabric must never be a degradation
+    for mode in ("static", "dynamic"):
+        assert f"quick.canary.{mode}.pred_pkts_per_cy" in names, names
+    assert "quick.canary.contention_x" in names, names
+    cx = [l for l in rows if l.startswith("quick.canary.contention_x,")]
+    assert float(cx[0].split(",")[1]) >= 1.0, cx
     # wall-clock values are positive microseconds
     for l in rows:
         assert float(l.split(",")[1]) > 0, l
@@ -103,3 +110,6 @@ def test_quick_expected_rows_cover_all_transports():
         assert f"quick.switch.{t}.slotloop.us_per_call" in names
     assert "quick.chaos.overhead_x" in names
     assert "quick.chaos.retry_rate" in names
+    assert "quick.canary.contention_x" in names
+    for m in ("static", "dynamic"):
+        assert f"quick.canary.{m}.pred_pkts_per_cy" in names

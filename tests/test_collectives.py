@@ -58,6 +58,16 @@ def test_multidevice_runtime(mesh_shape):
     assert "OK" in out
 
 
+def test_multidevice_canary(mesh_shape):
+    """Congestion-aware dynamic trees (PR 8, DESIGN.md §15): a hot leaf
+    slot triggers a replan onto the cheapest tree, the reproducible
+    fixed-tree canary tenant stays bitwise identical across the rebind,
+    the replan is idempotent under a static map, and model ↔ measured
+    agree at the congested operating point — under both mesh shapes."""
+    out = _run_group("canary", mesh_shape=mesh_shape)
+    assert "OK" in out
+
+
 @pytest.mark.chaos
 def test_multidevice_chaos(mesh_shape):
     """The lossy-fabric reliability layer (PR 6, DESIGN.md §14): dense /

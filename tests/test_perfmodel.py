@@ -164,3 +164,56 @@ def test_densification_toward_root():
     """§7: merged density grows monotonically with fan-in."""
     ds = [ns._union_density(0.002, n, 0.15) for n in (1, 8, 64)]
     assert ds[0] < ds[1] < ds[2]
+
+
+# ---------------------------------------------------------------------------
+# Background flows and effective link rates (Canary, DESIGN.md §15).
+# ---------------------------------------------------------------------------
+
+def test_link_rate_units():
+    """Regression for the dead garbled ``leaf_rate`` block that used to
+    sit in ``innet_dense``: the line-rate conversion is gbps/8·1e3
+    bytes/µs — 1 Tbps ⇒ 1.25e5 B/µs, and the default 100 Gb/s fat tree
+    ⇒ 1.25e4 B/µs, which with no background load is exactly the
+    effective rate on every link class."""
+    assert ns.FatTree(link_gbps=1000.0).link_bytes_per_us == 1.25e5
+    net = ns.FatTree()
+    assert net.link_bytes_per_us == 1.25e4
+    rates = ns.effective_link_rates(net)
+    assert set(rates) == set(ns.LINK_CLASSES)
+    assert all(r == net.link_bytes_per_us for r in rates.values())
+
+
+def test_background_flow_validation():
+    with pytest.raises(ValueError):
+        ns.BackgroundFlow("backbone", 10.0)
+    f = ns.BackgroundFlow("host_leaf", 8.0)
+    assert f.bytes_per_us == 1e3
+
+
+@given(st.floats(0.0, 400.0), st.floats(0.0, 400.0))
+@settings(max_examples=50, deadline=None)
+def test_effective_rate_monotone_in_background(b1, b2):
+    """More background traffic never speeds a link up, and the
+    fault-free limit is exact (processor sharing c²/(c+b))."""
+    net = ns.FatTree()
+    lo, hi = sorted((b1, b2))
+    r_lo = ns.effective_link_rates(
+        net, [ns.BackgroundFlow("host_leaf", lo)])["host_leaf"]
+    r_hi = ns.effective_link_rates(
+        net, [ns.BackgroundFlow("host_leaf", hi)])["host_leaf"]
+    assert r_hi <= r_lo <= net.link_bytes_per_us
+    assert ns.effective_link_rates(net)["host_leaf"] \
+        == net.link_bytes_per_us
+
+
+def test_background_flows_slow_every_algorithm():
+    """Injected cross traffic strictly slows all four Fig.-15 algorithms
+    and never changes the bytes they move."""
+    bg = [ns.BackgroundFlow("host_leaf", 50.0),
+          ns.BackgroundFlow("leaf_spine", 50.0)]
+    idle = ns.figure15()
+    busy = ns.figure15(background_flows=bg)
+    for name in idle:
+        assert busy[name].time_us > idle[name].time_us, name
+        assert busy[name].network_bytes == idle[name].network_bytes, name

@@ -405,3 +405,240 @@ def test_report_names_every_session():
              dtype=jnp.float32, k=8)
     rep = mgr.report()
     assert "a:" in rep and "b:" in rep and "predicted" in rep
+
+
+# ---------------------------------------------------------------------------
+# Lossy sessions: retransmission demand reaches the shared scheduler.
+# ---------------------------------------------------------------------------
+
+def test_lossy_session_schedules_retransmit_demand():
+    """Regression: ``_loads`` used to drop ``Session.retransmit_packets``
+    on the floor — a lossy tenant's modeled service demand silently
+    equalled the fault-free one.  The fault plan's static retransmit
+    count must reach the scheduled packets, the partition's queued view
+    and the analytic prediction alike."""
+    from repro.switch.packets import FaultPlan
+    kw = dict(mode="dense", num_buckets=4, bucket_elems=256,
+              dtype=jnp.float32)
+    clean = _mgr()
+    clean.open("t", **kw)
+    lossy = _mgr()
+    lossy.open("t", **kw, fault_plan=FaultPlan(seed=1, drop=0.2))
+    sess = lossy.session("t")
+    assert sess.retransmit_packets > 0
+    base = clean.session("t").counters.levels[0].ingress_packets
+    assert lossy.schedule().tenant("t").packets \
+        == base + sess.retransmit_packets \
+        > clean.schedule().tenant("t").packets
+    # steady-state queued view includes the retransmissions too
+    assert lossy.partition() is not None     # no work-conserving error
+    assert lossy.schedule(queued={"t": 5}).tenant("t").packets \
+        == 5 + sess.retransmit_packets
+
+
+def test_attach_reopens_on_changed_fault_plan():
+    """Same wire spec but a different fault plan is a *different*
+    session: the retransmit demand must be recomputed."""
+    from repro.switch.packets import FaultPlan
+    mgr = _mgr()
+    kw = dict(mode="dense", num_buckets=4, bucket_elems=256,
+              dtype=jnp.float32)
+    a = mgr.attach("t", **kw)
+    assert a.retransmit_packets == 0
+    b = mgr.attach("t", **kw, fault_plan=FaultPlan(seed=1, drop=0.2))
+    assert b.retransmit_packets > 0
+    assert mgr.attach("t", **kw,
+                      fault_plan=FaultPlan(seed=1, drop=0.2)) is b
+
+
+def test_rebind_preserves_fault_plan():
+    """The failure path re-opens sessions with their fault plans: a
+    lossy tenant's retransmit demand survives the rebind (recomputed on
+    the new tree, not silently zeroed)."""
+    from repro.core import topology
+    from repro.switch.packets import FaultPlan
+    mgr = _mgr()
+    mgr.open("t", mode="dense", num_buckets=4, bucket_elems=256,
+             dtype=jnp.float32, fault_plan=FaultPlan(seed=1, drop=0.2))
+    readmitted, evicted = mgr.rebind(topology.build_tree(8, 4))
+    assert readmitted == ("t",) and not evicted
+    sess = mgr.session("t")
+    assert sess.fault_plan is not None
+    assert sess.retransmit_packets > 0
+
+
+# ---------------------------------------------------------------------------
+# Congestion-aware replanning (DESIGN.md §15).
+# ---------------------------------------------------------------------------
+
+def _open_two(mgr):
+    mgr.open("a", mode="dense", num_buckets=2, bucket_elems=256,
+             dtype=jnp.float32, reproducible=True)
+    mgr.open("b", mode="sparse", num_buckets=2, bucket_elems=512,
+             dtype=jnp.float32, k=16)
+
+
+def test_replan_below_threshold_is_noop():
+    mgr = _mgr()
+    _open_two(mgr)
+    res = mgr.replan(hotness={(1, 0): 0.3}, threshold=0.5)
+    assert not res.replanned and res.reason == "below threshold"
+    assert res.predicted_after == res.predicted_before
+    assert mgr._epoch == 0 and res.improvement_x == 1.0
+
+
+def test_replan_routes_around_hot_slot():
+    mgr = _mgr()
+    _open_two(mgr)
+    old_nodes = mgr.tree.nodes
+    res = mgr.replan(hotness={(1, 0): 2.0}, threshold=0.5)
+    assert res.replanned and res.reason == "replanned"
+    assert mgr.tree.nodes != old_nodes
+    assert mgr._epoch == 1                       # fresh arrival perms
+    assert sorted(res.readmitted) == ["a", "b"] and not res.evicted
+    assert res.improvement_x > 1.0
+    for t in res.predicted_before:
+        assert res.predicted_after[t] > res.predicted_before[t]
+    # the hot slot now carries the smallest fan-in at its level
+    fanins = sorted((len(mgr.tree.nodes[n].children)
+                     for n in mgr.tree.levels[1]), reverse=True)
+    assert fanins == [6, 2]
+
+
+def test_replan_hysteresis_blocks_marginal_move():
+    """A cheaper tree that doesn't clear the hysteresis margin must not
+    move anything (no ping-pong on noise)."""
+    mgr = _mgr()
+    _open_two(mgr)
+    res = mgr.replan(hotness={(1, 0): 2.0}, threshold=0.5,
+                     hysteresis=1e9)
+    assert not res.replanned and res.reason == "hysteresis"
+    assert mgr._epoch == 0 and mgr.active()
+
+
+def test_replan_accepts_node_id_hotness_and_requires_a_map():
+    mgr = _mgr()
+    _open_two(mgr)
+    hot_switch = mgr.tree.levels[1][0]
+    res = mgr.replan(hotness={hot_switch: 2.0})
+    assert res.replanned
+    with pytest.raises(ValueError, match="monitor= or a hotness="):
+        mgr.replan()
+
+
+def test_congestion_monitor_observe_shapes():
+    from repro.runtime import CongestionMonitor
+    mgr = _mgr()
+    mon = CongestionMonitor(mgr)
+    m = mon.observe()
+    # idle switch → every physical slot exists at heat 0
+    assert set(m.hotness) == {(lvl, i)
+                              for lvl, n in mgr.fabric_pools.items()
+                              for i in range(n)}
+    assert m.peak() == 0.0
+    mon.inject((1, 1), 1.5)
+    m2 = mon.observe()
+    assert m2.hottest() == (1, 1) and m2.of((1, 1)) == 1.5
+    with pytest.raises(ValueError, match=">= 0"):
+        mon.inject((1, 0), -1.0)
+
+
+def test_service_scale_slows_measured_and_predicted():
+    mgr = _mgr()
+    _open_two(mgr)
+    base = mgr.schedule()
+    slow = mgr.schedule(service_scale=3.0)
+    for c in base.counters:
+        s = slow.tenant(c.tenant)
+        assert s.occupancy_cycles == pytest.approx(3.0
+                                                   * c.occupancy_cycles)
+        assert s.throughput_pkts < c.throughput_pkts
+    pb = {p.tenant: p.bandwidth_pkts for p in mgr.predicted()}
+    ps = {p.tenant: p.bandwidth_pkts
+          for p in mgr.predicted(service_scale=3.0)}
+    assert all(ps[t] < pb[t] for t in pb)
+
+
+def test_congestion_factor_matches_tree_costs():
+    from repro.core import topology
+    mgr = _mgr()
+    hot = {(1, 0): 2.0}
+    assert mgr.congestion_factor({}) == 1.0
+    assert mgr.congestion_factor(hot) == pytest.approx(
+        topology.tree_cost(mgr.tree, hot, mgr.fabric_pools)
+        / topology.tree_cost(mgr.tree, {}, mgr.fabric_pools))
+    inf = float("inf")
+    all_hot = {(lvl, i): inf for lvl, n in mgr.fabric_pools.items()
+               for i in range(n)}
+    assert mgr.congestion_factor(all_hot) == inf
+
+
+# -- hypothesis properties (DESIGN.md §15) ----------------------------------
+
+@given(st.lists(st.tuples(st.integers(0, 2), st.floats(0.0, 5.0)),
+                min_size=1, max_size=6),
+       st.lists(st.sampled_from(["host_leaf", "leaf_spine"]),
+                max_size=3))
+@settings(max_examples=40, deadline=None)
+def test_hotness_monotone_in_injected_load(injections, flow_links):
+    """Adding load — per-slot or per-link-class — never cools any slot."""
+    from repro.perfmodel import network_sim as ns
+    from repro.runtime import CongestionMonitor
+    mgr = _mgr()
+    mon = CongestionMonitor(mgr)
+    slots = [(lvl, i) for lvl, n in mgr.fabric_pools.items()
+             for i in range(n)]
+    prev = mon.observe()
+    for idx, h in injections:
+        mon.inject(slots[idx % len(slots)], h)
+        cur = mon.observe()
+        assert all(cur.of(s) >= prev.of(s) for s in slots)
+        prev = cur
+    for link in flow_links:
+        mon.inject_flow(ns.BackgroundFlow(link, 25.0))
+        cur = mon.observe()
+        assert all(cur.of(s) >= prev.of(s) for s in slots)
+        prev = cur
+
+
+@given(st.floats(0.6, 4.0), st.integers(0, 1))
+@settings(max_examples=20, deadline=None)
+def test_replan_never_oscillates_on_static_load(heat, slot_idx):
+    """Under an unchanging congestion map, at most ONE replan happens —
+    the argmin tree is a fixed point of the policy."""
+    mgr = _mgr()
+    _open_two(mgr)
+    hot = {(1, slot_idx): heat}
+    first = mgr.replan(hotness=hot, threshold=0.5)
+    for _ in range(3):
+        again = mgr.replan(hotness=hot, threshold=0.5)
+        assert not again.replanned, (first.reason, again.reason)
+    assert mgr._epoch <= 1
+
+
+@given(st.integers(1, 3), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_counters_conserve_across_replan(n_tenants, seed):
+    """The PR 5 conservation harness across a replan: on the re-planned
+    tree every tenant's shared packet/combine/occupancy counters still
+    equal its solo totals — the new interleave reorders the (new) work,
+    it never creates or destroys any."""
+    from repro.runtime import scheduler as rt_sched
+    rng = np.random.default_rng(seed)
+    mgr = _mgr()
+    for i in range(n_tenants):
+        mgr.open(f"t{i}", mode="dense",
+                 num_buckets=int(rng.integers(1, 4)),
+                 bucket_elems=int(rng.integers(1, 9)) * 512,
+                 dtype=jnp.float32)
+    res = mgr.replan(hotness={(1, 0): 2.0}, threshold=0.5)
+    assert res.replanned or res.reason == "hysteresis"
+    shared = mgr.schedule()
+    for s in mgr.active():
+        solo = rt_sched.simulate_shared(
+            [rt_sched.TenantLoad(s.tenant, s.counters,
+                                 mgr.params.clusters)]).tenant(s.tenant)
+        got = shared.tenant(s.tenant)
+        assert got.packets == solo.packets
+        assert got.combines == solo.combines
+        assert got.occupancy_cycles == pytest.approx(solo.occupancy_cycles)

@@ -1,4 +1,6 @@
 """Reduction tree + network-manager control plane (paper §1, §4)."""
+import dataclasses
+
 import pytest
 from hypothesis import given, settings, strategies as st
 
@@ -99,6 +101,71 @@ def test_exclude_switch_host_fallback():
     assert topology.rebuild_excluding_switch(t, t.root.node_id) is None
     t = topology.build_tree(16, 4)
     assert topology.rebuild_excluding_switch(t, t.root.node_id) is None
+
+
+def test_exclude_switch_maximal_radix():
+    """Regression: the old rebuild grew the radix starting from
+    ``tree.radix + 1``, so a tree already at maximal radix (radix ≥
+    num_hosts) had an empty growth range and wrongly fell back to host
+    collectives (None) even when a sibling switch could absorb the
+    load.  A 2-switch leaf level labelled radix-4 over 4 hosts must
+    re-plan onto the surviving single-switch tree."""
+    t = dataclasses.replace(topology.build_tree(4, 2), radix=4)
+    assert len(t.levels[1]) == 2
+    t2 = topology.rebuild_excluding_switch(t, t.levels[1][0])
+    assert t2 is not None
+    assert t2.num_hosts == 4
+    assert [len(lvl) for lvl in t2.levels] == [4, 1]
+
+
+def test_switch_slot_and_pools():
+    t = topology.build_tree(16, 4)
+    assert topology.slot_pools(t) == {1: 4, 2: 1}
+    assert topology.switch_slot(t, t.levels[1][2]) == (1, 2)
+    assert topology.switch_slot(t, t.root.node_id) == (2, 0)
+    with pytest.raises(ValueError):
+        topology.switch_slot(t, 0)                    # hosts have no slot
+
+
+def test_tree_cost():
+    """Cold cost is the max fan-in; heat multiplies the fan-in bound to
+    the slot with the greedy largest-fanin ↔ coolest-slot pairing; a
+    level wider than its physical pool is infeasible."""
+    t = topology.build_tree(8, 4)                     # fanins [4, 4], [2]
+    assert topology.tree_cost(t, {}) == 4.0
+    assert topology.tree_cost(t, {(1, 0): 2.0}) == 12.0
+    assert topology.tree_cost(t, {(2, 0): 0.5}) == 4.0
+    # one hot leaf slot out of a wider pool: the coolest slots win
+    pools = {1: 3, 2: 1}
+    assert topology.tree_cost(t, {(1, 2): 9.0}, pools) == 4.0
+    # narrower pool than the level needs → inf
+    assert topology.tree_cost(t, {}, {1: 1, 2: 1}) == float("inf")
+
+
+def test_rebuild_avoiding_routes_around_hot_slot():
+    """A hot leaf slot makes the balanced split lose to an asymmetric
+    one that parks the small fan-in on the hot switch."""
+    t = topology.build_mesh_tree((2, 4))              # fanins [4, 4], [2]
+    hot = {(1, 0): 2.0}
+    best = topology.rebuild_avoiding(t, hot)
+    assert best is not None
+    fanins = sorted((len(best.nodes[n].children) for n in best.levels[1]),
+                    reverse=True)
+    assert fanins == [6, 2]                           # cost 6 beats 12
+    assert topology.tree_cost(best, hot) < topology.tree_cost(t, hot)
+    # node-id keyed hotness resolves through the current tree's slots
+    assert topology.rebuild_avoiding(t, {t.levels[1][0]: 2.0}).nodes \
+        == best.nodes
+
+
+def test_rebuild_avoiding_all_hot_is_host_fallback():
+    """Every physical slot unusable → no feasible tree → None (the
+    host-based fallback), matching failure-as-infinite-heat."""
+    t = topology.build_mesh_tree((2, 4))
+    inf = float("inf")
+    hot = {slot: inf for lvl, n in topology.slot_pools(t).items()
+           for slot in ((lvl, i) for i in range(n))}
+    assert topology.rebuild_avoiding(t, hot) is None
 
 
 def test_network_manager_switch_failure_paths():
