@@ -501,6 +501,72 @@ print(f"quick.canary.dynamic.pred_pkts_per_cy,{c_dynamic:.4f},"
       f"replanned={cres.replanned}")
 print(f"quick.canary.contention_x,{c_dynamic/c_static:.2f},"
       f"dynamic/static_pred")
+
+# flight recorder (PR 9, DESIGN.md §16): telemetry is an off-path
+# observer — counters come from the static schedules at trace/admission
+# time and spans wrap *tracing*, never the compiled program — so the
+# instrumented dense in-network step must cost the same as the bare one
+# (run_quick() gates the ratio at <= 1.05x).  Interleaved measurement
+# rounds, like the runtime section: noise hits both variants alike.
+from repro.obs import Telemetry, counting_clock, timeline
+obs_tm = Telemetry.create()
+with compat.set_mesh(mesh8):
+    ad = jax.device_put(arena, NamedSharding(mesh8, P()))
+    fns = {}
+    for label, tm in [("bare", None), ("telemetry", obs_tm)]:
+        cfg = FlareConfig(axes=("data",), transport="innetwork",
+                          telemetry=tm)
+        t = transports.from_config(cfg, jnp.float32, batched=True)
+        fns[label] = jax.jit(compat.shard_map(
+            lambda a, t=t: t(a, jnp.zeros_like(a),
+                             jnp.zeros((B,), jnp.int32), exts)[0],
+            in_specs=(P(),), out_specs=P(), axis_names={"data"},
+            check_vma=False))
+        jax.block_until_ready(fns[label](ad))   # compile + warm both
+    ts = {label: float("inf") for label in fns}
+    for _round in range(5):
+        for label, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(ad))
+            ts[label] = min(ts[label], time.perf_counter() - t0)
+    for label in ("bare", "telemetry"):
+        print(f"quick.obs.{label}.us_per_call,{ts[label]*1e6:.0f},"
+              f"8dev_cpu_B{B}xS{S}_dense_innetwork")
+    print(f"quick.obs.overhead_x,{ts['telemetry']/ts['bare']:.2f},"
+          f"telemetry/bare_dense_innetwork")
+
+# trace-export round trip: a 2-tenant manager run under a counting
+# clock, modeled timeline laid in, exported to Chrome JSON and loaded
+# back — the row value is the track count, and the child asserts every
+# tenant owns at least one track (the Perfetto smoke of satellite f).
+import json as _json, tempfile
+tm2 = Telemetry.create(clock=counting_clock())
+mgr2 = SessionManager(("data",), (8,), seed=0, telemetry=tm2)
+with compat.set_mesh(mesh8):
+    ad = jax.device_put(arena, NamedSharding(mesh8, P()))
+    for tenant, kw in [("a", dict()), ("b", dict(compression="int8"))]:
+        cfg = FlareConfig(axes=("data",), transport="innetwork",
+                          telemetry=tm2, **kw)
+        t = transports.from_config(cfg, jnp.float32, manager=mgr2,
+                                   tenant=tenant)
+        fn = jax.jit(compat.shard_map(
+            lambda a, t=t: t(a, jnp.zeros_like(a),
+                             jnp.zeros((B,), jnp.int32), exts)[0],
+            in_specs=(P(),), out_specs=P(), axis_names={"data"},
+            check_vma=False))
+        jax.block_until_ready(fn(ad))
+timeline.manager_tracks(tm2.tracer, mgr2)
+trace_path = os.path.join(tempfile.mkdtemp(), "quick_trace.json")
+tm2.export_trace(trace_path)
+with open(trace_path) as f:
+    doc = _json.load(f)                         # must be valid JSON
+tracks = sorted({ev["args"]["name"] for ev in doc["traceEvents"]
+                 if ev.get("ph") == "M" and ev["name"] == "thread_name"})
+for tenant in ("a", "b"):
+    owned = [tr for tr in tracks if tenant in tr.split("/")]
+    assert owned, f"tenant {tenant} owns no trace track: {tracks}"
+assert doc.get("metrics"), "exported trace carries no metrics snapshot"
+print(f"quick.obs.trace.tracks,{len(tracks)},tenants2_chrome_json")
 """
 
 
@@ -558,7 +624,9 @@ QUICK_EXPECTED_ROWS = frozenset(
        for n in ("baseline", "reliable", "lossy")]
     + ["quick.chaos.overhead_x", "quick.chaos.retry_rate"]
     + [f"quick.canary.{m}.pred_pkts_per_cy" for m in ("static", "dynamic")]
-    + ["quick.canary.contention_x"])
+    + ["quick.canary.contention_x"]
+    + [f"quick.obs.{m}.us_per_call" for m in ("bare", "telemetry")]
+    + ["quick.obs.overhead_x", "quick.obs.trace.tracks"])
 
 
 def run_quick():
@@ -598,13 +666,54 @@ def run_quick():
             raise RuntimeError(
                 f"congestion replan degraded predicted throughput "
                 f"({val:.2f}x dynamic/static)")
+        # the §16 overhead contract: telemetry never touches the traced
+        # program, so the instrumented step may not cost more than noise
+        if name == "quick.obs.overhead_x" and val > 1.05:
+            raise RuntimeError(
+                f"telemetry overhead on the dense in-network step is "
+                f"{val:.2f}x (contract: <= 1.05x)")
+        # every tenant must own at least one exported trace track; the
+        # child already asserts per-tenant ownership — this gates the
+        # aggregate count surviving the round trip
+        if name == "quick.obs.trace.tracks" and val < 2:
+            raise RuntimeError(
+                f"trace export round-trip lost tenant tracks ({val:.0f})")
     return rows
 
 
-def write_bench_json(rows, path: str = BENCH_JSON) -> None:
+def bench_meta() -> dict:
+    """Provenance stamped under the ``meta`` key of the tracked JSON.
+
+    A perf trajectory without its generation context is unauditable: the
+    git sha ties a number to the code that produced it, the mesh shapes
+    and jax version to the execution substrate, the UTC timestamp to the
+    refresh cadence.  Git being absent (tarball checkout) degrades to
+    ``"unknown"`` rather than failing the run.
+    """
+    import datetime
+
+    import jax
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=_ROOT, capture_output=True,
+            text=True, timeout=10).stdout.strip() or "unknown"
+    except Exception:                               # pragma: no cover
+        sha = "unknown"
+    return {
+        "git_sha": sha,
+        "mesh_shapes": ["8", "2x4"],
+        "jax_version": jax.__version__,
+        "timestamp_utc": datetime.datetime.now(datetime.timezone.utc)
+                                 .strftime("%Y-%m-%dT%H:%M:%SZ"),
+    }
+
+
+def write_bench_json(rows, path: str = BENCH_JSON, meta: dict | None = None,
+                     ) -> None:
     """Persist the wall-clock rows (the tracked perf trajectory)."""
     record = {name: {"value": val, "derived": der}
               for name, val, der in rows}
+    record["meta"] = bench_meta() if meta is None else meta
     with open(path, "w") as f:
         json.dump(record, f, indent=1, sort_keys=True)
         f.write("\n")

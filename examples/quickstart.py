@@ -57,3 +57,17 @@ out = run(lambda x: coll.allreduce_rhd(
     compression.quantized_allreduce(x[0], "data"), "pod"))
 print(f"  rel_err = {np.abs(out - oracle).max() / np.abs(oracle).max():.4f} "
       f"(wire = 1/4 of fp32)")
+
+print("\nflight recorder (DESIGN.md §16): counters without touching the trace")
+from repro.obs import Telemetry
+from repro.switch import dataplane
+
+tm = Telemetry.create()
+tm.record_switch_counters(
+    "demo", dataplane.plan_counters(("pod", "data"), (2, 4), 4, Z // 4,
+                                    jnp.float32))
+pkts = tm.registry.value("switch.demo.l1.ingress_packets")
+print(f"  switch.demo.l1.ingress_packets = {pkts:.0f} "
+      f"(static plan counters; full runs: "
+      f"launch/train.py --trace-out/--metrics-out "
+      f"+ python -m repro.obs.report)")

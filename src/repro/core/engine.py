@@ -78,6 +78,13 @@ class FlareConfig:
     #: layer recovers surviving plans bitwise; a plan the retry budget
     #: cannot recover degrades the session to the wire transport.
     fault_plan: Any = None
+    #: ``repro.obs.Telemetry`` flight recorder (DESIGN.md §16): the
+    #: transports register their static wire/reliability counters and
+    #: emit trace-time phase spans into it.  ``compare=False`` — the
+    #: handle never participates in equality/hashing, so attaching
+    #: telemetry cannot perturb jit cache keys or session specs.
+    telemetry: Any = dataclasses.field(default=None, compare=False,
+                                       repr=False)
 
     def __post_init__(self):
         if self.transport not in ("auto", "innetwork"):

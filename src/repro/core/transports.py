@@ -87,6 +87,14 @@ class Transport:
     #: tree decides (``topology.transport_schedule`` on the trace-time
     #: mesh tree); True/False force it (``FlareConfig.hierarchical``).
     hierarchical: bool | None = None
+    #: ``repro.obs.Telemetry`` flight recorder (DESIGN.md §16).
+    #: ``compare=False`` — attaching telemetry never changes a
+    #: transport's identity, so jit cache keys and session specs are
+    #: untouched.  The switch transport records its static counters and
+    #: trace-time phase spans into it; the wire transports carry it for
+    #: callers but add nothing themselves.
+    telemetry: Any = dataclasses.field(default=None, compare=False,
+                                       repr=False)
 
     @property
     def needs_state(self) -> bool:
@@ -375,6 +383,37 @@ class SwitchTransport(Transport):
             density_threshold=self.density_threshold)
         return dataplane.plan_survives(self.fault_plan, counts)
 
+    def _record_solo(self, buf, ks) -> None:
+        """Solo (manager-less) flight recording: register the static
+        wire/reliability counters this trace will execute.  Under a
+        manager the session's *admission* records the same sums exactly
+        once, so the two paths never double-count."""
+        if self.telemetry is None or self.manager is not None:
+            return
+        from repro.switch import dataplane
+
+        tenant = self.tenant or "solo"
+        b, s = int(buf.shape[0]), int(buf.shape[1])
+        if self.mode == "dense":
+            wire_dtype, elems = buf.dtype, s
+        elif self.mode == "int8":
+            wire_dtype, elems = jnp.int8, s + (-s) % self.block
+        else:
+            wire_dtype, elems = jnp.int32, 2 * max(ks)
+        sizes = tuple(compat.axis_size(a) for a in self.axes)
+        self.telemetry.record_switch_counters(
+            tenant, dataplane.plan_counters(
+                self.axes, sizes, b, elems, wire_dtype,
+                design=self.design, reproducible=self.reproducible))
+        if self.fault_plan is not None:
+            fanins = [l.fanin for l in dataplane._levels(self.axes)]
+            counts = dataplane.level_packet_counts(
+                fanins, b, s, buf.dtype, mode=self.mode, block=self.block,
+                k_max=max(ks) if ks else None,
+                density_threshold=self.density_threshold)
+            self.telemetry.record_fault_schedules(
+                tenant, dataplane.fault_schedules(self.fault_plan, counts))
+
     def _degrade(self) -> Transport:
         """Retry budget exhausted: drain this session from the shared
         runtime and hand the arena to the matching wire transport (the
@@ -401,13 +440,15 @@ class SwitchTransport(Transport):
               if self.mode == "sparse" else None)
         if self.fault_plan is not None and not self._plan_survives(buf, ks):
             return self._degrade()(buf, ef, staggers, extents)
+        self._record_solo(buf, ks)
 
         if self.mode == "dense":
             red = dataplane.switch_allreduce_dense(
                 buf, self.axes, reproducible=self.reproducible,
                 design=self.design,
                 arrival_perms=self._session_perms(buf),
-                fault_plan=self.fault_plan, batched=self.batched)
+                fault_plan=self.fault_plan, batched=self.batched,
+                telemetry=self.telemetry, tenant=self.tenant)
             if self.mean:
                 red = red / self._world()
             return red, (jnp.zeros_like(ef) if ef is not None else None)
@@ -421,7 +462,8 @@ class SwitchTransport(Transport):
                 red = dataplane.switch_allreduce_int8(
                     v, self.axes, block=self.block, design=self.design,
                     arrival_perms=perms, fault_plan=self.fault_plan,
-                    batched=self.batched)
+                    batched=self.batched,
+                    telemetry=self.telemetry, tenant=self.tenant)
                 return red, compression.quantize_roundtrip(v, self.block)
         elif self.mode == "sparse":
             perms = self._session_perms(buf, k=max(ks))
@@ -431,7 +473,8 @@ class SwitchTransport(Transport):
                     v, self.axes, ks,
                     density_threshold=self.density_threshold,
                     arrival_perms=perms, fault_plan=self.fault_plan,
-                    batched=self.batched)
+                    batched=self.batched,
+                    telemetry=self.telemetry, tenant=self.tenant)
         else:
             raise ValueError(f"unknown switch transport mode {self.mode!r}")
         red, ef_out = compression.error_feedback_step(buf, ef, transmit)
@@ -442,11 +485,13 @@ class SwitchTransport(Transport):
 
 def _switch_from_config(config, dtype, is_float: bool, *,
                         batched: bool = True,
-                        manager=None, tenant=None) -> SwitchTransport:
+                        manager=None, tenant=None,
+                        telemetry=None) -> SwitchTransport:
     axes = tuple(config.axes)
     fault_plan = getattr(config, "fault_plan", None)
     if config.sparse_k_frac > 0 and is_float:
         return SwitchTransport(axes, mean=config.mean, batched=batched,
+                               telemetry=telemetry,
                                mode="sparse",
                                k_frac=config.sparse_k_frac,
                                density_threshold=config.density_threshold,
@@ -454,10 +499,12 @@ def _switch_from_config(config, dtype, is_float: bool, *,
                                fault_plan=fault_plan)
     if config.compression == "int8" and is_float:
         return SwitchTransport(axes, mean=config.mean, batched=batched,
+                               telemetry=telemetry,
                                mode="int8",
                                manager=manager, tenant=tenant,
                                fault_plan=fault_plan)
     return SwitchTransport(axes, mean=config.mean, batched=batched,
+                           telemetry=telemetry,
                            mode="dense",
                            reproducible=config.reproducible,
                            manager=manager, tenant=tenant,
@@ -484,10 +531,12 @@ def from_config(config, dtype, *, batched: bool = True,
     """
     axes = tuple(config.axes)
     hierarchical = getattr(config, "hierarchical", None)
+    telemetry = getattr(config, "telemetry", None)
     is_float = jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
     if getattr(config, "transport", "auto") == "innetwork":
         return _switch_from_config(config, dtype, is_float, batched=batched,
-                                   manager=manager, tenant=tenant)
+                                   manager=manager, tenant=tenant,
+                                   telemetry=telemetry)
     if manager is not None:
         raise ValueError(
             "a runtime.SessionManager applies to transport='innetwork' "
@@ -496,12 +545,13 @@ def from_config(config, dtype, *, batched: bool = True,
     if config.sparse_k_frac > 0 and is_float:
         return SparseTransport(axes, mean=config.mean, batched=batched,
                                hierarchical=hierarchical,
+                               telemetry=telemetry,
                                k_frac=config.sparse_k_frac,
                                density_threshold=config.density_threshold)
     if config.compression == "int8" and is_float:
         return Int8Transport(axes, mean=config.mean, batched=batched,
-                             hierarchical=hierarchical)
+                             hierarchical=hierarchical, telemetry=telemetry)
     return DenseTransport(axes, mean=config.mean, batched=batched,
-                          hierarchical=hierarchical,
+                          hierarchical=hierarchical, telemetry=telemetry,
                           algorithm=config.algorithm,
                           reproducible=config.reproducible)

@@ -60,6 +60,17 @@ def _parse():
                          "through the congestion monitor and re-plan the "
                          "sessions onto the cheapest tree (DESIGN.md §15; "
                          "needs --tenants > 1)")
+    ap.add_argument("--trace-out", type=str, default=None, metavar="PATH",
+                    help="export a Chrome-trace/Perfetto JSON timeline of "
+                         "the run (flight recorder, DESIGN.md §16): "
+                         "measured step spans, session lifecycle events, "
+                         "trace-time data-plane phases and the modeled "
+                         "scheduler/perfmodel tracks, with the metric "
+                         "snapshot embedded.  Summarize with "
+                         "`python -m repro.obs.report`")
+    ap.add_argument("--metrics-out", type=str, default=None, metavar="PATH",
+                    help="export the metrics registry (typed counters/"
+                         "gauges, DESIGN.md §16 name schema) as JSON")
     return ap.parse_args()
 
 
@@ -74,6 +85,41 @@ def _fault_plan(args):
                  "--transport innetwork (or --tenants > 1)")
     from repro.switch.packets import FaultPlan
     return FaultPlan(seed=args.fault_seed, drop=args.fault_rate)
+
+
+def _telemetry(args):
+    """``--trace-out``/``--metrics-out`` → one ``repro.obs.Telemetry``
+    flight recorder threaded through ``FlareConfig`` and the
+    ``SessionManager`` (DESIGN.md §16); ``None`` when no artifact is
+    requested — the uninstrumented run is unchanged."""
+    if not (args.trace_out or args.metrics_out):
+        return None
+    from repro.obs import Telemetry
+    return Telemetry.create()
+
+
+def _step_span(telemetry, step: int):
+    """A measured span around one train step (all jobs), or a no-op."""
+    if telemetry is None:
+        import contextlib
+        return contextlib.nullcontext()
+    return telemetry.tracer.span("train.step", track="steps",
+                                 args={"step": step})
+
+
+def _export(args, telemetry, manager=None) -> None:
+    """Render the modeled timeline tracks and write the artifacts."""
+    if telemetry is None:
+        return
+    if manager is not None:
+        from repro.obs import timeline
+        timeline.manager_tracks(telemetry.tracer, manager)
+    if args.trace_out:
+        telemetry.export_trace(args.trace_out)
+        print(f"trace -> {args.trace_out}", flush=True)
+    if args.metrics_out:
+        telemetry.export_metrics(args.metrics_out)
+        print(f"metrics -> {args.metrics_out}", flush=True)
 
 
 def _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes):
@@ -98,10 +144,12 @@ def _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes):
 
     reduce_sizes = tuple(s for a, s in zip(mcfg.axes, mcfg.shape)
                          if a in mcfg.reduce_axes)
+    telemetry = _telemetry(args)
     manager = SessionManager(mcfg.reduce_axes, reduce_sizes,
                              policy=args.partition_policy,
                              order=args.schedule_order,
-                             max_sessions=max(8, 2 * args.tenants))
+                             max_sessions=max(8, 2 * args.tenants),
+                             telemetry=telemetry)
     variants = [dict(reproducible=True),
                 dict(compression="int8"),
                 dict(sparse_k_frac=max(args.sparse_k, 0.01))]
@@ -113,7 +161,8 @@ def _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes):
             lr=args.lr, gather_algorithm=args.gather_algorithm,
             flare=FlareConfig(axes=mcfg.reduce_axes,
                               transport="innetwork",
-                              fault_plan=_fault_plan(args), **kw))
+                              fault_plan=_fault_plan(args),
+                              telemetry=telemetry, **kw))
         return kw, trainer.jit_train_step(
             model, mesh, mcfg, tcfg, params_shapes, batch_shapes,
             donate=False, reduce_manager=manager, tenant=f"job{k}")
@@ -146,19 +195,23 @@ def _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes):
         for step in range(args.steps):
             t0 = time.time()
             line = []
-            for j in jobs:
-                batch = next(j["stream"])
-                j["params"], j["opt"], metrics = j["fn"](j["params"],
-                                                         j["opt"], batch)
-                line.append(f"{j['name']}({j['kind']}) "
-                            f"{float(metrics['loss']):8.4f}")
+            with _step_span(telemetry, step):
+                for j in jobs:
+                    batch = next(j["stream"])
+                    j["params"], j["opt"], metrics = j["fn"](j["params"],
+                                                             j["opt"],
+                                                             batch)
+                    line.append(f"{j['name']}({j['kind']}) "
+                                f"{float(metrics['loss']):8.4f}")
             print(f"step {step:5d} | " + " | ".join(line) +
                   f" | dt {time.time() - t0:6.3f}s", flush=True)
     print(manager.report(), flush=True)
     if args.congestion_replan > 0:
         from repro.runtime import CongestionMonitor
 
-        monitor = CongestionMonitor(manager)
+        monitor = CongestionMonitor(
+            manager,
+            registry=telemetry.registry if telemetry else None)
         monitor.inject((1, 0), args.congestion_replan)
         res = manager.replan(monitor, threshold=0.5, hysteresis=0.05)
         fanins = [sorted((len(manager.tree.nodes[n].children)
@@ -169,6 +222,7 @@ def _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes):
               f"readmitted={list(res.readmitted)} "
               f"evicted={list(res.evicted)} fanins={fanins}", flush=True)
         print(manager.report(), flush=True)
+    _export(args, telemetry, manager)
 
 
 def main():
@@ -212,6 +266,18 @@ def main():
     batch_shapes = jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch0)
 
+    if args.congestion_replan > 0 and args.tenants <= 1:
+        sys.exit("--congestion-replan re-plans the shared switch's "
+                 "sessions; it needs --tenants > 1")
+
+    if args.tenants > 1:
+        # branch before the single-job FlareConfig: the tenants path
+        # builds its own innetwork configs (a --fault-rate without
+        # --transport innetwork is valid there and would fail the
+        # single-job validation below)
+        return _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes)
+
+    telemetry = _telemetry(args)
     tcfg = trainer.TrainConfig(
         lr=args.lr,
         gather_algorithm=("fixed_tree" if args.reproducible
@@ -221,14 +287,8 @@ def main():
                           compression=args.compression,
                           sparse_k_frac=args.sparse_k,
                           transport=args.transport,
-                          fault_plan=_fault_plan(args)))
-
-    if args.congestion_replan > 0 and args.tenants <= 1:
-        sys.exit("--congestion-replan re-plans the shared switch's "
-                 "sessions; it needs --tenants > 1")
-
-    if args.tenants > 1:
-        return _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes)
+                          fault_plan=_fault_plan(args),
+                          telemetry=telemetry))
 
     with compat.set_mesh(mesh):
         fn, param_sh, opt_sh, batch_sh, init_opt = trainer.jit_train_step(
@@ -254,8 +314,9 @@ def main():
         for step in range(start, args.steps):
             t0 = time.time()
             batch = next(stream)
-            params, opt, metrics = fn(params, opt, batch)
-            loss = float(metrics["loss"])
+            with _step_span(telemetry, step):
+                params, opt, metrics = fn(params, opt, batch)
+                loss = float(metrics["loss"])
             print(f"step {step:5d} loss {loss:8.4f} "
                   f"gnorm {float(metrics['grad_norm']):8.3f} "
                   f"dt {time.time() - t0:6.3f}s", flush=True)
@@ -263,6 +324,7 @@ def main():
                 cm.save(step + 1, {"p": params, "o": opt})
         if cm:
             cm.wait()
+    _export(args, telemetry)
 
 
 if __name__ == "__main__":

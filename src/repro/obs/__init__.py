@@ -1,0 +1,21 @@
+"""Observability for the switch fabric: metrics, tracing, timelines.
+
+The flight-recorder layer of DESIGN.md §16.  One
+:class:`~repro.obs.telemetry.Telemetry` handle (a typed
+:class:`~repro.obs.metrics.MetricsRegistry` plus a structured
+:class:`~repro.obs.tracer.Tracer`) threads through
+``FlareConfig(telemetry=)`` and ``SessionManager(telemetry=)``; the
+modeled timeline renderer (``repro.obs.timeline``) lays scheduler/
+perfmodel predictions alongside the measured spans in one Chrome-trace
+export, and ``python -m repro.obs.report`` summarizes the artifacts.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram,     # noqa: F401
+                               MetricsRegistry)
+from repro.obs.report import (ManagerReport, TenantReport,    # noqa: F401
+                              render_manager_report)
+from repro.obs.telemetry import Telemetry, slot_name          # noqa: F401
+from repro.obs.tracer import Tracer, counting_clock           # noqa: F401
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "ManagerReport", "TenantReport", "render_manager_report",
+           "Telemetry", "Tracer", "counting_clock", "slot_name"]

@@ -1,0 +1,187 @@
+"""Typed metrics registry — the fabric's single numeric surface.
+
+Every counter source in the repo (``switch/dataplane`` static plan
+counters, the runtime scheduler's measured :class:`TenantCounters`, the
+congestion monitor's per-slot hotness, PR 6's ``FaultSchedule`` retry
+counters, session-lifecycle events) registers here under one stable
+hierarchical name schema (DESIGN.md §16):
+
+``switch.<session>.l<level>.{ingress_packets,egress_packets,combines}``
+    static data-plane work per tree level, integer-equal to
+    ``dataplane.plan_counters``/``tree_counters``;
+``tenant.<name>.{retransmits,retry_rounds,wait_rounds}``
+    the static ``FaultSchedule`` reliability counters;
+``tenant.<name>.sched.{packets,combines,occupancy_cycles,...}``
+    measured per-tenant accounting of the last shared schedule;
+``session.<id>.{admitted,demand_bytes,...}`` / ``manager.*``
+    admission-control lifecycle;
+``schedule.{occupancy_cycles,makespan_cycles,utilization}``
+    the shared-schedule aggregates ``CongestionMonitor`` consumes;
+``congestion.l<level>s<index>.hotness``
+    per physical fabric slot, the observed congestion map.
+
+Three instrument types, strictly typed per name — registering a name as
+a counter and later as a gauge is an error, never a silent coercion:
+
+* :class:`Counter` — monotone integer (``inc``); populated from traced
+  programs by pulling **concrete** jnp scalars post-``block_until_ready``
+  (``observe_tree``) or from static schedules at trace/admission time —
+  zero ops are ever added to a traced computation.
+* :class:`Gauge` — last-write-wins float (``set``), for levels that are
+  re-derived per schedule (occupancy, shares, hotness).
+* :class:`Histogram` — streaming count/sum/min/max (``record``), for
+  host-side durations.
+
+Export (``as_dict``/``to_json``) is deterministic: sorted names, typed
+records — byte-identical across runs of the same workload (the
+multidevice ``obs`` determinism anchor).
+"""
+from __future__ import annotations
+
+import json
+
+
+def _concrete(value) -> float:
+    """A host float from an int/float or a *concrete* jax scalar.
+
+    Traced values are rejected loudly: the registry is a host-side
+    surface — pulling a counter out of a traced program must happen
+    after ``block_until_ready``, never inside the trace (that would add
+    ops to the compiled computation and break the overhead contract).
+    """
+    try:
+        return float(value)
+    except TypeError as e:                        # tracer leaked in
+        raise TypeError(
+            f"metrics take concrete host scalars, not traced values "
+            f"({type(value).__name__}); pull counters out of the traced "
+            f"program after block_until_ready") from e
+
+
+class Counter:
+    """Monotone integer counter."""
+
+    kind = "counter"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n=1) -> int:
+        n = int(_concrete(n))
+        if n < 0:
+            raise ValueError(f"counter {self.name!r} cannot decrease "
+                             f"(inc({n}))")
+        self.value += n
+        return self.value
+
+    def snapshot(self) -> dict:
+        return {"type": self.kind, "value": self.value}
+
+
+class Gauge:
+    """Last-write-wins float level."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+        self.updates = 0
+
+    def set(self, v) -> float:
+        self.value = _concrete(v)
+        self.updates += 1
+        return self.value
+
+    def snapshot(self) -> dict:
+        return {"type": self.kind, "value": self.value}
+
+
+class Histogram:
+    """Streaming summary of host-side observations (durations, sizes)."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.count = 0
+        self.sum = 0.0
+        self.min = None
+        self.max = None
+
+    def record(self, v) -> None:
+        v = _concrete(v)
+        self.count += 1
+        self.sum += v
+        self.min = v if self.min is None else min(self.min, v)
+        self.max = v if self.max is None else max(self.max, v)
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def snapshot(self) -> dict:
+        return {"type": self.kind, "count": self.count, "sum": self.sum,
+                "min": self.min, "max": self.max}
+
+
+class MetricsRegistry:
+    """Create-or-get instruments by hierarchical dotted name."""
+
+    def __init__(self):
+        self._metrics: dict[str, Counter | Gauge | Histogram] = {}
+
+    def _get(self, name: str, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls(str(name))
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} is a {m.kind}, not a "
+                            f"{cls.kind}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    # -- reading -----------------------------------------------------------
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def get(self, name: str):
+        return self._metrics.get(name)
+
+    def value(self, name: str, default=None):
+        m = self._metrics.get(name)
+        return default if m is None else m.value
+
+    def names(self, prefix: str = "") -> list[str]:
+        return sorted(n for n in self._metrics if n.startswith(prefix))
+
+    # -- population from traced programs -----------------------------------
+    def observe_tree(self, prefix: str, tree) -> None:
+        """Fold a dict of **concrete** scalars (e.g. the data plane's
+        fault-stats dict after ``block_until_ready``) into counters
+        under ``<prefix>.<key>``.  Zero traced ops: the values must
+        already be on the host side of the device boundary."""
+        for key in sorted(tree):
+            self.counter(f"{prefix}.{key}").inc(tree[key])
+
+    # -- export ------------------------------------------------------------
+    def as_dict(self) -> dict:
+        """Deterministic snapshot: sorted names → typed records."""
+        return {n: self._metrics[n].snapshot()
+                for n in sorted(self._metrics)}
+
+    def to_json(self) -> str:
+        return json.dumps(self.as_dict(), indent=1, sort_keys=True) + "\n"
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())

@@ -1,0 +1,197 @@
+"""Structured manager reports and the telemetry summary CLI.
+
+Two halves:
+
+* :class:`ManagerReport`/:class:`TenantReport` — the typed form of
+  ``runtime.SessionManager.report()`` (an untyped string before PR 9).
+  The dataclass carries everything the string showed *plus* the audit
+  surface (admissions, evictions with reasons, replan reasons,
+  per-tenant ingress shares); ``str(report)`` renders the exact legacy
+  format, so every caller that printed the old string is unchanged.
+
+* ``python -m repro.obs.report metrics.json [trace.json]`` — a summary
+  CLI over exported telemetry artifacts: a per-tenant table (scheduled
+  packets/combines, throughput, reliability counters) and a per-slot
+  congestion table, parsed from the DESIGN.md §16 metric name schema.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+
+# ---------------------------------------------------------------------------
+# The structured SessionManager report.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TenantReport:
+    """One session's line of the manager report, typed."""
+
+    tenant: str
+    mode: str
+    num_buckets: int
+    bucket_elems: int
+    dtype: str
+    clusters: int
+    demand_bytes: int
+    packets: int                # scheduled leaf ingress (incl. retransmits)
+    combines: int
+    measured_pkts: float        # FCFS-simulated throughput [pkts/cycle]
+    predicted_pkts: float       # analytic shared-mode prediction
+    bottleneck: str             # "compute" | "line"
+    share: float                # ingress share under the interleave
+    retransmits: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ManagerReport:
+    """Partition/schedule/prediction summary of one shared switch,
+    plus the admission-control audit trail."""
+
+    clusters: int
+    max_sessions: int
+    policy: str
+    order: str
+    tenants: tuple[TenantReport, ...] = ()
+    admissions: int = 0
+    evictions: tuple[tuple[str, str], ...] = ()    # (tenant, reason)
+    replans: tuple[tuple[bool, str], ...] = ()     # (replanned, reason)
+
+    @property
+    def sessions(self) -> int:
+        return len(self.tenants)
+
+    @property
+    def replan_reasons(self) -> tuple[str, ...]:
+        return tuple(r for _moved, r in self.replans)
+
+    def __str__(self) -> str:
+        return render_manager_report(self)
+
+
+def render_manager_report(rep: ManagerReport) -> str:
+    """The legacy ``SessionManager.report()`` string, byte-stable."""
+    if not rep.tenants:
+        return "switch idle: no sessions"
+    lines = [f"switch: {rep.clusters} clusters, "
+             f"{rep.sessions}/{rep.max_sessions} sessions, "
+             f"policy={rep.policy}, order={rep.order}"]
+    for t in rep.tenants:
+        lines.append(
+            f"  {t.tenant}: {t.mode} {t.num_buckets}x{t.bucket_elems} "
+            f"{t.dtype} | clusters={t.clusters} "
+            f"demand={t.demand_bytes}B | pkts={t.packets} "
+            f"combines={t.combines} | measured={t.measured_pkts:.4f} "
+            f"predicted={t.predicted_pkts:.4f} pkt/cy "
+            f"({t.bottleneck}-bound)")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# The summary CLI over exported artifacts.
+# ---------------------------------------------------------------------------
+
+#: per-tenant columns: header → the ``tenant.<name>.<suffix>`` metric
+#: suffix that fills it (gauges from the schedule publication, counters
+#: from the reliability layer).
+_TENANT_COLS = (("packets", "sched.packets"),
+                ("combines", "sched.combines"),
+                ("pkt/cy", "sched.throughput_pkts"),
+                ("retrans", "retransmits"),
+                ("retry_rounds", "retry_rounds"))
+
+
+def _metric_value(rec) -> float:
+    return rec["value"] if isinstance(rec, dict) else rec
+
+
+def tenant_table(metrics: dict) -> str:
+    """Per-tenant summary from a metrics snapshot (name-schema parse)."""
+    tenants: dict[str, dict[str, float]] = {}
+    for name, rec in metrics.items():
+        if not name.startswith("tenant."):
+            continue
+        rest = name[len("tenant."):]
+        for col, suffix in _TENANT_COLS:
+            if rest.endswith("." + suffix):
+                tenant = rest[: -len(suffix) - 1]
+                tenants.setdefault(tenant, {})[col] = _metric_value(rec)
+    if not tenants:
+        return "no per-tenant metrics"
+    cols = [c for c, _s in _TENANT_COLS]
+    width = max(len("tenant"), *(len(t) for t in tenants))
+    head = "tenant".ljust(width) + "".join(f"  {c:>12}" for c in cols)
+    lines = [head]
+    for t in sorted(tenants):
+        row = t.ljust(width)
+        for c in cols:
+            v = tenants[t].get(c)
+            if v is None:
+                cell = "-"
+            elif c == "pkt/cy":
+                cell = f"{v:.4f}"
+            else:
+                cell = f"{v:.0f}"
+            row += f"  {cell:>12}"
+        lines.append(row)
+    return "\n".join(lines)
+
+
+def slot_table(metrics: dict) -> str:
+    """Per-fabric-slot congestion summary (``congestion.<slot>.hotness``)."""
+    slots = {}
+    for name, rec in metrics.items():
+        if name.startswith("congestion.") and name.endswith(".hotness"):
+            slots[name[len("congestion."):-len(".hotness")]] = \
+                _metric_value(rec)
+    if not slots:
+        return "no congestion metrics"
+    width = max(len("slot"), *(len(s) for s in slots))
+    lines = ["slot".ljust(width) + f"  {'hotness':>10}"]
+    for s in sorted(slots):
+        lines.append(s.ljust(width) + f"  {slots[s]:>10.4f}")
+    return "\n".join(lines)
+
+
+def _load_metrics(path: str) -> dict:
+    """A metrics snapshot from either artifact: the metrics JSON itself,
+    or a trace JSON carrying the snapshot under its ``metrics`` key."""
+    with open(path) as f:
+        doc = json.load(f)
+    if "traceEvents" in doc:
+        return doc.get("metrics", {})
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Summarize exported telemetry artifacts "
+                    "(launch/train.py --metrics-out/--trace-out).")
+    ap.add_argument("metrics", help="metrics JSON (or a trace JSON with "
+                                    "an embedded metrics snapshot)")
+    ap.add_argument("trace", nargs="?", default=None,
+                    help="optional trace JSON for the span tally")
+    args = ap.parse_args(argv)
+    metrics = _load_metrics(args.metrics)
+    print("== per-tenant ==")
+    print(tenant_table(metrics))
+    print()
+    print("== per-slot congestion ==")
+    print(slot_table(metrics))
+    if args.trace:
+        with open(args.trace) as f:
+            trace = json.load(f)
+        events = trace.get("traceEvents", [])
+        spans = sum(1 for e in events if e.get("ph") == "X")
+        tracks = sum(1 for e in events if e.get("name") == "thread_name")
+        print()
+        print(f"== trace: {spans} spans on {tracks} tracks ==")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

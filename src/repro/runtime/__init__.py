@@ -37,12 +37,13 @@ from repro.runtime.scheduler import (ORDERS, SharedSchedule, TenantCounters,
 from repro.runtime.congestion import CongestionMap, CongestionMonitor
 from repro.runtime.sessions import (AdmissionError, ReplanResult, Session,
                                     SessionManager, session_demand_bytes)
+from repro.obs.report import ManagerReport, TenantReport   # noqa: F401
 
 __all__ = [
     "AdmissionError", "ClusterSlice", "CongestionMap", "CongestionMonitor",
-    "ORDERS", "POLICIES", "Partition", "ReplanResult",
+    "ManagerReport", "ORDERS", "POLICIES", "Partition", "ReplanResult",
     "Session", "SessionManager", "SharedSchedule", "TenantCounters",
-    "TenantLoad", "greedy_partition", "ingress_shares", "interleave",
-    "make_partition", "service_tau", "session_demand_bytes",
+    "TenantLoad", "TenantReport", "greedy_partition", "ingress_shares",
+    "interleave", "make_partition", "service_tau", "session_demand_bytes",
     "simulate_shared", "static_partition", "weighted_fair_partition",
 ]

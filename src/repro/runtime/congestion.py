@@ -62,9 +62,17 @@ class CongestionMonitor:
     replan policy a *direction* to route around.
     """
 
-    def __init__(self, manager, *, net: ns.FatTree = ns.FatTree()):
+    def __init__(self, manager, *, net: ns.FatTree = ns.FatTree(),
+                 registry=None):
         self.manager = manager
         self.net = net
+        #: optional ``repro.obs.MetricsRegistry`` — when set, the
+        #: measured-utilization signal is read from the ``schedule.*``
+        #: gauges the manager's telemetry publishes on every
+        #: ``schedule()`` call instead of re-simulating the FCFS
+        #: schedule here (same counters, same formula → identical maps;
+        #: regression-tested in ``tests/test_obs.py``).
+        self.registry = registry
         self._injected: dict[Slot, float] = {}
         self._flows: list[ns.BackgroundFlow] = []
 
@@ -89,14 +97,21 @@ class CongestionMonitor:
     # -- observation -------------------------------------------------------
     def _measured_utilization(self, schedule) -> float:
         """Busy core-cycles per makespan cycle per core, from the shared
-        schedule's occupancy/span counters."""
-        if schedule is None:
-            if not self.manager.active():
-                return 0.0
-            schedule = self.manager.schedule()
-        occupancy = sum(c.occupancy_cycles for c in schedule.counters)
-        makespan = max((c.span_cycles for c in schedule.counters),
-                       default=0.0)
+        schedule's occupancy/span counters — or, with a ``registry``
+        attached, from the ``schedule.*`` gauges the manager's telemetry
+        publishes (same counters, so the maps are identical)."""
+        if schedule is None and self.registry is not None \
+                and "schedule.makespan_cycles" in self.registry:
+            occupancy = self.registry.value("schedule.occupancy_cycles", 0.0)
+            makespan = self.registry.value("schedule.makespan_cycles", 0.0)
+        else:
+            if schedule is None:
+                if not self.manager.active():
+                    return 0.0
+                schedule = self.manager.schedule()
+            occupancy = sum(c.occupancy_cycles for c in schedule.counters)
+            makespan = max((c.span_cycles for c in schedule.counters),
+                           default=0.0)
         if makespan <= 0.0:
             return 0.0
         params = self.manager.params
@@ -117,4 +132,8 @@ class CongestionMonitor:
             for i in range(width):
                 hot[(lvl, i)] = (util + frac[link]
                                  + self._injected.get((lvl, i), 0.0))
-        return CongestionMap(hot)
+        cmap = CongestionMap(hot)
+        telemetry = getattr(self.manager, "telemetry", None)
+        if telemetry is not None:
+            telemetry.record_congestion(cmap)
+        return cmap

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import topology
+from repro.obs import report as obs_report
 from repro.perfmodel import switch_model as sm
 from repro.runtime import partition as pt
 from repro.runtime import scheduler as sc
@@ -155,7 +156,8 @@ class SessionManager:
                  order: str = "round_robin",
                  max_sessions: int = 8,
                  fmt=dataplane.DEFAULT_FORMAT,
-                 seed: int = 0):
+                 seed: int = 0,
+                 telemetry=None):
         if policy not in pt.POLICIES:
             raise ValueError(f"unknown partition policy {policy!r}")
         if order not in sc.ORDERS:
@@ -190,6 +192,14 @@ class SessionManager:
         self._next_tenant = 0
         #: audit log of forced closures: ``(tenant, reason)`` per evict.
         self.evictions: list[tuple[str, str]] = []
+        #: audit log of replan passes: ``(replanned, reason)`` per call.
+        self.replans: list[tuple[bool, str]] = []
+        #: total successful admissions (``open``), monotone.
+        self.admissions = 0
+        #: ``repro.obs.Telemetry`` — session-lifecycle events, static
+        #: admission counters and schedule gauges publish here
+        #: (DESIGN.md §16).  ``None`` = uninstrumented, zero overhead.
+        self.telemetry = telemetry
 
     def new_tenant(self) -> str:
         """A fresh unique tenant name (``tenant0``, ``tenant1``, ...)
@@ -254,16 +264,16 @@ class SessionManager:
                                        design=design,
                                        reproducible=reproducible)
 
-    def _retransmit_packets(self, mode: str, num_buckets: int,
-                            bucket_elems: int, dtype, k: int | None,
-                            fault_plan) -> int:
-        """Static retransmissions the session's fault plan adds across
-        the current tree's levels (``dataplane.fault_schedules`` on the
-        same level shapes the transport pre-checks — the single source
-        of truth, so the scheduler's modeled demand matches the plane's
-        traced retry counters)."""
+    def _session_fault_schedules(self, mode: str, num_buckets: int,
+                                 bucket_elems: int, dtype, k: int | None,
+                                 fault_plan) -> list:
+        """The session's per-level static ``FaultSchedule``s
+        (``dataplane.fault_schedules`` on the same level shapes the
+        transport pre-checks — the single source of truth, so the
+        scheduler's modeled demand and the telemetry mirror both match
+        the plane's traced retry counters).  Empty when fault-free."""
         if fault_plan is None:
-            return 0
+            return []
         if mode == "sparse" and k is None:
             k = max(1, bucket_elems // 100)      # same default as _counters
         fanins = [max(len(self.tree.nodes[n].children) for n in lvl)
@@ -271,9 +281,7 @@ class SessionManager:
         counts = dataplane.level_packet_counts(
             fanins, int(num_buckets), int(bucket_elems), dtype,
             mode=mode, fmt=self.fmt, k_max=k)
-        return sum(s.retransmits
-                   for s in dataplane.fault_schedules(fault_plan, counts)
-                   if s is not None)
+        return dataplane.fault_schedules(fault_plan, counts)
 
     def open(self, tenant: str, *, mode: str, num_buckets: int,
              bucket_elems: int, dtype, weight: float = 1.0,
@@ -308,9 +316,10 @@ class SessionManager:
                 f"session {tenant!r} needs {demand} B of aggregation "
                 f"buffers; the static share is {self.bytes_per_session} B "
                 f"({self.memory_budget_bytes} B / {self.max_sessions})")
-        retransmits = self._retransmit_packets(mode, int(num_buckets),
-                                               int(bucket_elems), dtype, k,
-                                               fault_plan)
+        schedules = self._session_fault_schedules(mode, int(num_buckets),
+                                                  int(bucket_elems), dtype,
+                                                  k, fault_plan)
+        retransmits = sum(s.retransmits for s in schedules if s is not None)
         sess = Session(tenant=tenant, mode=mode, num_buckets=int(num_buckets),
                        bucket_elems=int(bucket_elems), dtype=dtype_name,
                        weight=float(weight), priority=int(priority),
@@ -319,6 +328,16 @@ class SessionManager:
                        fault_plan=fault_plan,
                        retransmit_packets=retransmits)
         self._sessions[tenant] = sess
+        self.admissions += 1
+        if self.telemetry is not None:
+            tm = self.telemetry
+            tm.registry.counter("manager.admissions").inc()
+            tm.registry.gauge(f"session.{tenant}.demand_bytes").set(demand)
+            tm.record_switch_counters(tenant, counters)
+            tm.record_fault_schedules(tenant, schedules)
+            tm.tracer.instant("session.admit", track=f"session/{tenant}",
+                              args={"mode": mode, "demand_bytes": demand,
+                                    "retransmit_packets": retransmits})
         return sess
 
     def attach(self, tenant: str | None, *, mode: str, num_buckets: int,
@@ -361,7 +380,10 @@ class SessionManager:
                          fault_plan=fault_plan)
 
     def close(self, tenant: str) -> None:
-        self._sessions.pop(str(tenant), None)
+        closed = self._sessions.pop(str(tenant), None)
+        if closed is not None and self.telemetry is not None:
+            self.telemetry.tracer.instant("session.close",
+                                          track=f"session/{tenant}")
 
     def evict(self, tenant: str, *, reason: str = "evicted") -> bool:
         """Forcibly drain one session (session-scoped degradation,
@@ -375,6 +397,11 @@ class SessionManager:
             return False
         del self._sessions[tenant]
         self.evictions.append((tenant, reason))
+        if self.telemetry is not None:
+            self.telemetry.registry.counter("manager.evictions").inc()
+            self.telemetry.tracer.instant("session.evict",
+                                          track=f"session/{tenant}",
+                                          args={"reason": reason})
         return True
 
     def drain(self) -> tuple[str, ...]:
@@ -424,9 +451,12 @@ class SessionManager:
         every service time by the congestion factor (DESIGN.md §15) so
         the measured counters reflect a congested fabric.
         """
-        return sc.simulate_shared(self._loads(self.partition(queued),
-                                              queued, service_scale),
-                                  order=self.order, params=self.params)
+        sched = sc.simulate_shared(self._loads(self.partition(queued),
+                                               queued, service_scale),
+                                   order=self.order, params=self.params)
+        if self.telemetry is not None:
+            self.telemetry.record_shared_schedule(sched, self.params)
+        return sched
 
     def predicted(self, *, service_scale: float = 1.0,
                   ) -> tuple[sm.TenantPoint, ...]:
@@ -492,6 +522,10 @@ class SessionManager:
         """
         self.tree = tree
         self._epoch += 1
+        if self.telemetry is not None:
+            self.telemetry.registry.counter("manager.rebinds").inc()
+            self.telemetry.tracer.instant("manager.rebind", track="manager",
+                                          args={"epoch": self._epoch})
         old = list(self._sessions.values())
         self._sessions.clear()
         readmitted, evicted = [], []
@@ -569,6 +603,20 @@ class SessionManager:
         or a raw ``hotness`` map keyed by ``(level, index)`` fabric
         slots / node ids of the current tree.
         """
+        res = self._replan(monitor, hotness=hotness, threshold=threshold,
+                           hysteresis=hysteresis)
+        self.replans.append((res.replanned, res.reason))
+        if self.telemetry is not None:
+            self.telemetry.registry.counter("manager.replans").inc()
+            self.telemetry.tracer.instant(
+                "manager.replan", track="manager",
+                args={"replanned": res.replanned, "reason": res.reason,
+                      "improvement_x": res.improvement_x})
+        return res
+
+    def _replan(self, monitor=None, *, hotness=None,
+                threshold: float = 0.5,
+                hysteresis: float = 0.05) -> "ReplanResult":
         if monitor is not None:
             hot = dict(monitor.observe().hotness)
         elif hotness is not None:
@@ -613,24 +661,43 @@ class SessionManager:
                             predicted_after=after)
 
     # -- reporting ---------------------------------------------------------
-    def report(self) -> str:
-        """Human-readable partition/schedule/prediction summary."""
+    def report(self) -> obs_report.ManagerReport:
+        """Structured partition/schedule/prediction summary.
+
+        Returns an :class:`repro.obs.ManagerReport`; ``str(report)``
+        renders the exact legacy string, and the dataclass additionally
+        carries the admission-control audit trail (admissions, evictions
+        with reasons, replan outcomes) and per-tenant ingress shares.
+        """
+        audit = dict(admissions=self.admissions,
+                     evictions=tuple(self.evictions),
+                     replans=tuple(self.replans))
         if not self._sessions:
-            return "switch idle: no sessions"
+            return obs_report.ManagerReport(
+                clusters=self.params.clusters,
+                max_sessions=self.max_sessions,
+                policy=self.policy, order=self.order, **audit)
         part = self.partition()
         sched = self.schedule()
         pred = {p.tenant: p for p in self.predicted()}
-        lines = [f"switch: {self.params.clusters} clusters, "
-                 f"{len(self._sessions)}/{self.max_sessions} sessions, "
-                 f"policy={self.policy}, order={self.order}"]
+        packets = {s.tenant: (s.counters.levels[0].ingress_packets
+                              + s.retransmit_packets)
+                   for s in self._sessions.values()}
+        shares = sc.ingress_shares(packets, self.order)
+        tenants = []
         for s in self._sessions.values():
             c = sched.tenant(s.tenant)
             p = pred[s.tenant]
-            lines.append(
-                f"  {s.tenant}: {s.mode} {s.num_buckets}x{s.bucket_elems} "
-                f"{s.dtype} | clusters={part.clusters(s.tenant)} "
-                f"demand={s.demand_bytes}B | pkts={c.packets} "
-                f"combines={c.combines} | measured={c.throughput_pkts:.4f} "
-                f"predicted={p.bandwidth_pkts:.4f} pkt/cy "
-                f"({p.bottleneck}-bound)")
-        return "\n".join(lines)
+            tenants.append(obs_report.TenantReport(
+                tenant=s.tenant, mode=s.mode, num_buckets=s.num_buckets,
+                bucket_elems=s.bucket_elems, dtype=s.dtype,
+                clusters=part.clusters(s.tenant),
+                demand_bytes=s.demand_bytes, packets=c.packets,
+                combines=c.combines, measured_pkts=c.throughput_pkts,
+                predicted_pkts=p.bandwidth_pkts, bottleneck=p.bottleneck,
+                share=shares[s.tenant],
+                retransmits=s.retransmit_packets))
+        return obs_report.ManagerReport(
+            clusters=self.params.clusters, max_sessions=self.max_sessions,
+            policy=self.policy, order=self.order, tenants=tuple(tenants),
+            **audit)

@@ -32,6 +32,7 @@ consumes, cross-checked in ``tests/test_switch.py``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Sequence
 
@@ -71,6 +72,41 @@ def resolve_design(data_bytes: int, design: str = "auto",
 def _levels(axes: Sequence[str]) -> tuple[topology.MeshLevel, ...]:
     sizes = tuple(compat.axis_size(a) for a in axes)
     return topology.mesh_levels(tuple(axes), sizes)
+
+
+class _PlaneObs:
+    """Trace-time phase spans of one data-plane build (DESIGN.md §16).
+
+    Spans land on the ``"trace"`` process, track ``plane/<tenant>`` —
+    they wrap *tracing*, never add ops to the traced program, so the
+    compiled computation is byte-identical with or without telemetry
+    (the observability overhead contract).  ``telemetry=None`` degrades
+    every phase to a ``nullcontext``.
+    """
+
+    def __init__(self, telemetry, tenant):
+        self._tracer = None if telemetry is None else telemetry.tracer
+        self._track = f"plane/{tenant}" if tenant else "plane/solo"
+
+    def __call__(self, name, **args):
+        if self._tracer is None:
+            return contextlib.nullcontext()
+        return self._tracer.span(name, track=self._track, process="trace",
+                                 args=args or None)
+
+    def instant(self, name, **args):
+        if self._tracer is not None:
+            self._tracer.instant(name, track=self._track, process="trace",
+                                 args=args or None)
+
+    def retries(self, faults):
+        """One instant per faulted level: the static retry rounds the
+        reliability layer will execute (mirrors ``FaultSchedule``)."""
+        for i, f in enumerate(faults):
+            if f is not None:
+                self.instant(f"plane.retry.l{i + 1}", rounds=int(f.rounds),
+                             retransmits=int(f.retransmits),
+                             wait_rounds=float(f.wait_rounds))
 
 
 # ---------------------------------------------------------------------------
@@ -496,7 +532,8 @@ def switch_allreduce_dense(arena: jax.Array, axes: Sequence[str], *,
                            fault_plan: pk.FaultPlan | None = None,
                            with_fault_stats: bool = False,
                            batched: bool = True,
-                           mean: bool = False):
+                           mean: bool = False,
+                           telemetry=None, tenant: str | None = None):
     """Allreduce a ``(B, S)`` arena through the emulated switch tree.
 
     ``reproducible=True`` installs the ``fixed_tree`` handler: combines
@@ -527,22 +564,29 @@ def switch_allreduce_dense(arena: jax.Array, axes: Sequence[str], *,
         return (arena, fstats) if with_fault_stats else arena
     faults = fault_schedules(fault_plan, level_packet_counts(
         [l.fanin for l in levels], b, s, arena.dtype, mode="dense", fmt=fmt))
+    obs = _PlaneObs(telemetry, tenant)
+    obs.retries(faults)
     cur = arena
     if batched:
         plan = pk.FramePlan(b, s, arena.dtype, fmt)
         for i, lvl in enumerate(levels):
             arrival = arrival_perms[i] if arrival_perms is not None else None
-            cur = _dense_level_batched(cur, lvl, handler, design, n_bufs,
-                                       plan, arrival, fault=faults[i],
-                                       fault_stats=fstats)
-        cur = _multicast_root(cur, levels)
+            with obs(f"plane.l{i + 1}", mode="dense", fanin=lvl.fanin):
+                cur = _dense_level_batched(cur, lvl, handler, design, n_bufs,
+                                           plan, arrival, fault=faults[i],
+                                           fault_stats=fstats)
+        with obs("plane.multicast", mode="dense"):
+            cur = _multicast_root(cur, levels)
     else:
         for i, lvl in enumerate(levels):
             arrival = arrival_perms[i] if arrival_perms is not None else None
-            cur = _dense_level(cur, lvl, handler, design, n_bufs, fmt,
-                               arrival, fault=faults[i], fault_stats=fstats)
-        for lvl in reversed(levels):
-            cur = _multicast_arena(cur, lvl, fmt)
+            with obs(f"plane.l{i + 1}", mode="dense", fanin=lvl.fanin):
+                cur = _dense_level(cur, lvl, handler, design, n_bufs, fmt,
+                                   arrival, fault=faults[i],
+                                   fault_stats=fstats)
+        with obs("plane.multicast", mode="dense"):
+            for lvl in reversed(levels):
+                cur = _multicast_arena(cur, lvl, fmt)
     if mean:
         cur = cur / compat.world_size(axes)
     return (cur, fstats) if with_fault_stats else cur
@@ -575,7 +619,8 @@ def switch_allreduce_int8(arena: jax.Array, axes: Sequence[str], *,
                           fault_plan: pk.FaultPlan | None = None,
                           with_fault_stats: bool = False,
                           batched: bool = True,
-                          mean: bool = False):
+                          mean: bool = False,
+                          telemetry=None, tenant: str | None = None):
     """int8-transport allreduce through the emulated switch.
 
     Packets carry int8 payloads with a per-``block`` fp32 scale
@@ -604,6 +649,8 @@ def switch_allreduce_int8(arena: jax.Array, axes: Sequence[str], *,
     faults = fault_schedules(fault_plan, level_packet_counts(
         [l.fanin for l in levels], b, s0, arena.dtype, mode="int8", fmt=fmt,
         block=block))
+    obs = _PlaneObs(telemetry, tenant)
+    obs.retries(faults)
 
     acc = xp.astype(jnp.float32)
     e = fmt.payload_elems(jnp.int8)
@@ -611,51 +658,55 @@ def switch_allreduce_int8(arena: jax.Array, axes: Sequence[str], *,
     qplan = pk.FramePlan(b, s, jnp.int8, fmt)
     splan = pk.FramePlan(b, s // block, jnp.float32, sfmt)
     for i, lvl in enumerate(levels):
-        q, scales = compression.quantize_int8(acc, block)
-        if batched:
-            # two collectives per level (payload + scales sideband); the
-            # int8 handler is child-steered, so any arrival interleave
-            # composes with its steering to the identity (_net_order)
-            # and is never materialized
-            qs = _all_gather_stack(qplan.pack(q), lvl.axis)
-            ss = _all_gather_stack(splan.pack(scales), lvl.axis)
-            # "q" is the admission-gated stream; the scales sideband
-            # fate-shares the delivered mask
-            payload = _admit({"q": qs, "scale": ss}, faults[i], fstats)
-            agg, _ = handler.payload_handler(payload, None, design, n_bufs,
-                                             {"qblock": block})
-            acc = qplan.unpack(agg)                        # (B, S) fp32
+        with obs(f"plane.l{i + 1}", mode="int8", fanin=lvl.fanin):
+            q, scales = compression.quantize_int8(acc, block)
+            if batched:
+                # two collectives per level (payload + scales sideband);
+                # the int8 handler is child-steered, so any arrival
+                # interleave composes with its steering to the identity
+                # (_net_order) and is never materialized
+                qs = _all_gather_stack(qplan.pack(q), lvl.axis)
+                ss = _all_gather_stack(splan.pack(scales), lvl.axis)
+                # "q" is the admission-gated stream; the scales sideband
+                # fate-shares the delivered mask
+                payload = _admit({"q": qs, "scale": ss}, faults[i], fstats)
+                agg, _ = handler.payload_handler(payload, None, design,
+                                                 n_bufs, {"qblock": block})
+                acc = qplan.unpack(agg)                    # (B, S) fp32
+                acc = _mask_to_switch(acc, lvl.axis, lvl.switch_rank)
+                continue
+            r = lax.axis_index(lvl.axis)
+            streams = {"q": pk.packetize(q, fmt, child_rank=r),
+                       "scale": pk.packetize(scales, sfmt, child_rank=r)}
+            stacked = _gather_children(streams, lvl.axis)
+            payload = {"q": stacked["q"].payload,
+                       "scale": stacked["scale"].payload}
+            headers = stacked["q"].headers
+            if faults[i] is not None:
+                # "q" is the checksummed stream (its headers steer the
+                # stack); the scales sideband fate-shares the accept mask
+                payload, headers = _reliable_ingress(payload, headers,
+                                                     faults[i], fstats)
+            arrival = (arrival_perms[i] if arrival_perms is not None
+                       else None)
+            payload, headers = _apply_arrival(payload, headers, arrival)
+            agg, _ = hd.run(handler, payload, headers, design=design,
+                            n_bufs=n_bufs, ctx={"qblock": block})
+            acc = agg.reshape(b, npkt * e)[:, :s]          # (n, E) fp32
             acc = _mask_to_switch(acc, lvl.axis, lvl.switch_rank)
-            continue
-        r = lax.axis_index(lvl.axis)
-        streams = {"q": pk.packetize(q, fmt, child_rank=r),
-                   "scale": pk.packetize(scales, sfmt, child_rank=r)}
-        stacked = _gather_children(streams, lvl.axis)
-        payload = {"q": stacked["q"].payload, "scale": stacked["scale"].payload}
-        headers = stacked["q"].headers
-        if faults[i] is not None:
-            # "q" is the checksummed stream (its headers steer the
-            # stack); the scales sideband fate-shares the accept mask
-            payload, headers = _reliable_ingress(payload, headers,
-                                                 faults[i], fstats)
-        arrival = arrival_perms[i] if arrival_perms is not None else None
-        payload, headers = _apply_arrival(payload, headers, arrival)
-        agg, _ = hd.run(handler, payload, headers, design=design,
-                        n_bufs=n_bufs, ctx={"qblock": block})
-        acc = agg.reshape(b, npkt * e)[:, :s]              # (n, E) fp32
-        acc = _mask_to_switch(acc, lvl.axis, lvl.switch_rank)
 
     # root multicast: requantize once, stream int8 + scales back down
-    q, scales = compression.quantize_int8(acc, block)
-    if batched:
-        q, scales = _multicast_root((q, scales), levels)
-    else:
-        streams = {"q": pk.packetize(q, fmt),
-                   "scale": pk.packetize(scales, sfmt)}
-        for lvl in reversed(levels):
-            streams = _multicast(streams, lvl.axis, lvl.switch_rank)
-        q = pk.depacketize(streams["q"], fmt, b, s)
-        scales = pk.depacketize(streams["scale"], sfmt, b, s // block)
+    with obs("plane.multicast", mode="int8"):
+        q, scales = compression.quantize_int8(acc, block)
+        if batched:
+            q, scales = _multicast_root((q, scales), levels)
+        else:
+            streams = {"q": pk.packetize(q, fmt),
+                       "scale": pk.packetize(scales, sfmt)}
+            for lvl in reversed(levels):
+                streams = _multicast(streams, lvl.axis, lvl.switch_rank)
+            q = pk.depacketize(streams["q"], fmt, b, s)
+            scales = pk.depacketize(streams["scale"], sfmt, b, s // block)
     out = compression.dequantize_int8(q, scales, block, dtype=arena.dtype)
     out = out[:, :s0]
     if mean:
@@ -695,7 +746,8 @@ def switch_allreduce_sparse(arena: jax.Array, axes: Sequence[str],
                             with_fault_stats: bool = False,
                             batched: bool = True,
                             mean: bool = False,
-                            with_stats: bool = False):
+                            with_stats: bool = False,
+                            telemetry=None, tenant: str | None = None):
     """Top-k sparse allreduce through the emulated switch (§7).
 
     Hosts send their top-k coordinate lists as (idx, val) packets; each
@@ -745,78 +797,81 @@ def switch_allreduce_sparse(arena: jax.Array, axes: Sequence[str],
     faults = fault_schedules(fault_plan, level_packet_counts(
         [l.fanin for l in levels], b, s, arena.dtype, mode="sparse", fmt=fmt,
         k_max=k_max, density_threshold=density_threshold))
+    obs = _PlaneObs(telemetry, tenant)
+    obs.retries(faults)
 
     dplan = pk.FramePlan(b, s, jnp.float32, fmt)
     for i, lvl in enumerate(levels):
-        arrival = arrival_perms[i] if arrival_perms is not None else None
-        if dense_acc is None and sparse.densify_step(
-                cap * lvl.fanin, s, density_threshold):
-            # array storage from here on: this level would overflow the
-            # list capacity, so densify before the hop (§7 densification
-            # toward the root)
-            dense_acc = _densify(idx, val32, b, s)
-        if dense_acc is not None:
-            # child-steered dense sum: the fold order stays a pure
-            # function of child rank, so the sparse plane is bitwise
-            # arrival-invariant even after it densifies mid-tree
+        with obs(f"plane.l{i + 1}", mode="sparse", fanin=lvl.fanin):
+            arrival = arrival_perms[i] if arrival_perms is not None else None
+            if dense_acc is None and sparse.densify_step(
+                    cap * lvl.fanin, s, density_threshold):
+                # array storage from here on: this level would overflow the
+                # list capacity, so densify before the hop (§7 densification
+                # toward the root)
+                dense_acc = _densify(idx, val32, b, s)
+            if dense_acc is not None:
+                # child-steered dense sum: the fold order stays a pure
+                # function of child rank, so the sparse plane is bitwise
+                # arrival-invariant even after it densifies mid-tree
+                if batched:
+                    dense_acc = _dense_level_batched(
+                        dense_acc, lvl, hd.get_handler("dense_sum_steered"),
+                        "single", 1, dplan, arrival,
+                        fault=faults[i], fault_stats=fstats)
+                else:
+                    dense_acc = _dense_level(dense_acc, lvl,
+                                             hd.get_handler("dense_sum_steered"),
+                                             "single", 1, fmt, arrival,
+                                             fault=faults[i], fault_stats=fstats)
+                continue
+            packed = _pack_lists(idx, val32)                   # (B, 2·cap) int32
             if batched:
-                dense_acc = _dense_level_batched(
-                    dense_acc, lvl, hd.get_handler("dense_sum_steered"),
-                    "single", 1, dplan, arrival,
-                    fault=faults[i], fault_stats=fstats)
+                # one collective gathers every child's packed wire image;
+                # the merge handler regroups packets by CHILD, and arrival
+                # interleave ∘ child-regroup is the identity on each child's
+                # image, so reassembly is a pure unframe (reshape + slice)
+                lplan = pk.FramePlan(b, 2 * cap, jnp.int32, fmt)
+                stack = _all_gather_stack(lplan.pack(packed), lvl.axis)
+                stack = _admit(stack, faults[i], fstats)
+                child_packed = lplan.unpack(stack)             # (P, B, 2·cap)
+                cidx, cval = _unpack_lists(child_packed, cap)  # (P, B, cap)
+                merged, stats = handler.payload_handler(
+                    {"idx": cidx, "val": cval}, None, "single", 1, {})
             else:
-                dense_acc = _dense_level(dense_acc, lvl,
-                                         hd.get_handler("dense_sum_steered"),
-                                         "single", 1, fmt, arrival,
-                                         fault=faults[i], fault_stats=fstats)
-            continue
-        packed = _pack_lists(idx, val32)                   # (B, 2·cap) int32
-        if batched:
-            # one collective gathers every child's packed wire image;
-            # the merge handler regroups packets by CHILD, and arrival
-            # interleave ∘ child-regroup is the identity on each child's
-            # image, so reassembly is a pure unframe (reshape + slice)
-            lplan = pk.FramePlan(b, 2 * cap, jnp.int32, fmt)
-            stack = _all_gather_stack(lplan.pack(packed), lvl.axis)
-            stack = _admit(stack, faults[i], fstats)
-            child_packed = lplan.unpack(stack)             # (P, B, 2·cap)
-            cidx, cval = _unpack_lists(child_packed, cap)  # (P, B, cap)
-            merged, stats = handler.payload_handler(
-                {"idx": cidx, "val": cval}, None, "single", 1, {})
-        else:
-            r = lax.axis_index(lvl.axis)
-            stream = pk.packetize(packed, fmt, child_rank=r)
-            stacked = _gather_children(stream, lvl.axis)
-            payload, headers = stacked.payload, stacked.headers
-            if faults[i] is not None:
-                payload, headers = _reliable_ingress(payload, headers,
-                                                     faults[i], fstats)
-            payload, headers = _apply_arrival(payload, headers, arrival)
-            # a coordinate list spans several packets, so the reassembly
-            # of each child's wire image must group packets by the CHILD
-            # header, not by arrival position — under a per-slot arrival
-            # interleave the stack rows mix children, and pairing child
-            # A's indices with child B's values would silently corrupt
-            # the sum
-            order = hd.child_order(headers)
-            payload = hd.apply_order(payload, order)
-            headers = hd.apply_order(headers, order)
-            # reassemble each child's wire image from its packets, merge
-            child_packed = jax.vmap(
-                lambda pl, hdrs: pk.depacketize(pk.PacketStream(hdrs, pl),
-                                                fmt, b, 2 * cap)
-            )(payload, headers)
-            cidx, cval = _unpack_lists(child_packed, cap)  # (P, B, cap)
-            merged, stats = hd.run(handler, {"idx": cidx, "val": cval},
-                                   headers, design="single")
-        collisions = collisions + stats["collisions"]
-        cap *= lvl.fanin
-        idx, val32 = merged["idx"], merged["val"]
-        r_sw = lax.axis_index(lvl.axis)
-        idx = jnp.where(r_sw == lvl.switch_rank, idx,
-                        jnp.full_like(idx, sparse.SENTINEL))
-        val32 = jnp.where(r_sw == lvl.switch_rank, val32,
-                          jnp.zeros_like(val32))
+                r = lax.axis_index(lvl.axis)
+                stream = pk.packetize(packed, fmt, child_rank=r)
+                stacked = _gather_children(stream, lvl.axis)
+                payload, headers = stacked.payload, stacked.headers
+                if faults[i] is not None:
+                    payload, headers = _reliable_ingress(payload, headers,
+                                                         faults[i], fstats)
+                payload, headers = _apply_arrival(payload, headers, arrival)
+                # a coordinate list spans several packets, so the reassembly
+                # of each child's wire image must group packets by the CHILD
+                # header, not by arrival position — under a per-slot arrival
+                # interleave the stack rows mix children, and pairing child
+                # A's indices with child B's values would silently corrupt
+                # the sum
+                order = hd.child_order(headers)
+                payload = hd.apply_order(payload, order)
+                headers = hd.apply_order(headers, order)
+                # reassemble each child's wire image from its packets, merge
+                child_packed = jax.vmap(
+                    lambda pl, hdrs: pk.depacketize(pk.PacketStream(hdrs, pl),
+                                                    fmt, b, 2 * cap)
+                )(payload, headers)
+                cidx, cval = _unpack_lists(child_packed, cap)  # (P, B, cap)
+                merged, stats = hd.run(handler, {"idx": cidx, "val": cval},
+                                       headers, design="single")
+            collisions = collisions + stats["collisions"]
+            cap *= lvl.fanin
+            idx, val32 = merged["idx"], merged["val"]
+            r_sw = lax.axis_index(lvl.axis)
+            idx = jnp.where(r_sw == lvl.switch_rank, idx,
+                            jnp.full_like(idx, sparse.SENTINEL))
+            val32 = jnp.where(r_sw == lvl.switch_rank, val32,
+                              jnp.zeros_like(val32))
 
     if dense_acc is None:
         # root array storage (§7)
@@ -824,11 +879,12 @@ def switch_allreduce_sparse(arena: jax.Array, axes: Sequence[str],
         dense_acc = _mask_to_switch(dense_acc, levels[-1].axis,
                                     levels[-1].switch_rank)
 
-    if batched:
-        dense_acc = _multicast_root(dense_acc, levels)
-    else:
-        for lvl in reversed(levels):
-            dense_acc = _multicast_arena(dense_acc, lvl, fmt)
+    with obs("plane.multicast", mode="sparse"):
+        if batched:
+            dense_acc = _multicast_root(dense_acc, levels)
+        else:
+            for lvl in reversed(levels):
+                dense_acc = _multicast_arena(dense_acc, lvl, fmt)
     if mean:
         dense_acc = dense_acc / compat.world_size(axes)
     red = dense_acc.astype(arena.dtype)

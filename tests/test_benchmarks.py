@@ -61,6 +61,16 @@ def test_run_quick_smoke():
     assert "quick.canary.contention_x" in names, names
     cx = [l for l in rows if l.startswith("quick.canary.contention_x,")]
     assert float(cx[0].split(",")[1]) >= 1.0, cx
+    # PR 9: the flight recorder's overhead contract (DESIGN.md §16) —
+    # telemetry never touches the traced program, so the instrumented
+    # dense in-network step costs the same as the bare one — plus the
+    # trace-export round trip (valid JSON, >= 1 track per tenant)
+    for mode in ("bare", "telemetry"):
+        assert f"quick.obs.{mode}.us_per_call" in names, names
+    ox = [l for l in rows if l.startswith("quick.obs.overhead_x,")]
+    assert float(ox[0].split(",")[1]) <= 1.05, ox
+    tr = [l for l in rows if l.startswith("quick.obs.trace.tracks,")]
+    assert float(tr[0].split(",")[1]) >= 2, tr
     # wall-clock values are positive microseconds
     for l in rows:
         assert float(l.split(",")[1]) > 0, l
@@ -113,3 +123,46 @@ def test_quick_expected_rows_cover_all_transports():
     assert "quick.canary.contention_x" in names
     for m in ("static", "dynamic"):
         assert f"quick.canary.{m}.pred_pkts_per_cy" in names
+    assert "quick.obs.overhead_x" in names
+    assert "quick.obs.trace.tracks" in names
+    for m in ("bare", "telemetry"):
+        assert f"quick.obs.{m}.us_per_call" in names
+
+
+def test_bench_json_carries_provenance_meta():
+    """The tracked perf trajectory is stamped with its generation
+    context: git sha, mesh shapes, jax version, UTC timestamp — both in
+    the checked-in record and in anything ``write_bench_json`` emits."""
+    import json
+    if _ROOT not in sys.path:
+        sys.path.insert(0, _ROOT)
+    from benchmarks import collectives_bench
+    with open(os.path.join(_ROOT, "BENCH_collectives.json")) as f:
+        record = json.load(f)
+    for rec in (record, {"meta": collectives_bench.bench_meta()}):
+        meta = rec["meta"]
+        for key in ("git_sha", "mesh_shapes", "jax_version",
+                    "timestamp_utc"):
+            assert meta.get(key), (key, meta)
+        assert meta["timestamp_utc"].endswith("Z"), meta
+        assert "T" in meta["timestamp_utc"], meta
+    # rows stay {name: {value, derived}} next to the meta key
+    rows = {k: v for k, v in record.items() if k != "meta"}
+    assert rows, record
+    for name, cell in rows.items():
+        assert set(cell) == {"value", "derived"}, (name, cell)
+
+
+def test_write_bench_json_stamps_meta(tmp_path):
+    import json
+    if _ROOT not in sys.path:
+        sys.path.insert(0, _ROOT)
+    from benchmarks import collectives_bench
+    path = str(tmp_path / "bench.json")
+    collectives_bench.write_bench_json(
+        [("quick.fake.us_per_call", 1.0, "ctx")], path=path)
+    with open(path) as f:
+        record = json.load(f)
+    assert record["quick.fake.us_per_call"] == {"value": 1.0,
+                                                "derived": "ctx"}
+    assert record["meta"]["jax_version"], record["meta"]

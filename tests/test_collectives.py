@@ -68,6 +68,17 @@ def test_multidevice_canary(mesh_shape):
     assert "OK" in out
 
 
+def test_multidevice_obs(mesh_shape):
+    """The flight recorder (PR 9, DESIGN.md §16): two tenants under one
+    counting-clock telemetry handle export byte-identical trace/metrics
+    JSON across independent runs, attaching telemetry never changes the
+    reduction bits, and every exported counter is integer-equal to its
+    static source (``tree_counters`` / ``FaultSchedule``) — under both
+    mesh shapes."""
+    out = _run_group("obs", mesh_shape=mesh_shape)
+    assert "OK" in out
+
+
 @pytest.mark.chaos
 def test_multidevice_chaos(mesh_shape):
     """The lossy-fabric reliability layer (PR 6, DESIGN.md §14): dense /

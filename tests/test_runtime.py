@@ -398,12 +398,12 @@ def test_tree_counters_matches_plan_counters_on_mesh_trees():
 
 def test_report_names_every_session():
     mgr = _mgr()
-    assert "idle" in mgr.report()
+    assert "idle" in str(mgr.report())
     mgr.open("a", mode="dense", num_buckets=1, bucket_elems=256,
              dtype=jnp.float32)
     mgr.open("b", mode="sparse", num_buckets=1, bucket_elems=512,
              dtype=jnp.float32, k=8)
-    rep = mgr.report()
+    rep = str(mgr.report())
     assert "a:" in rep and "b:" in rep and "predicted" in rep
 
 
