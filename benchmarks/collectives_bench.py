@@ -508,8 +508,15 @@ print(f"quick.canary.contention_x,{c_dynamic/c_static:.2f},"
 # instrumented dense in-network step must cost the same as the bare one
 # (run_quick() gates the ratio at <= 1.05x).  Interleaved measurement
 # rounds, like the runtime section: noise hits both variants alike.
-from repro.obs import Telemetry, counting_clock, timeline
+from repro.obs import HealthMonitor, Telemetry, counting_clock, timeline
 obs_tm = Telemetry.create()
+# the §17 health plane rides the gate: the telemetry variant runs
+# WITH a HealthMonitor attached and polling each round, so any traced
+# op the monitor smuggled into the step would blow the ratio.  The
+# poll itself is host-side registry reads, priced separately below
+# (quick.health.poll.us_per_call) — it stays outside the timed window
+# so the gate keeps measuring the step, not the detector sweep
+obs_hm = HealthMonitor(obs_tm)
 with compat.set_mesh(mesh8):
     ad = jax.device_put(arena, NamedSharding(mesh8, P()))
     fns = {}
@@ -524,16 +531,26 @@ with compat.set_mesh(mesh8):
             check_vma=False))
         jax.block_until_ready(fns[label](ad))   # compile + warm both
     ts = {label: float("inf") for label in fns}
-    for _round in range(5):
+    # more rounds than the other sections: the gate is a tight ratio
+    # (1.05x), so the min needs room to converge on a noisy shared CPU
+    for _round in range(12):
         for label, fn in fns.items():
             t0 = time.perf_counter()
             jax.block_until_ready(fn(ad))
             ts[label] = min(ts[label], time.perf_counter() - t0)
+            if label == "telemetry":
+                obs_hm.poll()
     for label in ("bare", "telemetry"):
         print(f"quick.obs.{label}.us_per_call,{ts[label]*1e6:.0f},"
               f"8dev_cpu_B{B}xS{S}_dense_innetwork")
     print(f"quick.obs.overhead_x,{ts['telemetry']/ts['bare']:.2f},"
           f"telemetry/bare_dense_innetwork")
+    t0 = time.perf_counter()
+    for _ in range(100):
+        obs_hm.poll()
+    print(f"quick.health.poll.us_per_call,"
+          f"{(time.perf_counter()-t0)/100*1e6:.1f},"
+          f"4detectors_hostside_registry")
 
 # trace-export round trip: a 2-tenant manager run under a counting
 # clock, modeled timeline laid in, exported to Chrome JSON and loaded
@@ -626,7 +643,8 @@ QUICK_EXPECTED_ROWS = frozenset(
     + [f"quick.canary.{m}.pred_pkts_per_cy" for m in ("static", "dynamic")]
     + ["quick.canary.contention_x"]
     + [f"quick.obs.{m}.us_per_call" for m in ("bare", "telemetry")]
-    + ["quick.obs.overhead_x", "quick.obs.trace.tracks"])
+    + ["quick.obs.overhead_x", "quick.obs.trace.tracks",
+       "quick.health.poll.us_per_call"])
 
 
 def run_quick():
@@ -679,6 +697,49 @@ def run_quick():
             raise RuntimeError(
                 f"trace export round-trip lost tenant tracks ({val:.0f})")
     return rows
+
+
+def check_regressions(fresh_rows, path: str | None = None, *,
+                      limit: float = 0.20) -> list[str]:
+    """Perf-regression sentinel: fresh ratio rows vs the committed JSON.
+
+    Compares every derived ratio row (``*_x``: ``overhead_x``,
+    ``contention_x``, ``speedup_x``, ``batched_x``, ...) of
+    ``fresh_rows`` against the tracked ``BENCH_collectives.json``
+    baseline and returns one failure string per row degraded by more
+    than ``limit`` (default 20%).  Direction-aware: ``overhead_x`` rows
+    are lower-is-better, every other ratio is higher-is-better.
+    Absolute ``us_per_call`` rows are *not* gated — wall-clock noise
+    across machines would make the sentinel cry wolf; the ratios are
+    machine-relative by construction.  The baseline's provenance
+    ``meta`` (PR 9) is quoted in each failure so a trip is auditable
+    against the commit that set the bar.
+    """
+    with open(BENCH_JSON if path is None else path) as f:
+        baseline = json.load(f)
+    meta = baseline.get("meta", {})
+    provenance = (f"baseline {meta.get('git_sha', 'unknown')[:12]} "
+                  f"@ {meta.get('timestamp_utc', 'unknown')}")
+    failures = []
+    for name, val, _der in fresh_rows:
+        if not name.split(".")[-1].endswith("_x"):
+            continue
+        rec = baseline.get(name)
+        if rec is None:                 # new row: nothing to regress from
+            continue
+        base = float(rec["value"] if isinstance(rec, dict) else rec)
+        if base <= 0.0:
+            continue
+        if name.endswith("overhead_x"):
+            degraded = val > base * (1.0 + limit)
+            arrow = f"{base:.2f} -> {val:.2f} (lower is better)"
+        else:
+            degraded = val < base * (1.0 - limit)
+            arrow = f"{base:.2f} -> {val:.2f} (higher is better)"
+        if degraded:
+            failures.append(f"{name}: {arrow}, past the {limit:.0%} "
+                            f"limit [{provenance}]")
+    return failures
 
 
 def bench_meta() -> dict:

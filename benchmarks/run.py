@@ -13,6 +13,12 @@ dry-run artifacts if present.
 transports, per-bucket scan vs batched, 8 fake CPU devices, seconds not
 minutes) and never writes the JSON — the tier-1 smoke test invokes this
 so the harness can't silently rot.
+
+``--check-regressions`` is the perf-regression sentinel: a fresh
+wall-clock run compared against the committed ``BENCH_collectives.json``
+(provenance via its ``meta`` key); any ``*_x`` ratio row degraded by
+more than 20% exits nonzero.  The baseline is never rewritten by this
+mode.
 """
 import sys
 import time
@@ -37,6 +43,23 @@ def main(argv=None) -> None:
             raise SystemExit(1)
         for name, val, derived in rows:
             print(f"{name},{val},{derived}")
+        return
+    if "--check-regressions" in argv:
+        # perf-regression sentinel: fresh wall-clock run vs the tracked
+        # BENCH_collectives.json — any *_x ratio row degraded by >20%
+        # exits nonzero (the baseline is NOT rewritten; refresh it with
+        # --json once a regression is understood and accepted)
+        print("name,value,derived")
+        rows = collectives_bench.run(write_json=False)
+        for name, val, derived in rows:
+            print(f"{name},{val},{derived}")
+        failures = collectives_bench.check_regressions(rows)
+        if failures:
+            for f in failures:
+                print(f"REGRESSION: {f}", file=sys.stderr)
+            raise SystemExit(1)
+        print("no regressions past 20% against "
+              f"{collectives_bench.BENCH_JSON}", file=sys.stderr)
         return
     if "--json" in argv:
         print("name,value,derived")

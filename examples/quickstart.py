@@ -71,3 +71,15 @@ print(f"  switch.demo.l1.ingress_packets = {pkts:.0f} "
       f"(static plan counters; full runs: "
       f"launch/train.py --trace-out/--metrics-out "
       f"+ python -m repro.obs.report)")
+
+print("\nhealth plane (DESIGN.md §17): detectors over the recorder")
+from repro.obs import HealthMonitor, counting_clock
+
+tm.registry.gauge("congestion.l1s0.hotness").set(0.8)   # a hot leaf slot
+hm = HealthMonitor(tm, clock=counting_clock())
+for inc in hm.poll():
+    print(f"  [{inc.severity}] {inc.detector}: {inc.summary} "
+          f"(action: {inc.action})")
+print(f"  (full runs: launch/train.py --tenants 2 --health-policy auto "
+      f"--incidents-out inc.json + python -m repro.obs.report "
+      f"--incidents inc.json --fail-on critical)")

@@ -126,16 +126,27 @@ class Coordinator:
 
     def __init__(self, hosts: int, *, timeout_s: float = 10.0,
                  clock=time.monotonic,
-                 network: topology.NetworkManager | None = None):
+                 network: topology.NetworkManager | None = None,
+                 registry=None):
         self.hosts = hosts
         self.timeout = timeout_s
         self.clock = clock
         self.network = network
+        #: optional ``repro.obs.MetricsRegistry`` — liveness events
+        #: publish under ``ft.host<h>.{heartbeats,missed,stragglers,
+        #: recoveries}`` (DESIGN.md §17), making ft state visible to
+        #: the flight-recorder exports and the health plane's
+        #: ``StragglerDetector``.  ``None`` = uninstrumented.
+        self.registry = registry
         t = clock()
         self.last_seen = {h: t for h in range(hosts)}
         self.failed: set[int] = set()
         self.failed_switches: set[int] = set()
         self.failed_sessions: set[str] = set()
+
+    def _count(self, host: int, event: str) -> None:
+        if self.registry is not None:
+            self.registry.counter(f"ft.host{int(host)}.{event}").inc()
 
     def switch_failure(self, lease: topology.AllreduceLease,
                        switch_id: int, *, runtime=None):
@@ -154,9 +165,12 @@ class Coordinator:
         if host in self.failed:
             return                      # rejoin requires explicit admit
         self.last_seen[host] = self.clock() if now is None else now
+        self._count(host, "heartbeats")
 
     def admit(self, host: int, *, now=None) -> None:
         """Re-admit a recovered host (next re-mesh will include it)."""
+        if host in self.failed:
+            self._count(host, "recoveries")
         self.failed.discard(host)
         self.last_seen[host] = self.clock() if now is None else now
 
@@ -166,6 +180,7 @@ class Coordinator:
         for h, seen in self.last_seen.items():
             if h not in self.failed and t - seen > self.timeout:
                 self.failed.add(h)
+                self._count(h, "missed")
         return set(self.failed)
 
     def straggler_report(self, step_starts: dict[int, float], *,
@@ -175,8 +190,11 @@ class Coordinator:
         :func:`straggler_report` (``now`` injectable like the heartbeat
         path, so slow-host detection tests run without sleeps)."""
         t = self.clock() if now is None else now
-        return straggler_report({h: t - s for h, s in step_starts.items()},
+        slow = straggler_report({h: t - s for h, s in step_starts.items()},
                                 factor=factor)
+        for h in slow:
+            self._count(h, "stragglers")
+        return slow
 
     def session_failure(self, runtime, tenant: str, *,
                         reason: str = "retry budget exhausted") -> bool:

@@ -71,6 +71,22 @@ def _parse():
     ap.add_argument("--metrics-out", type=str, default=None, metavar="PATH",
                     help="export the metrics registry (typed counters/"
                          "gauges, DESIGN.md §16 name schema) as JSON")
+    ap.add_argument("--health-policy", type=str, default="off",
+                    choices=("off", "observe", "auto"),
+                    help="run the fabric health plane after training "
+                         "(DESIGN.md §17): stream the Straggler/"
+                         "FaultStorm/CongestionDrift/ModelDivergence "
+                         "detectors over the flight recorder and print "
+                         "the incident log.  'observe' detects only; "
+                         "'auto' additionally binds incidents to the "
+                         "SLO policy's remediation paths (replan / "
+                         "session recovery; needs --tenants > 1)")
+    ap.add_argument("--incidents-out", type=str, default=None,
+                    metavar="PATH",
+                    help="export the health plane's incident log as "
+                         "JSON (needs --health-policy; gate in CI with "
+                         "`python -m repro.obs.report --incidents PATH "
+                         "--fail-on critical`)")
     return ap.parse_args()
 
 
@@ -92,7 +108,8 @@ def _telemetry(args):
     flight recorder threaded through ``FlareConfig`` and the
     ``SessionManager`` (DESIGN.md §16); ``None`` when no artifact is
     requested — the uninstrumented run is unchanged."""
-    if not (args.trace_out or args.metrics_out):
+    if not (args.trace_out or args.metrics_out
+            or args.health_policy != "off"):
         return None
     from repro.obs import Telemetry
     return Telemetry.create()
@@ -105,6 +122,35 @@ def _step_span(telemetry, step: int):
         return contextlib.nullcontext()
     return telemetry.tracer.span("train.step", track="steps",
                                  args={"step": step})
+
+
+def _health(args, telemetry, manager=None) -> None:
+    """``--health-policy`` → one deterministic watch pass over the run's
+    flight recorder (DESIGN.md §17): poll the detectors, print the
+    incident log and (``auto``) the SLO policy's remediation dispatch,
+    optionally exporting the log for the report CLI's ``--fail-on``
+    gate."""
+    if args.health_policy == "off":
+        return
+    from repro.obs import HealthMonitor, SLOPolicy
+    from repro.obs.health import render_incidents
+    monitor = None
+    if manager is not None:
+        from repro.runtime import CongestionMonitor
+        monitor = CongestionMonitor(manager, registry=telemetry.registry)
+    hm = HealthMonitor(telemetry, manager=manager, monitor=monitor)
+    policy = (SLOPolicy(manager, monitor=monitor)
+              if args.health_policy == "auto" else None)
+    incidents, taken = hm.watch(1, policy=policy)
+    print("== health ==", flush=True)
+    print(render_incidents(incidents), flush=True)
+    for rem in taken:
+        print(f"  -> {rem.action}: "
+              f"{'applied' if rem.applied else 'skipped'} "
+              f"({rem.detail})", flush=True)
+    if args.incidents_out:
+        hm.export_incidents(args.incidents_out)
+        print(f"incidents -> {args.incidents_out}", flush=True)
 
 
 def _export(args, telemetry, manager=None) -> None:
@@ -222,6 +268,7 @@ def _run_tenants(args, mesh, mcfg, cfg, model, batch_shapes):
               f"readmitted={list(res.readmitted)} "
               f"evicted={list(res.evicted)} fanins={fanins}", flush=True)
         print(manager.report(), flush=True)
+    _health(args, telemetry, manager)
     _export(args, telemetry, manager)
 
 
@@ -269,6 +316,13 @@ def main():
     if args.congestion_replan > 0 and args.tenants <= 1:
         sys.exit("--congestion-replan re-plans the shared switch's "
                  "sessions; it needs --tenants > 1")
+    if args.health_policy == "auto" and args.tenants <= 1:
+        sys.exit("--health-policy auto binds remediations to the shared "
+                 "switch's SessionManager; it needs --tenants > 1 "
+                 "(use --health-policy observe for a single job)")
+    if args.incidents_out and args.health_policy == "off":
+        sys.exit("--incidents-out exports the health plane's log; it "
+                 "needs --health-policy observe|auto")
 
     if args.tenants > 1:
         # branch before the single-job FlareConfig: the tenants path
@@ -324,6 +378,7 @@ def main():
                 cm.save(step + 1, {"p": params, "o": opt})
         if cm:
             cm.wait()
+    _health(args, telemetry)
     _export(args, telemetry)
 
 

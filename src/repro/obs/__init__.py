@@ -1,4 +1,5 @@
-"""Observability for the switch fabric: metrics, tracing, timelines.
+"""Observability for the switch fabric: metrics, tracing, timelines,
+and the health plane.
 
 The flight-recorder layer of DESIGN.md §16.  One
 :class:`~repro.obs.telemetry.Telemetry` handle (a typed
@@ -8,14 +9,25 @@ The flight-recorder layer of DESIGN.md §16.  One
 modeled timeline renderer (``repro.obs.timeline``) lays scheduler/
 perfmodel predictions alongside the measured spans in one Chrome-trace
 export, and ``python -m repro.obs.report`` summarizes the artifacts.
+
+DESIGN.md §17 closes the loop on top: a :class:`HealthMonitor`
+(``repro.obs.health``) streams typed detectors over the recorder's
+exports and static counters, emitting structured :class:`Incident`
+records, and an :class:`SLOPolicy` (``repro.obs.slo``) binds them to
+the runtime's existing remediation paths.
 """
+from repro.obs.health import (HealthMonitor, Incident,        # noqa: F401
+                              SEVERITIES, severity_rank)
 from repro.obs.metrics import (Counter, Gauge, Histogram,     # noqa: F401
                                MetricsRegistry)
 from repro.obs.report import (ManagerReport, TenantReport,    # noqa: F401
                               render_manager_report)
+from repro.obs.slo import (Remediation, SLOPolicy, SLORule)   # noqa: F401
 from repro.obs.telemetry import Telemetry, slot_name          # noqa: F401
 from repro.obs.tracer import Tracer, counting_clock           # noqa: F401
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
            "ManagerReport", "TenantReport", "render_manager_report",
-           "Telemetry", "Tracer", "counting_clock", "slot_name"]
+           "Telemetry", "Tracer", "counting_clock", "slot_name",
+           "HealthMonitor", "Incident", "SEVERITIES", "severity_rank",
+           "Remediation", "SLOPolicy", "SLORule"]

@@ -29,8 +29,8 @@ a counter and later as a gauge is an error, never a silent coercion:
   zero ops are ever added to a traced computation.
 * :class:`Gauge` — last-write-wins float (``set``), for levels that are
   re-derived per schedule (occupancy, shares, hotness).
-* :class:`Histogram` — streaming count/sum/min/max (``record``), for
-  host-side durations.
+* :class:`Histogram` — streaming count/sum/min/max plus retained-sample
+  percentiles (``record``), for host-side durations.
 
 Export (``as_dict``/``to_json``) is deterministic: sorted names, typed
 records — byte-identical across runs of the same workload (the
@@ -39,6 +39,7 @@ multidevice ``obs`` determinism anchor).
 from __future__ import annotations
 
 import json
+import math
 
 
 def _concrete(value) -> float:
@@ -99,9 +100,20 @@ class Gauge:
 
 
 class Histogram:
-    """Streaming summary of host-side observations (durations, sizes)."""
+    """Streaming summary of host-side observations (durations, sizes).
+
+    Alongside the running count/sum/min/max, the first
+    ``SAMPLE_CAP`` observations are retained verbatim so the export
+    carries percentiles (p50/p95/p99, nearest-rank) — the keep-first
+    bound is deterministic (unlike reservoir sampling), which preserves
+    the byte-identical-export anchor; past the cap the percentiles
+    describe the earliest window while count/sum/min/max stay exact.
+    """
 
     kind = "histogram"
+
+    #: retained-sample bound; keep-first, so exports stay deterministic.
+    SAMPLE_CAP = 4096
 
     def __init__(self, name: str):
         self.name = name
@@ -109,6 +121,7 @@ class Histogram:
         self.sum = 0.0
         self.min = None
         self.max = None
+        self.samples: list[float] = []
 
     def record(self, v) -> None:
         v = _concrete(v)
@@ -116,14 +129,30 @@ class Histogram:
         self.sum += v
         self.min = v if self.min is None else min(self.min, v)
         self.max = v if self.max is None else max(self.max, v)
+        if len(self.samples) < self.SAMPLE_CAP:
+            self.samples.append(v)
 
     @property
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
 
+    def percentile(self, p: float) -> float | None:
+        """Nearest-rank percentile over the retained samples (``None``
+        when nothing was recorded)."""
+        if not self.samples:
+            return None
+        if not 0.0 <= p <= 100.0:
+            raise ValueError(f"percentile must be in [0, 100], got {p}")
+        ordered = sorted(self.samples)
+        rank = max(1, math.ceil(p / 100.0 * len(ordered)))
+        return ordered[rank - 1]
+
     def snapshot(self) -> dict:
         return {"type": self.kind, "count": self.count, "sum": self.sum,
-                "min": self.min, "max": self.max}
+                "min": self.min, "max": self.max,
+                "p50": self.percentile(50.0),
+                "p95": self.percentile(95.0),
+                "p99": self.percentile(99.0)}
 
 
 class MetricsRegistry:

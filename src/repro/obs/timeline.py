@@ -126,7 +126,5 @@ def manager_tracks(tracer, manager, *, at_us: float = 0.0) -> int:
     for s in manager.active():
         if s.fault_plan is None:
             continue
-        counts = [(lvl.fanin, lvl.ingress_packets // max(1, lvl.fanin))
-                  for lvl in s.counters.levels]
-        n += lossy_tracks(tracer, s.tenant, s.fault_plan, counts)
+        n += lossy_tracks(tracer, s.tenant, s.fault_plan, s.level_counts)
     return n

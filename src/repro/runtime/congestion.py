@@ -75,6 +75,10 @@ class CongestionMonitor:
         self.registry = registry
         self._injected: dict[Slot, float] = {}
         self._flows: list[ns.BackgroundFlow] = []
+        #: peak hotness of each successive ``observe()`` — the trend
+        #: surface the health plane's drift detector reads (DESIGN.md
+        #: §17); append-only, host-side.
+        self.history: list[float] = []
 
     # -- injection ---------------------------------------------------------
     def inject(self, slot: Slot, hotness: float) -> None:
@@ -133,6 +137,7 @@ class CongestionMonitor:
                 hot[(lvl, i)] = (util + frac[link]
                                  + self._injected.get((lvl, i), 0.0))
         cmap = CongestionMap(hot)
+        self.history.append(cmap.peak())
         telemetry = getattr(self.manager, "telemetry", None)
         if telemetry is not None:
             telemetry.record_congestion(cmap)

@@ -116,6 +116,16 @@ class Session:
     retransmit_packets: int = 0
 
     @property
+    def level_counts(self) -> tuple[tuple[int, int], ...]:
+        """Per-tree-level ``(fanin, packets per child)`` shapes — the
+        operating points ``switch_model.model_lossy`` prices and the
+        timeline's lossy lane renders (one source, so the health
+        plane's expectation and the modeled track can never disagree
+        about the session's geometry)."""
+        return tuple((lvl.fanin, lvl.ingress_packets // max(1, lvl.fanin))
+                     for lvl in self.counters.levels)
+
+    @property
     def spec(self) -> tuple:
         """The attach-matching key: everything the wire image and the
         admission decision depend on — ``k`` sizes the sparse lists,

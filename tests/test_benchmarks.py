@@ -166,3 +166,89 @@ def test_write_bench_json_stamps_meta(tmp_path):
     assert record["quick.fake.us_per_call"] == {"value": 1.0,
                                                 "derived": "ctx"}
     assert record["meta"]["jax_version"], record["meta"]
+
+
+def _baseline(tmp_path, rows):
+    import json
+    path = str(tmp_path / "baseline.json")
+    record = {name: {"value": val, "derived": "d"} for name, val in rows}
+    record["meta"] = {"git_sha": "abc123def4567890", "mesh_shapes": ["8"],
+                      "jax_version": "0", "timestamp_utc":
+                      "2026-01-01T00:00:00Z"}
+    with open(path, "w") as f:
+        json.dump(record, f)
+    return path
+
+
+def test_check_regressions_direction_aware(tmp_path):
+    """The sentinel gates only the ``*_x`` ratio rows, with the right
+    polarity: overhead ratios are lower-is-better, every other ratio is
+    higher-is-better.  Absolute wall-clock rows are never gated."""
+    if _ROOT not in sys.path:
+        sys.path.insert(0, _ROOT)
+    from benchmarks import collectives_bench
+    base = _baseline(tmp_path, [("quick.obs.overhead_x", 1.0),
+                                ("quick.canary.contention_x", 2.0),
+                                ("quick.dense.us_per_call", 10.0)])
+    fresh = [("quick.obs.overhead_x", 1.5, "d"),       # +50%: regressed
+             ("quick.canary.contention_x", 1.0, "d"),  # -50%: regressed
+             ("quick.dense.us_per_call", 99.0, "d"),   # absolute: ignored
+             ("quick.new.speedup_x", 0.1, "d")]        # no baseline: skip
+    failures = collectives_bench.check_regressions(fresh, base)
+    assert len(failures) == 2, failures
+    assert any("quick.obs.overhead_x" in f and "lower is better" in f
+               for f in failures)
+    assert any("quick.canary.contention_x" in f and "higher is better" in f
+               for f in failures)
+    # the baseline's provenance meta is quoted in every failure
+    assert all("abc123def456" in f and "2026-01-01T00:00:00Z" in f
+               for f in failures)
+
+
+def test_check_regressions_within_limit_passes(tmp_path):
+    if _ROOT not in sys.path:
+        sys.path.insert(0, _ROOT)
+    from benchmarks import collectives_bench
+    base = _baseline(tmp_path, [("quick.obs.overhead_x", 1.0),
+                                ("quick.canary.contention_x", 2.0)])
+    fresh = [("quick.obs.overhead_x", 1.15, "d"),      # +15% < 20%
+             ("quick.canary.contention_x", 1.7, "d")]  # -15% < 20%
+    assert collectives_bench.check_regressions(fresh, base) == []
+    # the limit is a knob: the same drift trips a tighter sentinel
+    assert len(collectives_bench.check_regressions(
+        fresh, base, limit=0.10)) == 2
+
+
+def test_run_main_check_regressions_exit_code(tmp_path, monkeypatch,
+                                              capsys):
+    """benchmarks/run.py --check-regressions: nonzero exit iff a ratio
+    row degraded past the limit (in-process, monkeypatched run)."""
+    import pytest
+    if _ROOT not in sys.path:
+        sys.path.insert(0, _ROOT)
+    from benchmarks import collectives_bench, run
+    base = _baseline(tmp_path, [("quick.obs.overhead_x", 1.0)])
+    monkeypatch.setattr(collectives_bench, "BENCH_JSON", base)
+    monkeypatch.setattr(
+        collectives_bench, "run",
+        lambda write_json=True: [("quick.obs.overhead_x", 2.0, "d")])
+    with pytest.raises(SystemExit) as e:
+        run.main(["--check-regressions"])
+    assert e.value.code == 1
+    captured = capsys.readouterr()
+    assert "REGRESSION: quick.obs.overhead_x" in captured.err
+    assert "quick.obs.overhead_x,2.0,d" in captured.out
+
+    monkeypatch.setattr(
+        collectives_bench, "run",
+        lambda write_json=True: [("quick.obs.overhead_x", 1.05, "d")])
+    run.main(["--check-regressions"])        # within limit: returns
+    assert "no regressions" in capsys.readouterr().err
+
+
+def test_quick_expected_rows_cover_health_poll():
+    if _ROOT not in sys.path:
+        sys.path.insert(0, _ROOT)
+    from benchmarks import collectives_bench
+    assert "quick.health.poll.us_per_call" in \
+        collectives_bench.QUICK_EXPECTED_ROWS

@@ -79,6 +79,18 @@ def test_multidevice_obs(mesh_shape):
     assert "OK" in out
 
 
+@pytest.mark.health
+def test_multidevice_health(mesh_shape):
+    """The fabric health plane (PR 10, DESIGN.md §17): the fault-storm
+    detector fires counter-exact incidents on an injected FaultPlan, the
+    drift detector's SLO-dispatched replan leaves the manager bitwise
+    identical to the manual PR 8 call (tree, sessions, reduction bits),
+    and two independent watched runs under counting clocks export
+    byte-identical incident logs — under both mesh shapes."""
+    out = _run_group("health", mesh_shape=mesh_shape)
+    assert "OK" in out
+
+
 @pytest.mark.chaos
 def test_multidevice_chaos(mesh_shape):
     """The lossy-fabric reliability layer (PR 6, DESIGN.md §14): dense /

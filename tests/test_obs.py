@@ -354,6 +354,184 @@ def test_report_cli_reads_metrics_from_trace(tmp_path, capsys):
 
 
 # ---------------------------------------------------------------------------
+# Histogram percentiles (PR 10 satellite).
+# ---------------------------------------------------------------------------
+
+def test_histogram_percentiles_nearest_rank():
+    reg = MetricsRegistry()
+    h = reg.histogram("h")
+    for v in range(1, 101):
+        h.record(float(v))
+    assert h.percentile(50.0) == 50.0
+    assert h.percentile(95.0) == 95.0
+    assert h.percentile(99.0) == 99.0
+    assert h.percentile(0.0) == 1.0          # nearest-rank floor: rank 1
+    assert h.percentile(100.0) == 100.0
+    snap = h.snapshot()
+    assert (snap["p50"], snap["p95"], snap["p99"]) == (50.0, 95.0, 99.0)
+    with pytest.raises(ValueError, match=r"\[0, 100\]"):
+        h.percentile(101.0)
+
+
+def test_histogram_percentiles_empty_and_order_insensitive():
+    h = MetricsRegistry().histogram("h")
+    assert h.percentile(50.0) is None
+    assert h.snapshot()["p99"] is None
+    for v in (9.0, 1.0, 5.0):                # unsorted ingest
+        h.record(v)
+    assert h.percentile(50.0) == 5.0
+
+
+def test_histogram_sample_cap_keeps_first_window():
+    h = MetricsRegistry().histogram("h")
+    h.SAMPLE_CAP = 4                         # shadow the class bound
+    for v in range(10):
+        h.record(float(v))
+    assert h.samples == [0.0, 1.0, 2.0, 3.0]  # keep-first: deterministic
+    assert (h.count, h.sum, h.max) == (10, 45.0, 9.0)  # stream stays exact
+    assert h.percentile(99.0) == 3.0         # ...over the retained window
+
+
+# ---------------------------------------------------------------------------
+# Timeline edge cases (PR 10 satellite).
+# ---------------------------------------------------------------------------
+
+def test_timeline_idle_manager_renders_nothing():
+    from repro.obs import timeline
+    tm = Telemetry.create(clock=counting_clock())
+    assert timeline.manager_tracks(tm.tracer, _mgr(telemetry=tm)) == 0
+    assert tm.tracer.events == ()
+
+
+def test_timeline_lossy_only_manager():
+    """A manager whose only tenant is lossy still renders all three
+    modeled lanes — fcfs, model, and the retry lane priced from the
+    session's own ``level_counts``."""
+    from repro.obs import timeline
+    from repro.perfmodel import switch_model as sm
+    plan = None
+    counts = dataplane.level_packet_counts([4, 2], 3, 512, jnp.float32)
+    for seed in range(200):
+        cand = FaultPlan(seed=seed, drop=0.05, duplicate=0.2)
+        if dataplane.plan_survives(cand, counts):
+            plan = cand
+            break
+    assert plan is not None
+    tm = Telemetry.create(clock=counting_clock())
+    mgr = _mgr(telemetry=tm)
+    mgr.open("lossy", mode="dense", num_buckets=3, bucket_elems=512,
+             dtype=jnp.float32, fault_plan=plan)
+    n = timeline.manager_tracks(tm.tracer, mgr)
+    tracks = {e["track"] for e in tm.tracer.events}
+    assert {"fcfs/lossy", "model/lossy", "lossy/lossy"} <= tracks, tracks
+    lossy = [e for e in tm.tracer.events if e["track"] == "lossy/lossy"]
+    assert n == 2 + len(lossy)
+    # the lane prices the session's own level shapes via model_lossy
+    sess = mgr.session("lossy")
+    for ev, (p, npkt) in zip(lossy, [c for i, c in
+                                     enumerate(sess.level_counts)
+                                     if plan.applies(i)]):
+        lp = sm.model_lossy(plan.drop, plan.corrupt, p * npkt,
+                            max_retries=plan.retry.max_retries,
+                            timeout_rounds=plan.retry.timeout_rounds,
+                            backoff=plan.retry.backoff)
+        assert ev["args"]["retransmits"] == lp.retransmits
+
+
+def test_timeline_on_ring_truncated_tracer_still_exports(tmp_path):
+    """A flight-recorder tracer (ring=N) keeps only the trailing window;
+    the timeline renderer and the Chrome export must both survive the
+    truncation (valid JSON, consistent lane metadata for the survivors)."""
+    from repro.obs import timeline
+    tm = Telemetry(registry=MetricsRegistry(),
+                   tracer=Tracer(clock=counting_clock(), ring=3))
+    mgr = _mgr(telemetry=tm)
+    _open_two(mgr)                           # admission events overflow...
+    n = timeline.manager_tracks(tm.tracer, mgr)
+    assert n > 3                             # ...and so do modeled spans
+    assert len(tm.tracer.events) == 3        # only the window survives
+    doc = json.loads(tm.tracer.to_json(metrics=tm.registry.as_dict()))
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "thread_name" in names            # lane metadata re-derived
+    kept = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert len(kept) == 3
+    assert all(e["dur"] >= 0.0 for e in kept)
+
+
+# ---------------------------------------------------------------------------
+# Report CLI: histograms, incidents, --fail-on (PR 10 satellites).
+# ---------------------------------------------------------------------------
+
+def test_report_cli_renders_histogram_section(tmp_path, capsys):
+    tm = Telemetry.create(clock=counting_clock())
+    mgr = _mgr(telemetry=tm)
+    _open_two(mgr)
+    for v in (1.0, 2.0, 3.0, 100.0):
+        tm.registry.histogram("step.dur_us").record(v)
+    mpath = str(tmp_path / "m.json")
+    tm.export_metrics(mpath)
+    assert obs_report.main([mpath]) == 0
+    out = capsys.readouterr().out
+    assert "== histograms ==" in out
+    assert "step.dur_us" in out
+    assert "p95" in out and "100.0000" in out
+
+
+def _incident_log(tmp_path, worst="warning"):
+    from repro.obs import HealthMonitor
+    tm = Telemetry.create(clock=counting_clock())
+    tm.registry.counter("tenant.t.retransmits").inc(7)
+    if worst == "critical":
+        tm.registry.gauge("congestion.l1s0.hotness").set(1.5)
+    hm = HealthMonitor(tm, clock=counting_clock())
+    hm.poll()
+    path = str(tmp_path / "incidents.json")
+    hm.export_incidents(path)
+    return path
+
+
+def test_report_cli_renders_incident_log(tmp_path, capsys):
+    path = _incident_log(tmp_path)
+    assert obs_report.main(["--incidents", path]) == 0
+    out = capsys.readouterr().out
+    assert "== incidents ==" in out
+    assert "[warning] fault_storm tenant=t:" in out
+    assert "evidence: tenant.t.retransmits=7" in out
+
+
+def test_report_cli_fail_on_gates_exit_code(tmp_path, capsys):
+    path = _incident_log(tmp_path, worst="critical")
+    # at/above the floor -> exit 1 with the count on stderr
+    assert obs_report.main(["--incidents", path,
+                            "--fail-on", "warning"]) == 1
+    err = capsys.readouterr().err
+    assert "FAIL:" in err and "warning" in err
+    assert obs_report.main(["--incidents", path,
+                            "--fail-on", "critical"]) == 1
+    # floor above everything in the log -> clean exit
+    calm = _incident_log(tmp_path)           # warning only
+    assert obs_report.main(["--incidents", calm,
+                            "--fail-on", "critical"]) == 0
+
+
+def test_report_cli_argument_validation(tmp_path):
+    with pytest.raises(SystemExit):
+        obs_report.main([])                  # nothing to report
+    with pytest.raises(SystemExit):          # --fail-on needs --incidents
+        obs_report.main([str(tmp_path / "m.json"), "--fail-on", "warning"])
+    with pytest.raises(SystemExit):          # unknown severity
+        obs_report.main(["--incidents", "x.json", "--fail-on", "fatal"])
+
+
+def test_report_cli_metrics_and_incidents_together(tmp_path, capsys):
+    mpath, _tpath = _exported(tmp_path)
+    ipath = _incident_log(tmp_path)
+    assert obs_report.main([mpath, "--incidents", ipath]) == 0
+    out = capsys.readouterr().out
+    assert "== per-tenant ==" in out and "== incidents ==" in out
+
+
+# ---------------------------------------------------------------------------
 # Config neutrality.
 # ---------------------------------------------------------------------------
 
